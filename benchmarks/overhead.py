@@ -1,0 +1,163 @@
+"""Paper Table 7 (E1) analogue: always-on overhead on the LIVE loop.
+
+Paired runs inside the same process: logger-off vs CPU-wall vs
+CPU-wall+event-channel, on a real jitted train step (reduced paper-gpt).
+Reports the one-sided 95% bootstrap upper bound on throughput overhead,
+resampling paired window blocks (the paper's resampling unit), plus the
+gather-path fraction rho and the no-fault strong-label count.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.contract import fused_schema
+from repro.distributed.policy import STRONG_LABELS
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import build_train_step, init_train_state
+from repro.models import build_model
+from repro.telemetry.collector import Monitor
+from repro.telemetry.gather import InProcTransport
+
+from .common import emit, paired_bootstrap_upper
+
+STEPS = 100
+WINDOW = 20
+
+
+def _setup():
+    cfg = get_config("paper-gpt-125m").reduced()
+    model = build_model(cfg)
+    mesh = make_local_mesh()
+    from repro.distributed.sharding import BASELINE_PLAN
+
+    with mesh:
+        step, _ = build_train_step(model, mesh, BASELINE_PLAN, donate=False)
+        state = init_train_state(model, jax.random.PRNGKey(0))
+        batch = {
+            "tokens": jnp.zeros((8, 128), jnp.int32),
+            "labels": jnp.zeros((8, 128), jnp.int32),
+        }
+        state, m = step(state, batch)  # compile
+        jax.block_until_ready(m["loss"])
+    return step, state, batch
+
+
+def run_mode(step, state, batch, mode: str) -> tuple[np.ndarray, Monitor | None]:
+    """Returns per-window mean step seconds."""
+    monitor = None
+    if mode != "off":
+        schema = fused_schema(world_size=1)
+        transport = InProcTransport(1)
+        monitor = Monitor(
+            schema, rank=0, transport=transport, window_steps=WINDOW,
+            event_q=0.05 if mode == "event" else 0.0,
+        )
+    times = []
+    s = state
+    for i in range(STEPS):
+        t0 = time.perf_counter()
+        if monitor is None:
+            s, metrics = step(s, batch)
+            jax.block_until_ready(metrics["loss"])
+        else:
+            with monitor.step():
+                with monitor.stage("data.next_wait"):
+                    pass
+                t_d = time.perf_counter()
+                with monitor.stage("step.dispatch_cpu_wall"):
+                    s, metrics = step(s, batch)
+                monitor.observe_output(metrics["loss"], (time.perf_counter() - t_d) * 1e3)
+                with monitor.stage("step.device_wait_cpu_wall"):
+                    jax.block_until_ready(metrics["loss"])
+            monitor.end_of_step()
+        times.append(time.perf_counter() - t0)
+    t = np.array(times)
+    return t.reshape(-1, WINDOW).mean(axis=1), monitor
+
+
+def measure_direct_cost_us(n: int = 2000) -> float:
+    """Direct per-step cost of the full monitoring path (recorder contexts,
+    event poll, window fold) with no-op stage bodies — the structural
+    overhead, independent of OS scheduling noise on the shared core."""
+    schema = fused_schema(world_size=1)
+    monitor = Monitor(
+        schema, rank=0, transport=InProcTransport(1), window_steps=WINDOW,
+        event_q=0.05,
+    )
+    sentinel = jnp.zeros(())
+    t0 = time.perf_counter()
+    for i in range(n):
+        with monitor.step():
+            with monitor.stage("data.next_wait"):
+                pass
+            with monitor.stage("step.dispatch_cpu_wall"):
+                pass
+            monitor.observe_output(sentinel, 0.0)
+            with monitor.stage("step.device_wait_cpu_wall"):
+                pass
+        monitor.end_of_step()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main() -> None:
+    step, state, batch = _setup()
+    run_mode(step, state, batch, "off")  # warmup
+    # tightly interleaved paired windows: base/cpu/event per round, so OS
+    # drift on the 1-core container cancels within each pair (the paper's
+    # paired-run resampling unit)
+    base_w, cpu_w, evt_w = [], [], []
+    mon_cpu = mon_evt = None
+    order = ["off", "cpu", "event"]
+    for r in range(6):
+        got = {}
+        for mode in order[r % 3:] + order[: r % 3]:  # rotate: kill drift bias
+            t, mon = run_mode(step, state, batch, mode)
+            got[mode] = t[1:]  # drop each run's first window: mode-switch
+            #                    transients (Monitor construction, cache warm)
+            if mode == "cpu":
+                mon_cpu = mon
+            elif mode == "event":
+                mon_evt = mon
+        base_w.extend(got["off"])
+        cpu_w.extend(got["cpu"])
+        evt_w.extend(got["event"])
+    base_all, cpu, evt = np.array(base_w), np.array(cpu_w), np.array(evt_w)
+    ub_cpu = paired_bootstrap_upper(base_all, cpu)
+    ub_evt = paired_bootstrap_upper(base_all, evt)
+    step_ms = float(np.mean(base_all)) * 1e3
+    direct_us = measure_direct_cost_us()
+    emit(
+        "overhead/direct_path_cost", 0.0,
+        f"{direct_us:.1f}us/step = {direct_us/1e1/step_ms:.4f}% of the "
+        f"{step_ms:.1f}ms step (structural, noise-free)",
+    )
+    emit("overhead/cpu_wall_95ub_pct", 0.0,
+         f"{ub_cpu*100:.3f}% (paired A/B; 1-core OS noise dominates, see direct_path_cost)")
+    emit("overhead/event_channel_95ub_pct", 0.0,
+         f"{ub_evt*100:.3f}% (paired A/B; 1-core OS noise dominates)")
+    total = STEPS * float(np.mean(cpu)) * WINDOW / WINDOW
+    emit(
+        "overhead/gather_path_rho", 0.0,
+        f"{mon_cpu.overhead_fraction(STEPS*float(np.mean(cpu))) * 100:.4f}%",
+    )
+    # no-fault sanity: no strong labels on healthy windows
+    strong = sum(
+        1 for p in mon_cpu.packets for l in p.labels if l in STRONG_LABELS
+    )
+    emit(
+        "overhead/no_fault_strong_labels", 0.0,
+        f"{strong}/{len(mon_cpu.packets)} windows (want 0)",
+    )
+    emit(
+        "overhead/event_ready_ratio", 0.0,
+        f"{mon_evt.events.ready_ratio:.2f} samples={len(mon_evt.events.samples)}",
+    )
+
+
+if __name__ == "__main__":
+    main()

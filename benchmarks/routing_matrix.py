@@ -1,0 +1,80 @@
+"""Paper Table 4 analogue: hidden-rank routing matrix.
+
+5 fault families x 2 rank counts (8, 32) x 5 seeds = 50 rows; every
+baseline applies its scoring rule to the SAME [N, R, S] window matrix
+(shared windowing / schema / tie handling), so counts isolate the rule.
+Also emits the 64/128-rank spot-check rows (paper §6.2 "Scale").
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import BASELINE_RULES, stage_scores, score_routing
+from repro.sim import simulate
+from repro.sim.scenarios import E3_FAMILIES, hidden_rank_scenario
+
+from .common import emit
+
+
+def run_matrix(
+    *, rank_counts=(8, 32), seeds=range(5), delay_ms=120.0, steps=120
+) -> dict[str, dict]:
+    rows: list[tuple[np.ndarray, int]] = []
+    for family in E3_FAMILIES:
+        for ranks in rank_counts:
+            for seed in seeds:
+                sc = hidden_rank_scenario(
+                    family, world_size=ranks, steps=steps, seed=seed,
+                    delay_ms=delay_ms,
+                )
+                res = simulate(sc)
+                rows.append((res.durations, res.seeded_stage_index()))
+    out: dict[str, dict] = {}
+    for method in BASELINE_RULES:
+        agg = {"top1": 0, "top2": 0, "candidate_hit": 0, "sizes": []}
+        for d, seeded in rows:
+            r = score_routing(stage_scores(d, method), seeded)
+            agg["top1"] += r["top1"]
+            agg["top2"] += r["top2"]
+            agg["candidate_hit"] += r["candidate_hit"]
+            agg["sizes"].append(r["candidate_size"])
+        out[method] = {
+            "top1": agg["top1"],
+            "top2": agg["top2"],
+            "candidate_hit": agg["candidate_hit"],
+            "rows": len(rows),
+            "avg_size": float(np.mean(agg["sizes"])),
+            "max_size": int(np.max(agg["sizes"])),
+        }
+    return out
+
+
+def main() -> None:
+    table = run_matrix()
+    n = table["stagefrontier"]["rows"]
+    for method, r in table.items():
+        emit(
+            f"routing_matrix/{method}",
+            0.0,
+            f"top1={r['top1']}/{n} top2={r['top2']}/{n} "
+            f"cand={r['candidate_hit']}/{n} avg_size={r['avg_size']:.2f} "
+            f"max_size={r['max_size']}",
+        )
+    # scale spot checks: comm + data-tail at 64/128 ranks
+    for ranks, family, delay in ((64, "backward_comm", 120.0), (64, "data", 180.0),
+                                 (128, "backward_comm", 120.0), (128, "data", 180.0)):
+        hits = 0
+        for seed in range(3):
+            sc = hidden_rank_scenario(
+                family, world_size=ranks, steps=120, seed=seed, delay_ms=delay
+            )
+            res = simulate(sc)
+            r = score_routing(
+                stage_scores(res.durations, "stagefrontier"), res.seeded_stage_index()
+            )
+            hits += r["top2"]
+        emit(f"routing_scale/{family}_{ranks}r_{int(delay)}ms", 0.0, f"top2={hits}/3")
+
+
+if __name__ == "__main__":
+    main()

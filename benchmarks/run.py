@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows (see each module's docstring
+for the paper table it reproduces).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("validation", "paper §6.1 algorithmic validation (RQ1)"),
+    ("routing_matrix", "paper Table 4: hidden-rank routing, 50 rows"),
+    ("claim_separation", "paper Table 5: forward device/host separation"),
+    ("detectability", "paper Fig 3b: data-tail transition"),
+    ("tau_sensitivity", "paper Table 15: tau_C sweep"),
+    ("router_vs_trace", "paper Table 6 (E9): artifact cost vs agreement"),
+    ("aba_accum_sharded", "paper E6/E7/E8: A/B/A, grad-accum, FSDP/ZeRO"),
+    ("overhead", "paper Table 7 (E1): live-loop overhead bounds"),
+    ("kernel_frontier", "fused frontier kernel throughput"),
+]
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default="")
+    args = p.parse_args()
+    failures = 0
+    for name, desc in MODULES:
+        if args.only and args.only != name:
+            continue
+        print(f"# --- {name}: {desc}", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+        except Exception:
+            failures += 1
+            print(f"{name},nan,ERROR", flush=True)
+            traceback.print_exc()
+        print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Table 15 analogue: candidate-set sensitivity to tau_C, recomputed
+from the stored stage scores of the same 50 routing-matrix rows."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import candidate_set, stage_scores
+from repro.sim import simulate
+from repro.sim.scenarios import E3_FAMILIES, hidden_rank_scenario
+
+from .common import emit
+
+
+def main() -> None:
+    rows = []
+    for family in E3_FAMILIES:
+        for ranks in (8, 32):
+            for seed in range(5):
+                sc = hidden_rank_scenario(family, world_size=ranks, seed=seed)
+                res = simulate(sc)
+                rows.append(
+                    (stage_scores(res.durations, "stagefrontier"),
+                     res.seeded_stage_index())
+                )
+    for tau in (0.70, 0.75, 0.80, 0.85, 0.90):
+        hit = 0
+        sizes = []
+        for scores, seeded in rows:
+            rs = candidate_set(scores, tau)
+            hit += rs.hit(seeded)
+            sizes.append(rs.size)
+        emit(
+            f"tau_sensitivity/tau_{tau:.2f}", 0.0,
+            f"cand_hit={hit}/{len(rows)} avg_size={np.mean(sizes):.2f} "
+            f"max_size={int(np.max(sizes))}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""StageFrontier-JAX: synchronization-aware stage accounting as a first-class
+feature of a multi-pod JAX training/serving framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from .roofline import CellCosts, RooflineReport, collective_bytes, model_flops, roofline
+__all__ = ["CellCosts", "RooflineReport", "collective_bytes", "model_flops", "roofline"]

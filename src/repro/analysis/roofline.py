@@ -1,0 +1,252 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), TPU v5e-class constants:
+
+    compute    = HLO_FLOPs_per_device / peak_bf16_flops
+    memory     = HLO_bytes_per_device / hbm_bandwidth
+    collective = collective_bytes_per_device / ici_link_bandwidth
+
+Sources: `compiled.cost_analysis()` for FLOPs/bytes (the SPMD-partitioned
+module is the per-device program, so these are per-device numbers);
+collective bytes are parsed from the post-SPMD optimized HLO text — we sum
+the RESULT-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction (stated convention; an
+all-reduce moves ~2x its payload ring-wise, captured by `AR_FACTOR`).
+
+Scan correction: XLA cost analysis counts a while-loop body ONCE.  True
+per-step costs are recovered by the unrolled-delta method (DESIGN.md §6):
+lower the identical step with 1 and 2 unrolled layers and extrapolate
+cost(L) = cost(1) + (L-1) * (cost(2) - cost(1)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+#: hardware constants (TPU v5e-class) — see launch.mesh.HARDWARE.
+PEAK_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+#: ring all-reduce moves ~2x the payload per device (reduce-scatter+all-gather).
+AR_FACTOR = 2.0
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# matches e.g. bf16[2,16,512]{2,1,0} or f32[] — dtype then dims
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_COLL_LINE_RE = re.compile(
+    r"=\s*(?P<shape>\([^=]*?\)|[\w\[\],{}]+)\s+"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<async>-start|-done)?(\.\d+)?\("
+)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-collective-kind result bytes summed over the module text.
+
+    Lines look like:  %ar = bf16[16,128]{1,0} all-reduce(%x), ...
+    tuple results:    %t = (bf16[..], bf16[..]) all-reduce(...)
+    async pairs:      all-gather-start / all-gather-done (we count -start
+    and skip -done so async collectives are counted once).
+    The while-loop body appears once in the text; callers handle trip-count
+    multiplication via the unrolled-delta method.
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for m in _COLL_LINE_RE.finditer(hlo_text):
+        if m.group("async") == "-done":
+            continue
+        kind = m.group("kind")
+        b = _shape_bytes(m.group("shape"))
+        if kind == "all-reduce":
+            b *= AR_FACTOR
+        out[kind] += b
+        counts[kind] += 1
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class CellCosts:
+    flops: float = 0.0            # per-device
+    bytes_accessed: float = 0.0   # per-device
+    coll_bytes: float = 0.0       # per-device (weighted, AR_FACTOR applied)
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+
+    @staticmethod
+    def from_compiled(compiled) -> "CellCosts":
+        ca = compiled.cost_analysis() or {}
+        text = compiled.as_text()
+        coll = collective_bytes(text)
+        counts = coll.pop("_counts")
+        return CellCosts(
+            flops=float(ca.get("flops", 0.0)),
+            bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+            coll_bytes=float(sum(coll.values())),
+            coll_by_kind={k: float(v) for k, v in coll.items()},
+            coll_counts=counts,
+        )
+
+    def delta_extrapolate(self, two: "CellCosts", n_layers: int) -> "CellCosts":
+        """self = cost(1 layer), two = cost(2 layers) -> cost(n_layers)."""
+        k = n_layers - 1
+
+        def ext(a, b):
+            return a + k * max(0.0, b - a)
+
+        kinds = set(self.coll_by_kind) | set(two.coll_by_kind)
+        by_kind = {
+            kk: ext(self.coll_by_kind.get(kk, 0.0), two.coll_by_kind.get(kk, 0.0))
+            for kk in kinds
+        }
+        return CellCosts(
+            flops=ext(self.flops, two.flops),
+            bytes_accessed=ext(self.bytes_accessed, two.bytes_accessed),
+            coll_bytes=float(sum(by_kind.values())),
+            coll_by_kind=by_kind,
+            coll_counts={
+                kk: self.coll_counts.get(kk, 0)
+                + k * max(0, two.coll_counts.get(kk, 0) - self.coll_counts.get(kk, 0))
+                for kk in set(self.coll_counts) | set(two.coll_counts)
+            },
+        )
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_global: float
+    hlo_flops_global: float
+    useful_ratio: float            # MODEL_FLOPS / HLO_FLOPs (global)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline(costs: CellCosts, n_chips: int, model_flops_global: float) -> RooflineReport:
+    compute_s = costs.flops / PEAK_BF16
+    memory_s = costs.bytes_accessed / HBM_BW
+    collective_s = costs.coll_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    hlo_global = costs.flops * n_chips
+    return RooflineReport(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops_global=model_flops_global,
+        hlo_flops_global=hlo_global,
+        useful_ratio=(model_flops_global / hlo_global) if hlo_global else 0.0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS (the "useful compute" reference)
+# ---------------------------------------------------------------------------
+
+
+def _matmul_params(cfg) -> tuple[float, float]:
+    """(dense-path matmul params per layer, active expert params per layer)."""
+    per_layer = 0.0
+    active = 0.0
+    d = cfg.d_model
+    if cfg.family != "ssm":
+        per_layer += d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d
+    if cfg.family in ("ssm", "hybrid"):
+        d_in = cfg.ssm_d_inner
+        n = cfg.ssm_state
+        per_layer += d * (2 * d_in + 2 * n + cfg.ssm_n_heads) + d_in * d
+    if cfg.n_experts:
+        expert = 3 * d * cfg.d_ff
+        active += cfg.top_k * expert            # routed tokens' compute
+        per_layer += d * cfg.n_experts          # router
+    elif cfg.d_ff:
+        glu = 3 if cfg.act in ("swiglu", "geglu") else 2
+        per_layer += glu * d * cfg.d_ff
+    return per_layer, active
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs for the cell (global, per step).
+
+    train: 6 * N_active * tokens (fwd+bwd) + causal attention term
+    prefill: 2 * N_active * tokens + attention
+    decode: per token: 2 * N_active + KV-cache attention reads
+    """
+    per_layer, active = _matmul_params(cfg)
+    n_layer_params = (per_layer + active) * cfg.n_layers
+    if cfg.family == "encdec":
+        enc_layer = (
+            cfg.d_model * cfg.q_dim + 2 * cfg.d_model * cfg.kv_dim
+            + cfg.q_dim * cfg.d_model + 2 * cfg.d_model * cfg.d_ff
+        )
+        n_layer_params += enc_layer * cfg.n_enc_layers
+        n_layer_params += (
+            cfg.d_model * cfg.q_dim + 2 * cfg.d_model * cfg.kv_dim
+            + cfg.q_dim * cfg.d_model
+        ) * cfg.n_layers  # cross attention
+    head = cfg.d_model * cfg.padded_vocab
+    b, s = shape.global_batch, shape.seq_len
+
+    if shape.kind in ("train", "prefill"):
+        tokens = b * s
+        factor = 6.0 if shape.kind == "train" else 2.0
+        flops = factor * tokens * (n_layer_params + head)
+        # causal attention: 2 matmuls (scores, pv) over S^2/2 useful pairs
+        if cfg.family != "ssm":
+            att = 2 * 2 * b * cfg.n_heads * cfg.head_dim * (s * s / 2)
+            if cfg.attention == "sliding":
+                att = 2 * 2 * b * cfg.n_heads * cfg.head_dim * s * min(s, cfg.window)
+            flops += factor / 2 * att  # bwd recomputes ~2x fwd attention
+        if cfg.family in ("ssm", "hybrid"):
+            # SSD: intra-chunk quadratic + state updates
+            q = cfg.ssm_chunk
+            h, p, n = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+            ssd = 2 * b * s * (q * h * p + h * p * n * 2) * cfg.n_layers
+            flops += factor / 2 * ssd
+        return float(flops)
+
+    # decode: one new token against a seq_len context
+    per_tok = 2 * (n_layer_params + head)
+    if cfg.family != "ssm":
+        ctx = min(s, cfg.window) if cfg.attention == "sliding" else s
+        per_tok += 4 * cfg.n_heads * cfg.head_dim * ctx * cfg.n_layers
+    if cfg.family in ("ssm", "hybrid"):
+        h, p, n = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+        per_tok += 6 * h * p * n * cfg.n_layers
+    return float(b * per_tok)

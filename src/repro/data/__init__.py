@@ -1,0 +1,2 @@
+from .pipeline import PrefetchPipeline, SyntheticTokens
+__all__ = ["PrefetchPipeline", "SyntheticTokens"]

@@ -1,0 +1,16 @@
+"""Distribution: sharding plans, operational policy, gradient compression."""
+from .sharding import BASELINE_PLAN, DECODE_PLAN, ShardingPlan, tree_shardings
+from .policy import Action, MonitorPolicy
+from .compression import EFState, compress_grads, init_ef
+
+__all__ = [
+    "Action",
+    "BASELINE_PLAN",
+    "DECODE_PLAN",
+    "EFState",
+    "MonitorPolicy",
+    "ShardingPlan",
+    "compress_grads",
+    "init_ef",
+    "tree_shardings",
+]

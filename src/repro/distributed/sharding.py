@@ -1,0 +1,219 @@
+"""Logical-axis sharding rules (MaxText-style) -> NamedSharding trees.
+
+Every parameter declares logical axes at init time (see models/*_axes);
+a `ShardingPlan` maps logical names to mesh axes.  Conflicts (two logical
+axes of one tensor mapping to the same mesh axis) are resolved
+first-come-first-served along the dims, so e.g. MoE weights
+(expert, embed, mlp) with expert->model and mlp->model shard over experts
+and leave mlp replicated — expert parallelism wins on expert tensors.
+
+Plans are data, not code: the perf hillclimb (EXPERIMENTS.md §Perf) swaps
+plans without touching the models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardingPlan",
+    "BASELINE_PLAN",
+    "DECODE_PLAN",
+    "DP_ALL_PLAN",
+    "DP_FSDP_PLAN",
+    "sharding_for_axes",
+    "tree_shardings",
+    "batch_sharding",
+]
+
+MeshAxes = tuple[str, ...] | str | None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """logical axis name -> mesh axis (or axes tuple, or None=replicate)."""
+
+    name: str
+    rules: Mapping[str, MeshAxes]
+    #: mesh axes carrying the batch dimension of activations.
+    batch_axes: tuple[str, ...] = ("pod", "data")
+    #: mesh axes carrying the sequence dim of activations ("" = unsharded).
+    seq_axes: tuple[str, ...] = ()
+    #: mesh axes for the KV-cache sequence dim in decode.
+    cache_seq_axes: tuple[str, ...] = ("model",)
+
+    def lookup(self, logical: str | None) -> MeshAxes:
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+
+#: Baseline plan: textbook Megatron TP over `model` (column-parallel wi /
+#: wq-k-v, row-parallel wo/wd with one activation all-reduce each),
+#: vocab-parallel embedding, DP over data (and pods), experts
+#: expert-parallel over `model` with their hidden dim 2D-sharded over
+#: `data` (fits 100B-scale MoE + optimizer state per device).  Weights are
+#: deliberately NOT sharded on contraction dims over `data`: that induces
+#: partial-sum activation all-reduces (measured 1.5 TB/device on
+#: granite/train_4k — see EXPERIMENTS.md §Perf iteration 0).
+BASELINE_PLAN = ShardingPlan(
+    name="tp16-dp16",
+    rules={
+        "vocab": "model",
+        "embed": None,
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "expert": "model",
+        "expert_mlp": "data",
+        "layer": None,
+    },
+)
+
+#: Decode-oriented plan: weights replicated over `data` (decode is
+#: latency-bound; FSDP all-gathers per token would dominate), TP over model,
+#: KV-cache sequence sharded over `model` (sequence-parallel attention).
+DECODE_PLAN = ShardingPlan(
+    name="decode-tp16",
+    rules={
+        "vocab": "model",
+        "embed": None,
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "expert": "model",
+        "expert_mlp": "data",
+        "layer": None,
+    },
+)
+
+
+#: Pure data parallelism over the whole mesh: every weight replicated,
+#: batch sharded over all axes.  The §Perf hillclimb winner for small-model
+#: training cells (TP at d_model ~2k is collective-bound at 256 chips).
+DP_ALL_PLAN = ShardingPlan(
+    name="dp256",
+    rules={"layer": None},
+    batch_axes=("pod", "data", "model"),
+)
+
+
+#: Weight-gather FSDP: batch over ALL mesh axes (DP256), weights STORED
+#: sharded over `model`; GSPMD all-gathers the (small) weights at use and
+#: reduce-scatters their grads — params/grads/optimizer state shrink 16x
+#: vs dp256 while collectives stay weight-sized (§Perf iteration A6).
+DP_FSDP_PLAN = ShardingPlan(
+    name="dp-fsdp16",
+    rules=dict(BASELINE_PLAN.rules),
+    batch_axes=("pod", "data", "model"),
+)
+
+
+def _axes_filter(mesh: Mesh, axes: MeshAxes, used: set[str]) -> MeshAxes:
+    """Drop mesh axes not present in the mesh or already used by this tensor."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    picked = tuple(a for a in axes if a in mesh.axis_names and a not in used)
+    used.update(picked)
+    if not picked:
+        return None
+    return picked if len(picked) > 1 else picked[0]
+
+
+def spec_for_axes(
+    mesh: Mesh, logical_axes: Sequence[str | None], plan: ShardingPlan
+) -> P:
+    used: set[str] = set()
+    dims = []
+    for logical in logical_axes:
+        dims.append(_axes_filter(mesh, plan.lookup(logical), used))
+    return P(*dims)
+
+
+def sharding_for_axes(
+    mesh: Mesh, logical_axes: Sequence[str | None], plan: ShardingPlan
+) -> NamedSharding:
+    return NamedSharding(mesh, spec_for_axes(mesh, logical_axes, plan))
+
+
+def tree_shardings(
+    mesh: Mesh, axes_tree: Any, plan: ShardingPlan, spec_tree: Any = None
+) -> Any:
+    """Map a pytree of logical-axis tuples to NamedShardings.
+
+    With `spec_tree` (matching ShapeDtypeStructs), shardings are
+    shape-sanitized: any dim whose size is not divisible by its mesh-axes
+    product is replicated instead (jit rejects uneven input shardings, and
+    padded weights cost more in churn than the sharding saves).
+    """
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x
+    )
+    if spec_tree is None:
+        return jax.tree.map(
+            lambda axes: sharding_for_axes(mesh, axes, plan),
+            axes_tree,
+            is_leaf=is_axes,
+        )
+
+    def leaf(axes, spec):
+        sh = sharding_for_axes(mesh, axes, plan)
+        dims = list(sh.spec) + [None] * (len(spec.shape) - len(sh.spec))
+        changed = False
+        for i, (dim, size) in enumerate(zip(dims, spec.shape)):
+            if dim is None:
+                continue
+            axes_i = (dim,) if isinstance(dim, str) else dim
+            prod = 1
+            for a in axes_i:
+                prod *= mesh.shape[a]
+            if size % prod != 0:
+                dims[i] = None
+                changed = True
+        return NamedSharding(mesh, P(*dims)) if changed else sh
+
+    return jax.tree.map(leaf, axes_tree, spec_tree, is_leaf=is_axes)
+
+
+def batch_sharding(
+    mesh: Mesh, ndim: int, plan: ShardingPlan, *, seq_dim: int | None = 1
+) -> NamedSharding:
+    """Batch-dim sharding for an activation/batch tensor of rank `ndim`."""
+    used: set[str] = set()
+    dims: list[MeshAxes] = [_axes_filter(mesh, plan.batch_axes, used)]
+    for d in range(1, ndim):
+        if d == seq_dim and plan.seq_axes:
+            dims.append(_axes_filter(mesh, plan.seq_axes, used))
+        else:
+            dims.append(None)
+    return NamedSharding(mesh, P(*dims))
+
+
+def cache_sharding(
+    mesh: Mesh, spec_shape: tuple[int, ...], plan: ShardingPlan,
+    *, seq_dim: int = 2,
+) -> NamedSharding:
+    """KV-cache sharding: batch over DP axes, cache sequence over
+    `cache_seq_axes` (sequence-parallel decode attention).  seq_dim=2 for
+    the [L,B,S,KV,D] layout, 3 for head-major [L,B,KV,S,D]."""
+    used: set[str] = set()
+    batch = _axes_filter(mesh, plan.batch_axes, used)
+    seq = _axes_filter(mesh, plan.cache_seq_axes, used)
+    dims: list[MeshAxes] = [None, batch] + [None] * (len(spec_shape) - 2)
+    dims[seq_dim] = seq
+    return NamedSharding(mesh, P(*dims))
+
+
+def ssm_cache_sharding(
+    mesh: Mesh, spec_shape: tuple[int, ...], plan: ShardingPlan
+) -> NamedSharding:
+    """SSM state [L, B, H, P, N] / conv [L, B, W, C]: batch over DP axes."""
+    used: set[str] = set()
+    batch = _axes_filter(mesh, plan.batch_axes, used)
+    dims: list[MeshAxes] = [None, batch] + [None] * (len(spec_shape) - 2)
+    return NamedSharding(mesh, P(*dims))

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+frontier/ — fused frontier accounting (Eq. 2 shares + Eq. 4 gains + leader
+evidence in one HBM pass).  Each kernel ships <name>.py (pl.pallas_call +
+BlockSpec), ops.py (jitted wrapper, auto-interpret off-TPU) and ref.py
+(pure-jnp oracle swept by tests/test_kernel_frontier.py).
+"""

@@ -1,0 +1,10 @@
+from .ops import FrontierPacket, frontier_window, frontier_window_reference
+from .ref import FrontierWindow, frontier_window_ref
+
+__all__ = [
+    "FrontierPacket",
+    "FrontierWindow",
+    "frontier_window",
+    "frontier_window_ref",
+    "frontier_window_reference",
+]

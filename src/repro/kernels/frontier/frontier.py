@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: fused frontier accounting over a telemetry window.
+
+TPU-native layout (DESIGN.md §4 — adapted, not ported):
+
+  * ranks along **lanes** (128-wide vector reductions for `max_r`),
+  * stages along **sublanes** (S padded to 8; the prefix sum over stages is
+    a short unrolled loop),
+  * steps along the **grid**.
+
+Input arrives as d[N, S_pad, R_pad] (callers transpose once, in `ops.py`);
+each grid step (t, j) streams one [S_pad, R_TILE] tile of one step through
+VMEM and folds it into per-step accumulators:
+
+  frontier[t, s], leader[t, s] (global rank index, lowest-on-ties),
+  second[t, s] (for the max-minus-secondmax gap), and
+  clipped[t, s] = max_r (P_final[r] - max(0, d[r, s] - b[r, s]))
+                  — the Eq. 4 recompute via the final-prefix shift identity,
+                  fused so the whole evidence packet costs ONE HBM read of
+                  the window tensor instead of S+1 frontier passes.
+
+The kernel is bandwidth-bound by design (arithmetic intensity ~ S flops per
+loaded float); the roofline target is HBM speed-of-light for the window
+tensor, which is what `benchmarks/kernel_frontier.py` reports.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+_BIG_IDX = 2**30  # python literal: becomes an immediate inside the kernel
+
+
+def _merge_second(m1, s1, m2, s2):
+    """Top-2 merge: second of the union of two (max, second) summaries."""
+    return jnp.maximum(jnp.minimum(m1, m2), jnp.maximum(s1, s2))
+
+
+def _frontier_kernel(
+    d_ref,      # [1, S_pad, R_TILE] durations tile (stage-major, rank lanes)
+    b_ref,      # [1, S_pad, R_TILE] clipped-gain baseline tile
+    f_ref,      # out [1, S_pad] frontier
+    lead_ref,   # out [1, S_pad] leader (global rank idx)
+    sec_ref,    # out [1, S_pad] second max
+    clip_ref,   # out [1, S_pad] clipped final makespan per stage
+    *,
+    r_total: int,
+    r_tile: int,
+    s_pad: int,
+):
+    j = pl.program_id(1)
+    d = d_ref[0].astype(jnp.float32)            # [S_pad, R_TILE]
+    b = b_ref[0].astype(jnp.float32)
+
+    # Global lane indices for this tile and validity mask for padded ranks.
+    lane = jax.lax.broadcasted_iota(jnp.int32, (s_pad, r_tile), 1)
+    gidx = lane + j * r_tile                     # [S_pad, R_TILE]
+    valid = gidx < r_total
+
+    # Prefix over stages (sublanes): short unrolled running sum.
+    prefix = jnp.cumsum(d, axis=0)               # [S_pad, R_TILE]
+    prefix = jnp.where(valid, prefix, NEG_INF)
+
+    # Tile-local frontier / leader (lowest global index on ties) / second.
+    f_t = prefix.max(axis=1)                     # [S_pad]
+    is_max = prefix == f_t[:, None]
+    lead_t = jnp.where(is_max, gidx, _BIG_IDX).min(axis=1)
+    # mask exactly the winning lane, keep tied duplicates for `second`
+    masked = jnp.where(gidx == lead_t[:, None], NEG_INF, prefix)
+    sec_t = masked.max(axis=1)
+
+    # Clipped final makespan per stage (final-prefix shift identity).
+    excess = jnp.maximum(0.0, d - b)             # [S_pad, R_TILE]
+    final = prefix[s_pad - 1, :][None, :]        # [1, R_TILE] (valid-masked)
+    clip_t = jnp.where(valid, final - excess, NEG_INF).max(axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        f_ref[0, :] = f_t
+        lead_ref[0, :] = lead_t
+        sec_ref[0, :] = sec_t
+        clip_ref[0, :] = clip_t
+
+    @pl.when(j != 0)
+    def _fold():
+        f_prev = f_ref[0, :]
+        lead_prev = lead_ref[0, :]
+        sec_prev = sec_ref[0, :]
+        clip_prev = clip_ref[0, :]
+        f_new = jnp.maximum(f_prev, f_t)
+        # lowest-index tie-break across tiles: previous tiles hold lower
+        # global indices, so ties keep the previous leader.
+        lead_new = jnp.where(f_t > f_prev, lead_t, lead_prev)
+        sec_new = _merge_second(f_prev, sec_prev, f_t, sec_t)
+        f_ref[0, :] = f_new
+        lead_ref[0, :] = lead_new
+        sec_ref[0, :] = sec_new
+        clip_ref[0, :] = jnp.maximum(clip_prev, clip_t)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("r_total", "r_tile", "interpret")
+)
+def frontier_window_kernel(
+    d_srp: jax.Array,
+    b_srp: jax.Array,
+    *,
+    r_total: int | None = None,
+    r_tile: int = 512,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Run the fused kernel on stage-major input.
+
+    Args:
+      d_srp: [N, S_pad, R_pad] durations, stage-major, rank lanes; R_pad must
+        be a multiple of r_tile (callers pad; padded ranks are masked out).
+      b_srp: same shape, clipped-gain baseline.
+      r_total: number of real ranks (defaults to R_pad).
+      r_tile: rank lanes per VMEM tile (multiple of 128).
+
+    Returns (frontier[N,S_pad], leader[N,S_pad], second[N,S_pad],
+             clipped[N,S_pad]) — all f32 except leader (i32).
+    """
+    n, s_pad, r_pad = d_srp.shape
+    if r_pad % r_tile:
+        raise ValueError(f"R_pad={r_pad} not a multiple of r_tile={r_tile}")
+    r_total = r_pad if r_total is None else r_total
+    grid = (n, r_pad // r_tile)
+    kernel = functools.partial(
+        _frontier_kernel, r_total=r_total, r_tile=r_tile, s_pad=s_pad
+    )
+    out_spec = pl.BlockSpec((1, s_pad), lambda t, j: (t, 0))
+    in_spec = pl.BlockSpec((1, s_pad, r_tile), lambda t, j: (t, 0, j))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[in_spec, in_spec],
+        out_specs=[out_spec, out_spec, out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, s_pad), jnp.float32),
+            jax.ShapeDtypeStruct((n, s_pad), jnp.int32),
+            jax.ShapeDtypeStruct((n, s_pad), jnp.float32),
+            jax.ShapeDtypeStruct((n, s_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(d_srp, b_srp)

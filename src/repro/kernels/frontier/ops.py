@@ -1,0 +1,113 @@
+"""Jitted public wrapper for the fused frontier kernel.
+
+Accepts the natural [N, R, S] window layout, performs the one-time
+transpose/pad to the TPU-native [N, S_pad, R_pad] stage-major layout,
+dispatches the Pallas kernel (interpret=True automatically off-TPU), and
+post-processes the tiny [N, S] accumulators into the full evidence packet
+(advances, gap, Eq. 2 shares, Eq. 4 gains).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .frontier import frontier_window_kernel
+from .ref import FrontierWindow, frontier_window_ref
+
+_SUBLANE = 8
+_LANE = 128
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+class FrontierPacket(NamedTuple):
+    """Window evidence packet (kernel output + derived shares/gains)."""
+
+    frontier: jax.Array   # [N, S]
+    advances: jax.Array   # [N, S]
+    leader: jax.Array     # [N, S] i32
+    gap: jax.Array        # [N, S]  max - secondmax (+inf when R == 1)
+    exposed: jax.Array    # [N]     F[t, S]
+    shares: jax.Array     # [S]     Eq. 2
+    gains: jax.Array      # [S]     Eq. 4 (clipped static gain)
+
+
+@functools.partial(jax.jit, static_argnames=("r_tile", "interpret"))
+def frontier_window(
+    d: jax.Array,
+    baseline: jax.Array | None = None,
+    *,
+    r_tile: int | None = None,
+    interpret: bool | None = None,
+) -> FrontierPacket:
+    """Fused frontier accounting of a window tensor d[N, R, S].
+
+    baseline defaults to the cohort median (cross-rank, per-stage) — the
+    hidden-rank-exposing default of the labeler.
+    """
+    n, r, s = d.shape
+    d = d.astype(jnp.float32)
+    if baseline is None:
+        baseline = jnp.broadcast_to(
+            jnp.median(d.reshape(n * r, s), axis=0)[None, None, :], d.shape
+        )
+    baseline = jnp.broadcast_to(baseline.astype(jnp.float32), d.shape)
+    if interpret is None:
+        interpret = not _on_tpu()
+    if r_tile is None:
+        r_tile = min(_pad_to(r, _LANE), 512)
+
+    s_pad = _pad_to(s, _SUBLANE)
+    r_pad = _pad_to(r, r_tile)
+    # stage-major transpose + pad (padded stages add 0 to every prefix;
+    # padded ranks are masked inside the kernel).
+    dt = jnp.transpose(d, (0, 2, 1))
+    bt = jnp.transpose(baseline, (0, 2, 1))
+    dt = jnp.pad(dt, ((0, 0), (0, s_pad - s), (0, r_pad - r)))
+    bt = jnp.pad(bt, ((0, 0), (0, s_pad - s), (0, r_pad - r)))
+
+    f, lead, sec, clip = frontier_window_kernel(
+        dt, bt, r_total=r, r_tile=r_tile, interpret=interpret
+    )
+    f, lead, sec, clip = f[:, :s], lead[:, :s], sec[:, :s], clip[:, :s]
+    advances = jnp.diff(f, axis=1, prepend=0.0)
+    gap = f - sec                              # sec = -inf when R == 1
+    exposed = f[:, -1]
+    denom = jnp.maximum(exposed.sum(), 1e-30)
+    shares = advances.sum(axis=0) / denom
+    gains = jnp.maximum(0.0, (exposed[:, None] - clip).sum(axis=0)) / denom
+    return FrontierPacket(f, advances, lead, gap, exposed, shares, gains)
+
+
+def frontier_window_reference(
+    d: jax.Array, baseline: jax.Array | None = None
+) -> FrontierPacket:
+    """Same packet computed by the pure-jnp oracle (for tests/benchmarks)."""
+    n, r, s = d.shape
+    d = d.astype(jnp.float32)
+    if baseline is None:
+        baseline = jnp.broadcast_to(
+            jnp.median(d.reshape(n * r, s), axis=0)[None, None, :], d.shape
+        )
+    baseline = jnp.broadcast_to(baseline.astype(jnp.float32), d.shape)
+    ref: FrontierWindow = frontier_window_ref(d, baseline)
+    gap = ref.frontier - ref.second
+    exposed = ref.frontier[:, -1]
+    denom = jnp.maximum(exposed.sum(), 1e-30)
+    shares = ref.advances.sum(axis=0) / denom
+    gains = jnp.maximum(0.0, (exposed[:, None] - ref.clipped).sum(axis=0)) / denom
+    return FrontierPacket(
+        ref.frontier, ref.advances, ref.leader, gap, exposed, shares, gains
+    )

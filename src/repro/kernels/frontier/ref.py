@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the fused frontier-accounting kernel.
+
+Computes, for a window tensor d[N, R, S] (durations, nonnegative):
+
+  frontier[t, s]   = max_r P[t, r, s],  P = cumsum_s d
+  advances[t, s]   = frontier[t, s] - frontier[t, s-1]
+  leader[t, s]     = argmax_r P[t, r, s]            (lowest index on ties)
+  second[t, s]     = second-largest P over ranks    (= max when tied; -inf R=1)
+  clipped[t, s]    = exposed makespan with stage s clipped to baseline b:
+                     max_r (P[t, r, S-1] - max(0, d[t,r,s] - b[t,r,s]))
+
+The clipped column uses the *final-prefix shift identity*: replacing
+d[:, :, s] by min(d, b) lowers every rank's final prefix by exactly
+excess = max(0, d - b), so the Eq.-4 recompute needs no second cumsum.
+This oracle is what the Pallas kernel (and repro.core.gain) must match.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FrontierWindow(NamedTuple):
+    frontier: jax.Array       # [N, S] f32
+    advances: jax.Array       # [N, S] f32
+    leader: jax.Array         # [N, S] i32
+    second: jax.Array         # [N, S] f32 (-inf when R == 1)
+    clipped: jax.Array        # [N, S] f32  (Eq. 4 numerator input)
+
+
+def frontier_window_ref(d: jax.Array, baseline: jax.Array) -> FrontierWindow:
+    """Oracle. d, baseline: [N, R, S]; any float dtype (accumulates in f32)."""
+    d = d.astype(jnp.float32)
+    b = baseline.astype(jnp.float32)
+    n, r, s = d.shape
+    prefix = jnp.cumsum(d, axis=2)                       # [N, R, S]
+    frontier = prefix.max(axis=1)                        # [N, S]
+    leader = prefix.argmax(axis=1).astype(jnp.int32)     # lowest index on ties
+    advances = jnp.diff(frontier, axis=1, prepend=0.0)
+    if r >= 2:
+        # mask out exactly the argmax occurrence, keep duplicates of the max
+        mask = jax.nn.one_hot(leader, r, axis=1, dtype=bool)  # [N, R, S]
+        second = jnp.where(mask, -jnp.inf, prefix).max(axis=1)
+    else:
+        second = jnp.full((n, s), -jnp.inf, jnp.float32)
+    excess = jnp.maximum(0.0, d - b)                     # [N, R, S]
+    final = prefix[:, :, -1][:, :, None]                 # [N, R, 1]
+    clipped = (final - excess).max(axis=1)               # [N, S]
+    return FrontierWindow(frontier, advances, leader, second, clipped)

@@ -1,0 +1,4 @@
+"""Model definitions for the assigned architecture families."""
+from .model_zoo import Model, build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,172 @@
+"""Shared neural layers: norms, rotary embeddings, MLP variants, embeddings.
+
+Pure-functional style: ``init_*`` builds parameter pytrees (plain dicts of
+jnp arrays), ``apply`` functions consume them.  Logical sharding axes for
+every parameter are declared alongside init in `*_axes` helpers, consumed by
+repro.distributed.sharding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(d: int, kind: str, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "ln":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_axes(kind: str) -> dict:
+    p = {"scale": (None,)}
+    if kind == "ln":
+        p["bias"] = (None,)
+    return p
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] or [S]. Rotate-half convention."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # [D/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / plain GELU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act in ("swiglu", "geglu"):
+        return {
+            "wi_gate": dense_init(k1, (d_model, d_ff), dtype),
+            "wi_up": dense_init(k2, (d_model, d_ff), dtype),
+            "wo": dense_init(k3, (d_ff, d_model), dtype),
+        }
+    return {
+        "wi": dense_init(k1, (d_model, d_ff), dtype),
+        "bi": jnp.zeros((d_ff,), dtype),
+        "wo": dense_init(k3, (d_ff, d_model), dtype),
+        "bo": jnp.zeros((d_model,), dtype),
+    }
+
+
+def mlp_axes(act: str) -> dict:
+    if act in ("swiglu", "geglu"):
+        return {
+            "wi_gate": ("embed", "mlp"),
+            "wi_up": ("embed", "mlp"),
+            "wo": ("mlp", "embed"),
+        }
+    return {
+        "wi": ("embed", "mlp"),
+        "bi": ("mlp",),
+        "wo": ("mlp", "embed"),
+        "bo": ("embed",),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, act: str) -> jax.Array:
+    if act == "swiglu":
+        return (jax.nn.silu(x @ p["wi_gate"]) * (x @ p["wi_up"])) @ p["wo"]
+    if act == "geglu":
+        return (jax.nn.gelu(x @ p["wi_gate"]) * (x @ p["wi_up"])) @ p["wo"]
+    return jax.nn.gelu(x @ p["wi"] + p["bi"]) @ p["wo"] + p["bo"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab_padded: int, d_model: int, dtype) -> jax.Array:
+    return dense_init(key, (vocab_padded, d_model), dtype, scale=0.02)
+
+
+def embed_tokens(emb: jax.Array, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return emb.astype(compute_dtype)[tokens]
+
+
+def lm_logits(
+    x: jax.Array, emb: jax.Array, head: jax.Array | None, vocab_size: int
+) -> jax.Array:
+    """Final logits in f32; padded vocab columns are masked to -inf.
+
+    The pad mask is an elementwise `where` against a broadcast iota (NOT an
+    `.at[].set` slice update): slice updates on the vocab-sharded dim force
+    GSPMD to all-gather the full-vocab logits (~12 GiB f32 at 4k x 49k).
+    """
+    w = emb.T if head is None else head
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    vpad = logits.shape[-1]
+    if vpad > vocab_size:
+        col = jax.lax.broadcasted_iota(jnp.int32, (vpad,), 0)
+        logits = jnp.where(col < vocab_size, logits, -1e9)
+    return logits
+
+
+def cross_entropy_loss(
+    logits: jax.Array, labels: jax.Array, vocab_size: int
+) -> jax.Array:
+    """Mean token cross-entropy; ignores label == -1.
+
+    The gold logit is extracted with an equality-mask contraction instead of
+    `take_along_axis`: a dynamic gather along the vocab-sharded dim would
+    all-gather the logits, while the masked sum stays sharded and reduces
+    with one tiny cross-shard all-reduce.
+    """
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape[-1:], 0)
+    onehot = (col[None, None, :] == safe[..., None]).astype(logits.dtype)
+    gold = (logits * onehot).sum(axis=-1)
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

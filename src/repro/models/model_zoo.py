@@ -1,0 +1,197 @@
+"""Unified model interface: every architecture family behind one API.
+
+`build_model(cfg)` returns a `Model` whose members are plain functions
+(jit/pjit-friendly, no captured device state):
+
+  init(rng)                          -> params
+  loss(params, batch)                -> scalar   (train objective)
+  forward(params, batch)             -> logits   (prefill compute)
+  decode_step(params, caches, tokens, index, seq_len) -> (logits, caches)
+  init_caches(params, batch_size, seq_len[, frames])  -> caches
+  input_specs(shape)                 -> batch of ShapeDtypeStructs
+  cache_specs(shape)                 -> caches of ShapeDtypeStructs
+  param_axes()                       -> logical sharding axes pytree
+
+Batches are dicts: tokens/labels always; frames (encdec) and
+frontend_embeds (vlm) when the family needs a stub modality frontend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import encdec as encdec_lib
+from . import ssm as ssm_lib
+from . import transformer as tfm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]
+    forward: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_caches: Callable[..., Any]
+    input_specs: Callable[[ShapeConfig], dict]
+    cache_specs: Callable[[ShapeConfig], Any]
+    param_axes: Callable[[], Any]
+
+
+def _lm_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.kind == "train":
+        return {"tokens": tok, "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"tokens": tok}
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def _vlm_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s, p = shape.global_batch, shape.seq_len, cfg.n_patches
+    cd = jnp.dtype(cfg.compute_dtype)
+    st = max(s - p, 1)
+    emb = jax.ShapeDtypeStruct((b, p, cfg.d_model), cd)
+    if shape.kind == "train":
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, st), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, st), jnp.int32),
+            "frontend_embeds": emb,
+        }
+    if shape.kind == "prefill":
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, st), jnp.int32),
+            "frontend_embeds": emb,
+        }
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def _encdec_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    t_enc = max(s // cfg.enc_seq_divisor, 1)
+    cd = jnp.dtype(cfg.compute_dtype)
+    frames = jax.ShapeDtypeStruct((b, t_enc, cfg.d_model), cd)
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.kind == "train":
+        return {
+            "frames": frames,
+            "tokens": tok,
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        return {"frames": frames, "tokens": tok}
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32), "frames": frames}
+
+
+def _lm_cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    b, s = shape.global_batch, shape.seq_len
+    l = cfg.n_layers
+    specs: dict[str, Any] = {}
+    if cfg.family != "ssm":
+        c = tfm.cache_len_for(cfg, s)
+        if cfg.cache_layout == "bksd":
+            kv = jax.ShapeDtypeStruct((l, b, cfg.n_kv_heads, c, cfg.head_dim), cd)
+        else:
+            kv = jax.ShapeDtypeStruct((l, b, c, cfg.n_kv_heads, cfg.head_dim), cd)
+        specs["k"] = kv
+        specs["v"] = kv
+    if cfg.family in ("ssm", "hybrid"):
+        h, p, n = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+        conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_state
+        specs["ssm_state"] = jax.ShapeDtypeStruct((l, b, h, p, n), jnp.float32)
+        specs["conv"] = jax.ShapeDtypeStruct(
+            (l, b, cfg.ssm_conv_width - 1, conv_dim), jnp.float32
+        )
+    return specs
+
+
+def _encdec_cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    b, s = shape.global_batch, shape.seq_len
+    t_enc = max(s // cfg.enc_seq_divisor, 1)
+    l = cfg.n_layers
+    kv = jax.ShapeDtypeStruct((l, b, s, cfg.n_kv_heads, cfg.head_dim), cd)
+    cross = jax.ShapeDtypeStruct((l, b, t_enc, cfg.n_kv_heads, cfg.head_dim), cd)
+    return {"k": kv, "v": kv, "cross_k": cross, "cross_v": cross}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        def loss(params, batch, **kw):
+            return encdec_lib.encdec_loss(
+                params, cfg, batch["frames"], batch["tokens"], batch["labels"], **kw
+            )
+
+        def forward(params, batch, **kw):
+            return encdec_lib.forward_encdec(
+                params, cfg, batch["frames"], batch["tokens"], **kw
+            )
+
+        def decode_step(params, caches, tokens, index, seq_len):
+            return encdec_lib.decode_step_encdec(params, cfg, caches, tokens, index)
+
+        def init_caches(params, batch_size, seq_len, frames=None):
+            if frames is None:
+                t_enc = max(seq_len // cfg.enc_seq_divisor, 1)
+                frames = jnp.zeros(
+                    (batch_size, t_enc, cfg.d_model), jnp.dtype(cfg.compute_dtype)
+                )
+            return encdec_lib.init_encdec_caches(params, cfg, frames, seq_len)
+
+        return Model(
+            cfg=cfg,
+            init=lambda rng: encdec_lib.init_encdec(rng, cfg),
+            loss=loss,
+            forward=forward,
+            decode_step=decode_step,
+            init_caches=init_caches,
+            input_specs=lambda shape: _encdec_specs(cfg, shape),
+            cache_specs=lambda shape: _encdec_cache_specs(cfg, shape),
+            param_axes=lambda: encdec_lib.encdec_axes(cfg),
+        )
+
+    # decoder-only families (dense / moe / ssm / hybrid / vlm)
+    def loss(params, batch, **kw):
+        return tfm.lm_loss(
+            params,
+            cfg,
+            batch["tokens"],
+            batch["labels"],
+            frontend_embeds=batch.get("frontend_embeds"),
+            **kw,
+        )
+
+    def forward(params, batch, **kw):
+        logits, _ = tfm.forward_lm(
+            params,
+            cfg,
+            batch["tokens"],
+            frontend_embeds=batch.get("frontend_embeds"),
+            **kw,
+        )
+        return logits
+
+    def decode_step(params, caches, tokens, index, seq_len):
+        return tfm.decode_step_lm(params, cfg, caches, tokens, index, seq_len)
+
+    def init_caches(params, batch_size, seq_len, frames=None):
+        return tfm.init_decode_caches(cfg, batch_size, seq_len)
+
+    specs = _vlm_specs if cfg.family == "vlm" else _lm_specs
+    return Model(
+        cfg=cfg,
+        init=lambda rng: tfm.init_lm(rng, cfg),
+        loss=loss,
+        forward=forward,
+        decode_step=decode_step,
+        init_caches=init_caches,
+        input_specs=lambda shape: specs(cfg, shape),
+        cache_specs=lambda shape: _lm_cache_specs(cfg, shape),
+        param_axes=lambda: tfm.lm_axes(cfg),
+    )

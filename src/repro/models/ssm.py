@@ -1,0 +1,193 @@
+"""Mamba-2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+Chunked SSD: the sequence is split into chunks of Q tokens; within a chunk
+the output is the quadratic ("attention-like") masked form, across chunks a
+`lax.scan` carries the [H, P, N] state.  This is the TPU-friendly layout:
+both the intra-chunk einsums and the state updates are MXU matmuls with
+chunk-bounded working sets.
+
+Decode is the recurrent form: h <- h * exp(dt*A) + dt * (B outer x); one
+token costs O(H*P*N) and the cache is (conv tail, state), independent of
+context length — which is why mamba2/hymba run the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_d_inner
+    n_heads = cfg.ssm_n_heads
+    p = cfg.ssm_head_dim
+    n = cfg.ssm_state
+    conv_dim = d_inner + 2 * n  # x, B, C pass through the conv (ngroups=1)
+    return d_inner, n_heads, p, n, conv_dim
+
+
+def init_ssm(key, cfg, dtype) -> dict:
+    d_inner, h, p, n, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(k1, (d, in_dim), dtype),
+        "conv_w": dense_init(k2, (cfg.ssm_conv_width, conv_dim), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "out_proj": dense_init(k3, (d_inner, d), dtype),
+        "gate_norm_scale": jnp.ones((d_inner,), dtype),
+    }
+
+
+def ssm_axes() -> dict:
+    return {
+        "in_proj": ("embed", "mlp"),
+        "conv_w": (None, "mlp"),
+        "conv_b": ("mlp",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "out_proj": ("mlp", "embed"),
+        "gate_norm_scale": ("mlp",),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, h, p, n, _ = _dims(cfg)
+    z, xc, b_, c_, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1
+    )
+    return z, xc, b_, c_, dt
+
+
+def _gated_norm(p, y, z):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+    return yf * p["gate_norm_scale"].astype(jnp.float32)
+
+
+def _causal_conv(x, w, b):
+    """x: [B, S, C]; w: [W, C] depthwise causal conv."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return out + b[None, None, :]
+
+
+def apply_ssm(params: dict, x: jax.Array, cfg) -> jax.Array:
+    """Full-sequence SSD. x: [B, S, D] -> [B, S, D]."""
+    b, s, d = x.shape
+    d_inner, h, p, n, conv_dim = _dims(cfg)
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, f"seq {s} must divide ssm_chunk {q}"
+    nc = s // q
+
+    zxbcdt = x @ params["in_proj"]
+    z, xc, b_, c_, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xc, b_, c_], axis=-1)
+    conv_out = jax.nn.silu(
+        _causal_conv(conv_in, params["conv_w"], params["conv_b"]).astype(jnp.float32)
+    )
+    xc, b_, c_ = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    a = -jnp.exp(params["A_log"])                                  # [H]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    xh = xc.reshape(b, s, h, p)                                     # [B,S,H,P]
+    # chunked views
+    dtc = dt.reshape(b, nc, q, h)
+    xcq = (xh * dt[..., None]).reshape(b, nc, q, h, p)              # dt-weighted input
+    bq = b_.reshape(b, nc, q, n)
+    cq = c_.reshape(b, nc, q, n)
+    da = dtc * a[None, None, None, :]                               # [B,NC,Q,H]
+    da_cum = jnp.cumsum(da, axis=2)                                 # within-chunk
+    da_total = da_cum[:, :, -1, :]                                  # [B,NC,H]
+
+    # ---- intra-chunk (quadratic within chunk) -----------------------------
+    # L[i,j] = exp(da_cum[i] - da_cum[j]) for j <= i else 0
+    seg = da_cum[:, :, :, None, :] - da_cum[:, :, None, :, :]       # [B,NC,Q,Q,H]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", cq, bq)                  # [B,NC,Q,Q]
+    y_intra = jnp.einsum(
+        "bcij,bcijh,bcjhp->bcihp", scores, l_mat, xcq
+    )                                                               # [B,NC,Q,H,P]
+
+    # ---- chunk states + inter-chunk recurrence -----------------------------
+    decay_to_end = jnp.exp(da_total[:, :, None, :] - da_cum)        # [B,NC,Q,H]
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bq, decay_to_end, xcq)
+
+    def chunk_scan(h_prev, inp):
+        st, tot = inp                                               # [B,H,P,N],[B,H]
+        h_next = h_prev * jnp.exp(tot)[:, :, None, None] + st
+        return h_next, h_prev
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    if cfg.unroll_inner:
+        hs = []
+        h_cur = h0
+        for ci in range(nc):
+            h_cur, h_prev = chunk_scan(h_cur, (states[:, ci], da_total[:, ci]))
+            hs.append(h_prev)
+        h_in = jnp.stack(hs, axis=1)                                # [B,NC,H,P,N]
+    else:
+        _, h_in = jax.lax.scan(
+            chunk_scan,
+            h0,
+            (states.transpose(1, 0, 2, 3, 4), da_total.transpose(1, 0, 2)),
+        )
+        h_in = h_in.transpose(1, 0, 2, 3, 4)                        # [B,NC,H,P,N]
+    decay_from_start = jnp.exp(da_cum)                              # [B,NC,Q,H]
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp", cq, decay_from_start, h_in)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = _gated_norm(params, y.reshape(b, s, d_inner), z)
+    return (y.astype(x.dtype)) @ params["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent form)
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(cfg, batch: int) -> dict:
+    d_inner, h, p, n, conv_dim = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), jnp.float32),
+    }
+
+
+def decode_ssm(params: dict, cache: dict, x: jax.Array, cfg):
+    """One-token step. x: [B, 1, D] -> (y [B, 1, D], new cache)."""
+    b = x.shape[0]
+    d_inner, h, p, n, conv_dim = _dims(cfg)
+    zxbcdt = x[:, 0, :] @ params["in_proj"]
+    z, xc, b_, c_, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xc, b_, c_], axis=-1)                # [B, convdim]
+    window = jnp.concatenate(
+        [cache["conv"], conv_in[:, None, :].astype(jnp.float32)], axis=1
+    )                                                               # [B, W, convdim]
+    w = params["conv_w"].astype(jnp.float32)
+    conv_out = jax.nn.silu((window * w[None]).sum(axis=1) + params["conv_b"])
+    xc, b_, c_ = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    a = -jnp.exp(params["A_log"])
+    dt_ = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    xh = xc.reshape(b, h, p)
+    decay = jnp.exp(dt_ * a[None, :])                               # [B,H]
+    add = jnp.einsum("bh,bn,bhp->bhpn", dt_, b_, xh)
+    state = cache["state"] * decay[:, :, None, None] + add
+    y = jnp.einsum("bn,bhpn->bhp", c_, state)
+    y = y + params["D"][None, :, None] * xh
+    y = _gated_norm(params, y.reshape(b, d_inner), z)
+    out = (y.astype(x.dtype)) @ params["out_proj"]
+    new_cache = {"state": state, "conv": window[:, 1:, :]}
+    return out[:, None, :], new_cache

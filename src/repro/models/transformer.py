@@ -1,0 +1,436 @@
+"""Decoder-only LM backbone for the dense / moe / ssm / hybrid / vlm families.
+
+Layer weights are stacked with a leading [L] dim and applied with
+`lax.scan` (HLO size independent of depth — this is what keeps the 40-layer
+multi-pod dry-run compiling in seconds) with optional `jax.checkpoint`
+(remat) around the block body.
+
+Families:
+  dense   pre-norm GQA attention + (Sw/Ge)GLU MLP
+  moe     attention + top-k expert MLP (repro.models.moe)
+  ssm     Mamba-2 SSD mixer only (attention-free)
+  hybrid  Hymba-style parallel attention+SSD heads, then MLP
+  vlm     dense backbone consuming [patch embeds ; token embeds]
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .attention import (
+    chunked_causal_attention,
+    decode_attention,
+    decode_attention_bksd,
+    update_kv_cache,
+    update_kv_cache_bksd,
+)
+from .layers import (
+    apply_mlp,
+    apply_norm,
+    apply_rope,
+    cross_entropy_loss,
+    dense_init,
+    embed_tokens,
+    init_embedding,
+    init_mlp,
+    init_norm,
+    lm_logits,
+    mlp_axes,
+    norm_axes,
+)
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+
+def _has_attention(cfg) -> bool:
+    return cfg.family != "ssm"
+
+
+def _has_ssm(cfg) -> bool:
+    return cfg.family in ("ssm", "hybrid")
+
+
+def _has_moe(cfg) -> bool:
+    # n_experts == 0 with family "moe" drops the expert blocks entirely —
+    # used by the dry-run delta variants (MoE is costed standalone).
+    return cfg.family == "moe" and cfg.n_experts > 0
+
+
+def _has_mlp(cfg) -> bool:
+    return cfg.d_ff > 0 and cfg.family != "moe"
+
+
+def init_attn(key, cfg, dtype) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "wq": dense_init(kq, (d, qd), dtype),
+        "wk": dense_init(kk, (d, kvd), dtype),
+        "wv": dense_init(kv, (d, kvd), dtype),
+        "wo": dense_init(ko, (qd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), dtype)
+        p["bk"] = jnp.zeros((kvd,), dtype)
+        p["bv"] = jnp.zeros((kvd,), dtype)
+    return p
+
+
+def attn_axes(cfg) -> dict:
+    # KV projections carry their own logical axis: GQA-aware TP replicates
+    # KV when n_kv_heads doesn't divide the TP degree (plans decide).
+    p = {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"),
+        "wo": ("heads", "embed"),
+    }
+    if cfg.qkv_bias:
+        p.update({"bq": ("heads",), "bk": ("kv_heads",), "bv": ("kv_heads",)})
+    return p
+
+
+def init_block(key, cfg, dtype) -> dict:
+    keys = jax.random.split(key, 4)
+    block: dict[str, Any] = {}
+    if _has_attention(cfg):
+        block["attn_norm"] = init_norm(cfg.d_model, cfg.norm, dtype)
+        block["attn"] = init_attn(keys[0], cfg, dtype)
+    if _has_ssm(cfg):
+        block["ssm_norm"] = init_norm(cfg.d_model, cfg.norm, dtype)
+        block["ssm"] = ssm_lib.init_ssm(keys[1], cfg, dtype)
+    if cfg.family == "hybrid":
+        # per-path output norms for the parallel-head average
+        block["attn_out_norm"] = init_norm(cfg.d_model, "rms", dtype)
+        block["ssm_out_norm"] = init_norm(cfg.d_model, "rms", dtype)
+    if _has_moe(cfg):
+        block["moe_norm"] = init_norm(cfg.d_model, cfg.norm, dtype)
+        block["moe"] = moe_lib.init_moe(keys[2], cfg, dtype)
+    if _has_mlp(cfg):
+        block["mlp_norm"] = init_norm(cfg.d_model, cfg.norm, dtype)
+        block["mlp"] = init_mlp(keys[3], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return block
+
+
+def block_axes(cfg) -> dict:
+    ax: dict[str, Any] = {}
+    if _has_attention(cfg):
+        ax["attn_norm"] = norm_axes(cfg.norm)
+        ax["attn"] = attn_axes(cfg)
+    if _has_ssm(cfg):
+        ax["ssm_norm"] = norm_axes(cfg.norm)
+        ax["ssm"] = ssm_lib.ssm_axes()
+    if cfg.family == "hybrid":
+        ax["attn_out_norm"] = norm_axes("rms")
+        ax["ssm_out_norm"] = norm_axes("rms")
+    if _has_moe(cfg):
+        ax["moe_norm"] = norm_axes(cfg.norm)
+        ax["moe"] = moe_lib.moe_axes()
+    if _has_mlp(cfg):
+        ax["mlp_norm"] = norm_axes(cfg.norm)
+        ax["mlp"] = mlp_axes(cfg.act)
+    return ax
+
+
+def init_lm(key, cfg) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    if cfg.scan_layers:
+        layers = jax.vmap(lambda k: init_block(k, cfg, dtype))(layer_keys)
+    else:
+        layers = [init_block(k, cfg, dtype) for k in layer_keys]
+    params = {
+        "embed": init_embedding(k_emb, cfg.padded_vocab, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(
+            k_head, (cfg.d_model, cfg.padded_vocab), dtype, scale=0.02
+        )
+    return params
+
+
+def lm_axes(cfg) -> dict:
+    """Logical sharding axes mirroring the param tree (leading layer dim
+    is unnamed/replicated-stacked; sharding rules add it)."""
+    layer = block_axes(cfg)
+    if cfg.scan_layers:
+        layer = jax.tree.map(
+            lambda t: ("layer",) + tuple(t), layer,
+            is_leaf=lambda t: isinstance(t, tuple),
+        )
+    else:
+        layer = [block_axes(cfg) for _ in range(cfg.n_layers)]
+    axes = {
+        "embed": ("vocab", "embed"),
+        "layers": layer,
+        "final_norm": norm_axes(cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        axes["head"] = ("embed", "vocab")
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Forward (prefill / train)
+# ---------------------------------------------------------------------------
+
+
+def _attention_block(block, x, cfg, positions, triangular):
+    h = apply_norm(block["attn_norm"], x, cfg.norm)
+    b, s, _ = h.shape
+    q = h @ block["attn"]["wq"]
+    k = h @ block["attn"]["wk"]
+    v = h @ block["attn"]["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + block["attn"]["bq"], k + block["attn"]["bk"], v + block["attn"]["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = chunked_causal_attention(
+        q,
+        k,
+        v,
+        q_chunk=cfg.attn_q_chunk,
+        kv_chunk=cfg.attn_kv_chunk,
+        window=cfg.window if cfg.attention == "sliding" else None,
+        triangular=triangular,
+        unroll=cfg.unroll_inner,
+        cast_f32=cfg.attn_cast_f32,
+        remat_qblock=cfg.attn_remat,
+    )
+    return out.reshape(b, s, cfg.q_dim) @ block["attn"]["wo"]
+
+
+def _block_forward(block, x, cfg, positions, triangular):
+    """One layer. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "hybrid":
+        attn_out = _attention_block(block, x, cfg, positions, triangular)
+        ssm_in = apply_norm(block["ssm_norm"], x, cfg.norm)
+        ssm_out = ssm_lib.apply_ssm(block["ssm"], ssm_in, cfg)
+        mixed = 0.5 * (
+            apply_norm(block["attn_out_norm"], attn_out, "rms")
+            + apply_norm(block["ssm_out_norm"], ssm_out, "rms")
+        )
+        x = x + mixed
+    else:
+        if _has_attention(cfg):
+            x = x + _attention_block(block, x, cfg, positions, triangular)
+        if _has_ssm(cfg):
+            h = apply_norm(block["ssm_norm"], x, cfg.norm)
+            x = x + ssm_lib.apply_ssm(block["ssm"], h, cfg)
+    if _has_moe(cfg):
+        h = apply_norm(block["moe_norm"], x, cfg.norm)
+        y, aux = moe_lib.apply_moe(block["moe"], h, cfg)
+        x = x + y
+    if _has_mlp(cfg):
+        h = apply_norm(block["mlp_norm"], x, cfg.norm)
+        x = x + apply_mlp(block["mlp"], h, cfg.act)
+    return x, aux
+
+
+def forward_lm(
+    params: dict,
+    cfg,
+    tokens: jax.Array,
+    *,
+    frontend_embeds: jax.Array | None = None,
+    triangular: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """tokens: [B, S_text] -> (logits [B, S, Vpad] f32, moe aux loss []).
+
+    For vlm, frontend_embeds [B, P, D] are prepended (stub modality
+    frontend per the assignment) and S = P + S_text.
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, cd)
+    if frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(cd), x], axis=1)
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, layer):
+        x = carry
+        x, aux = _block_forward(layer, x, cfg, positions, triangular)
+        return x, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, auxes = jax.lax.scan(body, x, params["layers"])
+        aux = auxes.sum()
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for layer in params["layers"]:
+            x, a = body(x, layer)
+            aux = aux + a
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = lm_logits(x, params["embed"], params.get("head"), cfg.vocab_size)
+    return logits, aux
+
+
+def lm_loss(
+    params: dict,
+    cfg,
+    tokens: jax.Array,
+    labels: jax.Array,
+    *,
+    frontend_embeds: jax.Array | None = None,
+    moe_aux_weight: float = 0.01,
+    triangular: bool = False,
+) -> jax.Array:
+    logits, aux = forward_lm(
+        params, cfg, tokens, frontend_embeds=frontend_embeds, triangular=triangular
+    )
+    if frontend_embeds is not None:
+        # labels only cover text positions; patch positions are unsupervised
+        logits = logits[:, frontend_embeds.shape[1]:, :]
+    return cross_entropy_loss(logits, labels, cfg.vocab_size) + moe_aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token serve step with per-layer caches)
+# ---------------------------------------------------------------------------
+
+
+def cache_len_for(cfg, seq_len: int) -> int:
+    if cfg.attention == "sliding":
+        return min(seq_len, cfg.window)
+    return seq_len
+
+
+def init_decode_caches(cfg, batch: int, seq_len: int) -> dict:
+    """Stacked per-layer caches ([L, ...] leaves) for lax.scan decode."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    l = cfg.n_layers
+    caches: dict[str, Any] = {}
+    if _has_attention(cfg):
+        c = cache_len_for(cfg, seq_len)
+        if cfg.cache_layout == "bksd":
+            shape = (l, batch, cfg.n_kv_heads, c, cfg.head_dim)
+        else:
+            shape = (l, batch, c, cfg.n_kv_heads, cfg.head_dim)
+        caches["k"] = jnp.zeros(shape, cd)
+        caches["v"] = jnp.zeros(shape, cd)
+    if _has_ssm(cfg):
+        one = ssm_lib.init_ssm_cache(cfg, batch)
+        caches["ssm_state"] = jnp.tile(one["state"][None], (l, 1, 1, 1, 1))
+        caches["conv"] = jnp.tile(one["conv"][None], (l, 1, 1, 1))
+    return caches
+
+
+def _attention_decode(block, x_tok, cfg, layer_cache, index, cache_len):
+    h = apply_norm(block["attn_norm"], x_tok, cfg.norm)
+    b = h.shape[0]
+    q = h @ block["attn"]["wq"]
+    k = h @ block["attn"]["wk"]
+    v = h @ block["attn"]["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + block["attn"]["bq"], k + block["attn"]["bk"], v + block["attn"]["bv"]
+    q = q.reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    pos = index[None]  # absolute position; rope is relative-equivariant
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    write = jnp.mod(index, cache_len)  # ring buffer for sliding windows
+    length = jnp.minimum(index + 1, cache_len)
+    if cfg.cache_layout == "bksd":
+        kc, vc = update_kv_cache_bksd(layer_cache["k"], layer_cache["v"], k, v, write)
+        out = decode_attention_bksd(q, kc, vc, length, cast_f32=cfg.attn_cast_f32)
+    else:
+        kc, vc = update_kv_cache(layer_cache["k"], layer_cache["v"], k, v, write)
+        out = decode_attention(q, kc, vc, length, cast_f32=cfg.attn_cast_f32)
+    out = out.reshape(b, 1, cfg.q_dim) @ block["attn"]["wo"]
+    return out, {"k": kc, "v": vc}
+
+
+def _block_decode(block, x_tok, cfg, layer_cache, index, cache_len):
+    new_cache: dict[str, Any] = {}
+    if cfg.family == "hybrid":
+        attn_out, upd = _attention_decode(
+            block, x_tok, cfg, layer_cache, index, cache_len
+        )
+        new_cache.update(upd)
+        ssm_in = apply_norm(block["ssm_norm"], x_tok, cfg.norm)
+        ssm_out, supd = ssm_lib.decode_ssm(
+            block["ssm"],
+            {"state": layer_cache["ssm_state"], "conv": layer_cache["conv"]},
+            ssm_in,
+            cfg,
+        )
+        new_cache["ssm_state"] = supd["state"]
+        new_cache["conv"] = supd["conv"]
+        mixed = 0.5 * (
+            apply_norm(block["attn_out_norm"], attn_out, "rms")
+            + apply_norm(block["ssm_out_norm"], ssm_out, "rms")
+        )
+        x_tok = x_tok + mixed
+    else:
+        if _has_attention(cfg):
+            out, upd = _attention_decode(
+                block, x_tok, cfg, layer_cache, index, cache_len
+            )
+            new_cache.update(upd)
+            x_tok = x_tok + out
+        if _has_ssm(cfg):
+            h = apply_norm(block["ssm_norm"], x_tok, cfg.norm)
+            out, supd = ssm_lib.decode_ssm(
+                block["ssm"],
+                {"state": layer_cache["ssm_state"], "conv": layer_cache["conv"]},
+                h,
+                cfg,
+            )
+            new_cache["ssm_state"] = supd["state"]
+            new_cache["conv"] = supd["conv"]
+            x_tok = x_tok + out
+    if _has_moe(cfg):
+        h = apply_norm(block["moe_norm"], x_tok, cfg.norm)
+        y, _ = moe_lib.apply_moe(block["moe"], h, cfg)
+        x_tok = x_tok + y
+    if _has_mlp(cfg):
+        h = apply_norm(block["mlp_norm"], x_tok, cfg.norm)
+        x_tok = x_tok + apply_mlp(block["mlp"], h, cfg.act)
+    return x_tok, new_cache
+
+
+def decode_step_lm(
+    params: dict,
+    cfg,
+    caches: dict,
+    tokens: jax.Array,   # [B, 1] current tokens
+    index: jax.Array,    # [] absolute position of this token
+    seq_len: int,
+) -> tuple[jax.Array, dict]:
+    """One serve step: returns (logits [B, 1, Vpad] f32, updated caches)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, cd)
+    cache_len = cache_len_for(cfg, seq_len)
+
+    def body(x, inp):
+        layer, layer_cache = inp
+        x, new_cache = _block_decode(layer, x, cfg, layer_cache, index, cache_len)
+        return x, new_cache
+
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    else:
+        new_list = []
+        for i, layer in enumerate(params["layers"]):
+            x, nc = body(x, (layer, jax.tree.map(lambda c: c[i], caches)))
+            new_list.append(nc)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = lm_logits(x, params["embed"], params.get("head"), cfg.vocab_size)
+    return logits, new_caches

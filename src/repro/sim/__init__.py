@@ -1,0 +1,5 @@
+"""Synchronization-displacement simulator (hidden-rank evaluation substrate)."""
+from .cluster import Fault, Scenario, SimResult, simulate
+from . import scenarios
+
+__all__ = ["Fault", "Scenario", "SimResult", "simulate", "scenarios"]

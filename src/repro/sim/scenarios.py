@@ -1,0 +1,135 @@
+"""Canonical scenario builders mirroring the paper's experiment groups.
+
+The DDP profile uses the paper's six broad stages with backward carrying the
+gradient collective (reducer activity and exposed collective waits land in
+the backward stage, §5).  Magnitudes roughly track the paper's 8-rank runs
+(~208 ms median step, E6).
+"""
+from __future__ import annotations
+
+from ..core.contract import SEGMENTED_STAGES
+from .cluster import Fault, Scenario
+
+#: base per-stage means (seconds) — ~208 ms step like the paper's E6 runs.
+DDP_BASE = {
+    "data.next_wait": 0.012,
+    "model.fwd_loss_cpu_wall": 0.055,
+    "model.backward_cpu_wall": 0.105,
+    "callbacks.cpu_wall": 0.012,
+    "optim.step_cpu_wall": 0.022,
+    "step.other_cpu_wall": 0.002,
+}
+
+DDP_SYNC = ("model.backward_cpu_wall",)                 # DDP allreduce
+FSDP_SYNC = (
+    "model.fwd_loss_cpu_wall",                          # all-gather
+    "model.backward_cpu_wall",                          # reduce-scatter
+)
+ZERO1_SYNC = (
+    "model.backward_cpu_wall",
+    "optim.step_cpu_wall",                              # shard all-gather
+)
+
+#: E3 hidden-rank fault families -> fault constructor.
+E3_FAMILIES = ("data", "backward", "backward_comm", "forward_device", "forward_host")
+
+
+def e3_fault(family: str, rank: int, delay_s: float) -> Fault:
+    if family == "data":
+        return Fault(rank, "data.next_wait", delay_s)
+    if family == "backward":
+        return Fault(rank, "model.backward_cpu_wall", delay_s)
+    if family == "backward_comm":
+        return Fault(rank, "model.backward_cpu_wall", delay_s, mode="comm")
+    if family == "forward_device":
+        return Fault(
+            rank,
+            "model.fwd_loss_cpu_wall",
+            delay_s,
+            mode="spillover",
+            spill_to="model.backward_cpu_wall",
+            spill_frac=0.8,
+        )
+    if family == "forward_host":
+        return Fault(rank, "model.fwd_loss_cpu_wall", delay_s)
+    raise ValueError(f"unknown E3 family {family!r}")
+
+
+def ddp_scenario(
+    *,
+    world_size: int = 8,
+    steps: int = 120,
+    seed: int = 0,
+    faults: tuple[Fault, ...] = (),
+    sync=DDP_SYNC,
+    roles: tuple[str, ...] = (),
+    base: dict | None = None,
+) -> Scenario:
+    return Scenario(
+        stages=SEGMENTED_STAGES,
+        base_means=dict(base or DDP_BASE),
+        sync_stages=tuple(sync),
+        world_size=world_size,
+        steps=steps,
+        seed=seed,
+        faults=faults,
+        roles=roles,
+    )
+
+
+def hidden_rank_scenario(
+    family: str,
+    *,
+    world_size: int = 8,
+    steps: int = 120,
+    seed: int = 0,
+    delay_ms: float = 120.0,
+    sync=DDP_SYNC,
+) -> Scenario:
+    """One E3 row: the faulted rank is derived from the seed (hidden)."""
+    rank = (seed * 7 + 3) % world_size
+    return ddp_scenario(
+        world_size=world_size,
+        steps=steps,
+        seed=seed,
+        faults=(e3_fault(family, rank, delay_ms / 1e3),),
+        sync=sync,
+    )
+
+
+def callback_scenario(
+    *,
+    sync_bearing: bool,
+    world_size: int = 8,
+    steps: int = 120,
+    seed: int = 0,
+    delay_ms: float = 120.0,
+) -> Scenario:
+    """Callback study: sync-bearing rows barrier at the callback boundary;
+    the host-only control has no adjacent barrier (the cost displaces into
+    the next step's backward sync and must stay unrouted)."""
+    rank = (seed * 7 + 3) % world_size
+    sync = DDP_SYNC + (("callbacks.cpu_wall",) if sync_bearing else ())
+    return ddp_scenario(
+        world_size=world_size,
+        steps=steps,
+        seed=seed,
+        faults=(Fault(rank, "callbacks.cpu_wall", delay_ms / 1e3),),
+        sync=sync,
+    )
+
+
+def aba_windows(
+    *, world_size: int = 8, steps: int = 200, seed: int = 0, delay_ms: float = 120.0
+):
+    """E6: baseline A1, injected B (sync-bearing callback), removed A2."""
+    a1 = ddp_scenario(world_size=world_size, steps=steps, seed=seed)
+    b = callback_scenario(
+        sync_bearing=True,
+        world_size=world_size,
+        steps=steps,
+        seed=seed + 1000,
+        delay_ms=delay_ms,
+    )
+    a2 = ddp_scenario(world_size=world_size, steps=steps, seed=seed + 2000)
+    return a1, b, a2

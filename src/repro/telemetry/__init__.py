@@ -1,0 +1,23 @@
+"""Always-on telemetry runtime: recorder, device events, gather, packets."""
+from .device_events import DeviceEventChannel
+from .gather import (
+    GatherResult,
+    InProcTransport,
+    JaxProcessTransport,
+    TelemetryGather,
+)
+from .packets import EvidencePacket, decode_packet, encode_packet
+from .recorder import StageRecorder, StepRecord
+
+__all__ = [
+    "DeviceEventChannel",
+    "EvidencePacket",
+    "GatherResult",
+    "InProcTransport",
+    "JaxProcessTransport",
+    "StageRecorder",
+    "StepRecord",
+    "TelemetryGather",
+    "decode_packet",
+    "encode_packet",
+]

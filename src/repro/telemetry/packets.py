@@ -1,0 +1,128 @@
+"""Evidence-packet serialization — the paper's 0.11 MB artifact.
+
+The dense root-visible payload is B_root = R*N*K*b bytes (§5).  A packet
+carries the window's rank-stage matrix (or only its summary, in `compact`
+mode), the diagnosis, and provenance (schema hash, window index, gather
+status), as line-delimited JSON + a raw float64 buffer.  The router-vs-trace
+benchmark (paper Table 6) measures these against a full per-step trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import io
+import json
+from typing import Any
+
+import numpy as np
+
+from ..core.labeler import Diagnosis
+
+__all__ = ["EvidencePacket", "encode_packet", "decode_packet"]
+
+_MAGIC = b"SFP1"
+
+
+@dataclasses.dataclass(frozen=True)
+class EvidencePacket:
+    window_index: int
+    schema_hash: str
+    stages: tuple[str, ...]
+    steps: int
+    world_size: int
+    gather_ok: bool
+    labels: tuple[str, ...]
+    routing_stages: tuple[str, ...]
+    shares: tuple[float, ...]
+    gains: tuple[float, ...]
+    co_critical_stages: tuple[str, ...]
+    downgrade_reasons: tuple[str, ...]
+    leader_rank: int
+    #: full [N, R, S] matrix (None in compact mode)
+    window: np.ndarray | None = None
+
+    @property
+    def payload_bytes(self) -> int:
+        return len(encode_packet(self))
+
+
+def from_diagnosis(
+    diag: Diagnosis,
+    stages: tuple[str, ...],
+    steps: int,
+    world_size: int,
+    window_index: int,
+    window: np.ndarray | None = None,
+) -> EvidencePacket:
+    return EvidencePacket(
+        window_index=window_index,
+        schema_hash=diag.schema_hash,
+        stages=stages,
+        steps=steps,
+        world_size=world_size,
+        gather_ok=diag.gather_ok,
+        labels=diag.labels,
+        routing_stages=diag.routing_stages,
+        shares=diag.shares,
+        gains=diag.gains,
+        co_critical_stages=diag.co_critical_stages,
+        downgrade_reasons=diag.downgrade_reasons,
+        leader_rank=diag.leader.leader_rank if diag.leader else -1,
+        window=window,
+    )
+
+
+def encode_packet(p: EvidencePacket) -> bytes:
+    header: dict[str, Any] = {
+        k: v
+        for k, v in dataclasses.asdict(p).items()
+        if k != "window"
+    }
+    head = json.dumps(header, default=list).encode()
+    buf = io.BytesIO()
+    buf.write(_MAGIC)
+    buf.write(len(head).to_bytes(4, "little"))
+    buf.write(head)
+    if p.window is not None:
+        w = np.ascontiguousarray(p.window, np.float64)
+        meta = json.dumps({"shape": w.shape, "dtype": "float64"}).encode()
+        buf.write(len(meta).to_bytes(4, "little"))
+        buf.write(meta)
+        raw = w.tobytes()
+        buf.write(hashlib.sha256(raw).digest()[:8])  # provenance hash
+        buf.write(raw)
+    else:
+        buf.write((0).to_bytes(4, "little"))
+    return buf.getvalue()
+
+
+def decode_packet(data: bytes) -> EvidencePacket:
+    if data[:4] != _MAGIC:
+        raise ValueError("not a StageFrontier packet")
+    off = 4
+    hlen = int.from_bytes(data[off : off + 4], "little")
+    off += 4
+    header = json.loads(data[off : off + hlen])
+    off += hlen
+    mlen = int.from_bytes(data[off : off + 4], "little")
+    off += 4
+    window = None
+    if mlen:
+        meta = json.loads(data[off : off + mlen])
+        off += mlen
+        digest, off = data[off : off + 8], off + 8
+        raw = data[off:]
+        if hashlib.sha256(raw).digest()[:8] != digest:
+            raise ValueError("packet payload hash mismatch")
+        window = np.frombuffer(raw, np.float64).reshape(meta["shape"])
+    for key in (
+        "stages",
+        "labels",
+        "routing_stages",
+        "shares",
+        "gains",
+        "co_critical_stages",
+        "downgrade_reasons",
+    ):
+        header[key] = tuple(header[key])
+    return EvidencePacket(window=window, **header)

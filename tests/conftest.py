@@ -1,0 +1,10 @@
+"""Test-session configuration.
+
+Deliberately does NOT set --xla_force_host_platform_device_count: smoke
+tests and benches must see the real single CPU device; only
+repro.launch.dryrun forces 512 placeholder devices (and only in its own
+process).
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,88 @@
+"""Roofline analysis units: HLO collective parsing, delta extrapolation,
+analytic model FLOPs sanity."""
+import numpy as np
+
+from repro.analysis.roofline import (
+    AR_FACTOR,
+    CellCosts,
+    collective_bytes,
+    model_flops,
+    roofline,
+)
+from repro.configs import SHAPES, get_config
+
+HLO = """
+ENTRY %main {
+  %p0 = bf16[16,128]{1,0} parameter(0)
+  %ag = bf16[256,128]{1,0} all-gather(bf16[16,128]{1,0} %p0), dimensions={0}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), to_apply=%add
+  %ars = f32[512]{0} all-reduce-start(f32[512]{0} %y), to_apply=%add
+  %ard = f32[512]{0} all-reduce-done(f32[512]{0} %ars)
+  %rs = bf16[8,64]{1,0} reduce-scatter(bf16[128,64]{1,0} %z), dimensions={0}
+  %a2a = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(%a, %b), dimensions={0}
+  %cp = u32[2]{0} collective-permute(u32[2]{0} %c), source_target_pairs={{0,1}}
+  %notacoll = f32[99]{0} add(f32[99]{0} %d, f32[99]{0} %e)
+}
+"""
+
+
+def test_collective_parse_kinds_and_bytes():
+    out = collective_bytes(HLO)
+    counts = out.pop("_counts")
+    assert out["all-gather"] == 256 * 128 * 2
+    # sync all-reduce + async start (done skipped), x2 ring factor
+    assert out["all-reduce"] == (1024 * 4 + 512 * 4) * AR_FACTOR
+    assert counts["all-reduce"] == 2
+    assert out["reduce-scatter"] == 8 * 64 * 2
+    assert out["all-to-all"] == 2 * 4 * 4 * 4  # tuple result: both parts
+    assert out["collective-permute"] == 2 * 4
+    assert counts["collective-permute"] == 1
+
+
+def test_delta_extrapolation():
+    c1 = CellCosts(flops=100.0, bytes_accessed=10.0, coll_bytes=4.0,
+                   coll_by_kind={"all-reduce": 4.0}, coll_counts={"all-reduce": 2})
+    c2 = CellCosts(flops=150.0, bytes_accessed=16.0, coll_bytes=6.0,
+                   coll_by_kind={"all-reduce": 6.0}, coll_counts={"all-reduce": 3})
+    c40 = c1.delta_extrapolate(c2, 40)
+    assert c40.flops == 100 + 39 * 50
+    assert c40.bytes_accessed == 10 + 39 * 6
+    assert c40.coll_by_kind["all-reduce"] == 4 + 39 * 2
+    assert c40.coll_counts["all-reduce"] == 2 + 39 * 1
+
+
+def test_roofline_terms_and_dominance():
+    costs = CellCosts(flops=197e12, bytes_accessed=819e9, coll_bytes=100e9)
+    r = roofline(costs, n_chips=256, model_flops_global=197e12 * 256 * 0.5)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 1.0) < 1e-9
+    assert r.collective_s == 2.0
+    assert r.dominant == "collective"
+    assert abs(r.useful_ratio - 0.5) < 1e-9
+
+
+def test_model_flops_scaling_sanity():
+    cfg = get_config("granite-3-2b")
+    train = model_flops(cfg, SHAPES["train_4k"])
+    prefill = model_flops(cfg, SHAPES["prefill_32k"])
+    decode = model_flops(cfg, SHAPES["decode_32k"])
+    # 6ND rough check: ~2.5B params x 6 x 1M tokens ~ 1.6e16
+    assert 0.8e16 < train < 2.5e16
+    # prefill: same tokens, factor 2 instead of 6 (+ more attention) => less
+    assert prefill < train
+    # a decode token is vastly cheaper than a train step
+    assert decode < train / 1e3
+
+    moe = get_config("phi3.5-moe-42b-a6.6b")
+    dense_equiv = model_flops(moe, SHAPES["train_4k"])
+    # active params ~6.6B -> ~6*6.6e9*1.05e6 ~ 4e16
+    assert 2e16 < dense_equiv < 8e16
+
+
+def test_ssm_decode_flops_context_free():
+    cfg = get_config("mamba2-130m")
+    d32 = model_flops(cfg, SHAPES["decode_32k"])
+    d500 = model_flops(cfg, SHAPES["long_500k"])
+    # per-token SSM decode cost is context-length independent
+    assert abs(d32 / SHAPES["decode_32k"].global_batch
+               - d500 / SHAPES["long_500k"].global_batch) < 1e-6 * d32

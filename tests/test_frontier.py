@@ -1,0 +1,173 @@
+"""Frontier accounting unit tests — paper §3 worked examples and identities."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    advances_via_slack,
+    frontier_accounting,
+    frontier_advances,
+    per_stage_average_total,
+    per_stage_max_total,
+    slack,
+    window_shares,
+)
+
+# Figure 1 host-visible durations (data, fwd, bwd).
+FIG1 = np.array([[[6.0, 1.0, 1.2], [1.0, 1.0, 6.2], [1.1, 1.0, 6.0]]])
+
+
+def test_figure1_frontier_matches_paper():
+    res = frontier_accounting(FIG1)
+    np.testing.assert_allclose(res.advances[0], [6.0, 1.0, 1.2])
+    assert res.exposed_makespan[0] == pytest.approx(8.2)
+
+
+def test_figure1_per_stage_max_overcounts():
+    assert per_stage_max_total(FIG1)[0] == pytest.approx(13.2)
+
+
+def test_figure2_construction():
+    # Different rank bounds the frontier at each boundary: r0, r1, r2.
+    d = np.array([[[4.0, 1.0, 2.0], [3.0, 3.0, 1.5], [2.0, 3.0, 3.5]]])
+    res = frontier_accounting(d)
+    np.testing.assert_allclose(res.frontier[0], [4.0, 6.0, 8.5])
+    np.testing.assert_allclose(res.advances[0], [4.0, 2.0, 2.5])
+    np.testing.assert_array_equal(res.leader[0], [0, 1, 2])
+
+
+def test_sharp_nonidentifiable_case():
+    # r0=(10,0), r1=(0,10): charges 10 to data, 0 to backward (paper §4).
+    d = np.array([[[10.0, 0.0], [0.0, 10.0]]])
+    res = frontier_accounting(d)
+    np.testing.assert_allclose(res.frontier[0], [10.0, 10.0])
+    np.testing.assert_allclose(res.advances[0], [10.0, 0.0])
+
+
+def test_telescoping_identity_random():
+    rng = np.random.default_rng(0)
+    d = rng.exponential(1.0, size=(64, 16, 6))
+    res = frontier_accounting(d)
+    np.testing.assert_allclose(
+        res.advances.sum(axis=1), res.exposed_makespan, rtol=0, atol=1e-12
+    )
+
+
+def test_advances_nonnegative():
+    rng = np.random.default_rng(1)
+    d = rng.exponential(1.0, size=(32, 8, 6))
+    assert np.all(frontier_advances(d) >= 0)
+
+
+def test_slack_identity_eq3():
+    rng = np.random.default_rng(2)
+    d = rng.exponential(1.0, size=(16, 8, 6))
+    np.testing.assert_allclose(
+        frontier_advances(d), advances_via_slack(d), atol=1e-12
+    )
+
+
+def test_slack_nonnegative():
+    rng = np.random.default_rng(3)
+    d = rng.exponential(1.0, size=(8, 4, 5))
+    assert np.all(slack(d) >= -1e-12)
+
+
+def test_proposition1_bounds():
+    rng = np.random.default_rng(4)
+    for _ in range(50):
+        n, r, s = rng.integers(1, 8), rng.integers(1, 12), rng.integers(2, 9)
+        d = rng.exponential(1.0, size=(n, r, s))
+        res = frontier_accounting(d)
+        m = per_stage_max_total(d)
+        assert np.all(res.exposed_makespan <= m + 1e-12)
+        assert np.all(m <= min(r, s) * res.exposed_makespan + 1e-9)
+
+
+def test_proposition1_tightness():
+    # min(R,S) distinct rank-stage pairs each with duration D, zero elsewhere.
+    r = s = 4
+    d = np.zeros((1, r, s))
+    for i in range(min(r, s)):
+        d[0, i, i] = 3.0
+    res = frontier_accounting(d)
+    assert per_stage_max_total(d)[0] == pytest.approx(
+        min(r, s) * res.exposed_makespan[0]
+    )
+
+
+def test_proposition2_bounds():
+    rng = np.random.default_rng(5)
+    for _ in range(50):
+        n, r, s = rng.integers(1, 8), rng.integers(1, 12), rng.integers(2, 9)
+        d = rng.exponential(1.0, size=(n, r, s))
+        res = frontier_accounting(d)
+        avg = per_stage_average_total(d)
+        assert np.all(avg <= res.exposed_makespan + 1e-12)
+        assert np.all(res.exposed_makespan / r <= avg + 1e-12)
+
+
+def test_proposition2_tightness():
+    # One rank has total D, all others zero -> average = D/R.
+    d = np.zeros((1, 5, 3))
+    d[0, 2] = [1.0, 2.0, 3.0]
+    res = frontier_accounting(d)
+    assert per_stage_average_total(d)[0] == pytest.approx(
+        res.exposed_makespan[0] / 5
+    )
+
+
+def test_proposition3_measurement_stability():
+    rng = np.random.default_rng(6)
+    d = rng.exponential(1.0, size=(8, 6, 6))
+    eps = 1e-3
+    noise = rng.uniform(-eps, eps, size=d.shape)
+    pert = np.maximum(0.0, d + noise)
+    a0 = frontier_advances(d)
+    a1 = frontier_advances(pert)
+    f0 = frontier_accounting(d).frontier
+    f1 = frontier_accounting(pert).frontier
+    s_idx = np.arange(1, d.shape[2] + 1)
+    assert np.all(np.abs(f1 - f0) <= s_idx * eps + 1e-12)
+    assert np.all(np.abs(a1 - a0) <= (2 * s_idx - 1) * eps + 1e-12)
+
+
+def test_window_shares_eq2():
+    rng = np.random.default_rng(7)
+    d = rng.exponential(1.0, size=(20, 4, 6))
+    res = frontier_accounting(d)
+    shares = window_shares(res.advances, res.exposed_makespan)
+    assert shares.sum() == pytest.approx(1.0)
+    np.testing.assert_allclose(
+        shares, res.advances.sum(axis=0) / res.exposed_makespan.sum()
+    )
+
+
+def test_single_rank_reduces_to_local_vector():
+    d = np.array([[[1.0, 2.0, 3.0]]])
+    res = frontier_accounting(d)
+    np.testing.assert_allclose(res.advances[0], [1.0, 2.0, 3.0])
+    assert np.all(np.isinf(res.gap))
+
+
+def test_sync_displacement_charged_once():
+    """A slow data step forcing others to wait is charged once, to data."""
+    rng = np.random.default_rng(8)
+    n, r = 30, 8
+    d = np.abs(rng.normal([5, 20, 30], 0.1, size=(n, r, 3)))
+    d[:, 2, 0] += 100.0  # rank-2 data tail
+    # Displacement: backward contains the sync; others' backward absorbs wait.
+    pref = np.cumsum(d, axis=2)
+    sync = pref[:, :, 2].max(axis=1, keepdims=True)
+    d[:, :, 2] += sync - pref[:, :, 2]
+    res = frontier_accounting(d)
+    shares = res.shares()
+    assert shares[0] > 0.6  # data gets the exposed delay
+    # and the decomposition still telescopes exactly
+    np.testing.assert_allclose(res.advances.sum(axis=1), res.exposed_makespan)
+
+
+def test_rejects_negative_and_nonfinite():
+    with pytest.raises(ValueError):
+        frontier_accounting(np.array([[[1.0, -0.5]]]))
+    with pytest.raises(ValueError):
+        frontier_accounting(np.array([[[1.0, np.nan]]]))

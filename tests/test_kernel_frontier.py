@@ -1,0 +1,100 @@
+"""Pallas frontier kernel: shape/dtype sweep vs the pure-jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    all_stage_gains,
+    cohort_median_baseline,
+    frontier_accounting,
+)
+from repro.kernels.frontier import frontier_window, frontier_window_reference
+
+SHAPES = [
+    (1, 1, 2),      # degenerate single rank
+    (4, 3, 6),      # tiny
+    (8, 8, 6),      # paper default schema
+    (3, 127, 6),    # just under one lane tile
+    (3, 128, 6),    # exactly one lane tile
+    (3, 129, 6),    # spills into a second tile
+    (2, 512, 6),    # exactly the default r_tile
+    (2, 513, 7),    # multi-tile + odd stage count
+    (1, 1024, 8),   # multiple full tiles
+    (16, 32, 3),    # short schema
+    (5, 257, 12),   # stages beyond one sublane group
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _window(n, r, s, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    d = rng.exponential(1.0, size=(n, r, s)).astype(np.float32)
+    # inject a hidden-rank tail so gains/leaders are nontrivial
+    d[:, min(r - 1, 3), 0] += 4.0
+    return jnp.asarray(d, dtype=dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=[f"{n}x{r}x{s}" for n, r, s in SHAPES])
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_kernel_matches_oracle(shape, dtype):
+    n, r, s = shape
+    d = _window(n, r, s, dtype)
+    got = frontier_window(d)
+    want = frontier_window_reference(d)
+    np.testing.assert_allclose(got.frontier, want.frontier, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got.advances, want.advances, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got.leader), np.asarray(want.leader))
+    np.testing.assert_allclose(got.exposed, want.exposed, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got.shares, want.shares, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got.gains, want.gains, rtol=1e-4, atol=1e-5)
+    g_got, g_want = np.asarray(got.gap), np.asarray(want.gap)
+    finite = np.isfinite(g_want)
+    assert np.array_equal(finite, np.isfinite(g_got))
+    np.testing.assert_allclose(g_got[finite], g_want[finite], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("r_tile", [128, 256, 512])
+def test_kernel_r_tile_invariance(r_tile):
+    d = _window(4, 700, 6, jnp.float32)
+    got = frontier_window(d, r_tile=r_tile)
+    want = frontier_window_reference(d)
+    np.testing.assert_allclose(got.frontier, want.frontier, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got.leader), np.asarray(want.leader))
+
+
+def test_kernel_matches_core_numpy_path():
+    """Kernel, oracle and the numpy core must agree on the same window."""
+    d = np.asarray(_window(12, 64, 6, jnp.float32))
+    got = frontier_window(jnp.asarray(d))
+    core = frontier_accounting(d)
+    np.testing.assert_allclose(got.frontier, core.frontier, rtol=1e-5)
+    np.testing.assert_allclose(got.advances, core.advances, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got.shares, core.shares(), rtol=1e-4)
+    g_core = all_stage_gains(d, cohort_median_baseline(d))
+    np.testing.assert_allclose(got.gains, g_core, rtol=1e-4, atol=1e-5)
+
+
+def test_kernel_telescoping():
+    d = _window(8, 200, 6, jnp.float32)
+    got = frontier_window(d)
+    np.testing.assert_allclose(
+        np.asarray(got.advances).sum(axis=1), np.asarray(got.exposed), rtol=1e-5
+    )
+
+
+def test_explicit_baseline():
+    d = _window(6, 16, 6, jnp.float32)
+    b = jnp.ones_like(d) * 0.5
+    got = frontier_window(d, b)
+    want = frontier_window_reference(d, b)
+    np.testing.assert_allclose(got.gains, want.gains, rtol=1e-4, atol=1e-5)
+
+
+def test_leader_tie_breaks_to_lowest_rank():
+    d = np.zeros((1, 300, 4), dtype=np.float32)
+    d[0, 7] = [1, 1, 1, 1]
+    d[0, 250] = [1, 1, 1, 1]  # exact tie across tiles
+    got = frontier_window(jnp.asarray(d))
+    assert np.all(np.asarray(got.leader)[0] == 7)
+    # tied max => gap 0
+    np.testing.assert_allclose(np.asarray(got.gap)[0], 0.0, atol=1e-6)

@@ -1,0 +1,269 @@
+"""Labeler / contract / windows tests — Tables 11-13 semantics."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CO_CRITICAL,
+    DIRECT_EXPOSURE,
+    FRONTIER_ACCOUNTING,
+    GRADIENT_ACCUMULATION_AMBIGUOUS,
+    ROLE_AWARE_NEEDED,
+    SYNC_WAIT_DEPENDENT,
+    TELEMETRY_LIMITED,
+    EventSummary,
+    LabelerGates,
+    StageSchema,
+    WindowAggregator,
+    close_residual,
+    diagnose,
+    segmented_schema,
+    validate_window,
+)
+from repro.core.labeler import (
+    FORWARD_DEVICE_SUPPORTED,
+    FORWARD_EVENT_SCOPE_LIMITED,
+    FORWARD_HOST_OVERHEAD_SUSPECTED,
+)
+
+
+def _healthy(n=40, r=8, seed=0, s=6):
+    rng = np.random.default_rng(seed)
+    return np.abs(rng.normal([5, 20, 30, 2, 3, 1][:s], 0.3, size=(n, r, s)))
+
+
+def _displaced_data_tail(n=40, r=8, delay=120.0, seed=0):
+    """Hidden-rank data tail with backward-sync displacement."""
+    d = _healthy(n, r, seed)
+    d[:, 3, 0] += delay
+    pref = np.cumsum(d, axis=2)
+    sync = pref[:, :, 2].max(axis=1, keepdims=True)
+    d[:, :, 2] += sync - pref[:, :, 2]
+    return d
+
+
+SCHEMA8 = segmented_schema(world_size=8)
+
+
+class TestContract:
+    def test_valid_window(self):
+        rep = validate_window(_healthy(), SCHEMA8)
+        assert rep.valid and not rep.violations
+
+    def test_world_size_mismatch(self):
+        rep = validate_window(_healthy(r=4), SCHEMA8)
+        assert not rep.valid
+
+    def test_mixed_schema_hashes(self):
+        rep = validate_window(_healthy(), SCHEMA8, schema_hashes=["a", "b"])
+        assert not rep.valid and any("mixed" in v for v in rep.violations)
+
+    def test_missing_ranks(self):
+        rep = validate_window(_healthy(), SCHEMA8, present_ranks=[0, 1, 2])
+        assert rep.missing_ranks == (3, 4, 5, 6, 7)
+
+    def test_negative_durations_flagged(self):
+        d = _healthy()
+        d[0, 0, 0] = -1.0
+        rep = validate_window(d, SCHEMA8)
+        assert not rep.valid and not rep.local_usable
+
+    def test_residual_closure(self):
+        d = _healthy()
+        wall = d[..., :5].sum(-1) + 2.0  # 2s unexplained per step
+        closed, report = close_residual(d, wall, SCHEMA8)
+        np.testing.assert_allclose(closed[..., 5], 2.0 + d[..., 5] * 0, atol=1e-9)
+        assert report.residual_share > 0
+        assert report.overlap_share == 0
+
+    def test_overlap_error(self):
+        d = _healthy()
+        wall = d[..., :5].sum(-1) - 1.0  # spans overlap
+        _, report = close_residual(d, wall, SCHEMA8)
+        assert report.overlap_share > 0
+
+
+class TestLabeler:
+    def test_base_claim_always_present(self):
+        diag = diagnose(_healthy(), SCHEMA8)
+        assert diag.has(FRONTIER_ACCOUNTING)
+
+    def test_data_tail_routes_top1_data(self):
+        diag = diagnose(_displaced_data_tail(), SCHEMA8)
+        assert diag.routing_stages[0] == "data.next_wait"
+        assert diag.routing.size <= 2
+
+    def test_sync_wait_dependent_requires_w1(self):
+        d = _displaced_data_tail()
+        d0 = diagnose(d, SCHEMA8)
+        assert d0.has(CO_CRITICAL) and not d0.has(SYNC_WAIT_DEPENDENT)
+        d1 = diagnose(d, SCHEMA8, model_fit={"data.next_wait": 1})
+        assert d1.has(SYNC_WAIT_DEPENDENT)
+
+    def test_direct_exposure_on_transient_cohort_fault(self):
+        d = _healthy(n=60)
+        d[40:, :, 1] += 200.0  # all ranks slow in fwd for part of the window
+        diag = diagnose(d, SCHEMA8)
+        assert diag.has(DIRECT_EXPOSURE)
+        assert diag.routing_stages[0] == "model.fwd_loss_cpu_wall"
+
+    def test_role_aware_needed(self):
+        schema = SCHEMA8.with_world_size(8, roles=["pp0"] * 4 + ["pp1"] * 4)
+        diag = diagnose(_healthy(), schema)
+        assert diag.has(ROLE_AWARE_NEEDED)
+
+    def test_telemetry_limited_on_gather_failure(self):
+        diag = diagnose(_displaced_data_tail(), SCHEMA8, gather_ok=False)
+        assert diag.has(TELEMETRY_LIMITED)
+        # strong labels suppressed
+        assert not diag.has(SYNC_WAIT_DEPENDENT) and not diag.has(DIRECT_EXPOSURE)
+
+    def test_telemetry_limited_on_missing_ranks(self):
+        diag = diagnose(_healthy(), SCHEMA8, present_ranks=[0, 1, 2, 3])
+        assert diag.has(TELEMETRY_LIMITED)
+
+    def test_unusable_vector_returns_only_telemetry_limited(self):
+        d = _healthy()
+        d[0, 0, 0] = np.nan
+        diag = diagnose(d, SCHEMA8)
+        assert diag.labels == (TELEMETRY_LIMITED,)
+
+    def test_co_critical_two_stage_tie(self):
+        # Two stages alternate as the bottleneck: near-tied shares.
+        d = _healthy(n=40)
+        d[::2, :, 1] += 60.0  # fwd base 20 + 60 alternates with
+        d[1::2, :, 2] += 50.0  # bwd base 30 + 50: near-tied window shares
+        diag = diagnose(d, SCHEMA8)
+        assert diag.has(CO_CRITICAL)
+        assert "model.fwd_loss_cpu_wall" in diag.co_critical_stages
+        assert "model.backward_cpu_wall" in diag.co_critical_stages
+
+    def test_accumulation_collapsed_flag(self):
+        diag = diagnose(_healthy(), SCHEMA8, accumulation_collapsed=True)
+        assert diag.has(GRADIENT_ACCUMULATION_AMBIGUOUS)
+
+    def test_event_scope_limited(self):
+        ev = EventSummary(samples=2, ready_ratio=0.5, mean_device_ms=10, mean_cpu_wall_ms=12)
+        diag = diagnose(_healthy(), SCHEMA8, event=ev)
+        assert diag.has(FORWARD_EVENT_SCOPE_LIMITED)
+
+    def test_event_device_supported(self):
+        d = _healthy()
+        d[:, :, 1] += 100.0  # forward dominates, device time explains it
+        ev = EventSummary(samples=10, ready_ratio=1.0, mean_device_ms=118, mean_cpu_wall_ms=120)
+        diag = diagnose(d, SCHEMA8, event=ev)
+        assert diag.has(FORWARD_DEVICE_SUPPORTED)
+
+    def test_event_host_overhead(self):
+        d = _healthy()
+        d[:, :, 1] += 100.0  # forward cpu-wall high but device time low
+        ev = EventSummary(samples=10, ready_ratio=1.0, mean_device_ms=5, mean_cpu_wall_ms=120)
+        diag = diagnose(d, SCHEMA8, event=ev)
+        assert diag.has(FORWARD_HOST_OVERHEAD_SUSPECTED)
+
+    def test_denominator_floor_emits_raw_advances(self):
+        d = np.full((3, 4, 6), 1e-12)
+        gates = LabelerGates(denominator_floor=1.0)
+        diag = diagnose(d, SCHEMA8, gates=gates)
+        assert any("denominator" in r for r in diag.downgrade_reasons)
+
+    def test_single_rank_no_cross_rank_claims(self):
+        schema = segmented_schema(world_size=1)
+        d = _healthy(r=1)
+        d[:, :, 1] += 100.0
+        diag = diagnose(d, schema)
+        assert diag.has(FRONTIER_ACCOUNTING)
+        assert not diag.has(DIRECT_EXPOSURE)  # R=1: no cross-rank evidence
+
+
+class TestWindows:
+    def test_window_closes_at_size(self):
+        agg = WindowAggregator(segmented_schema(world_size=4), window_steps=5)
+        reports = []
+        for _ in range(12):
+            d = _healthy(n=1, r=4)[0]
+            rep = agg.add_step(d, d.sum(-1))
+            if rep:
+                reports.append(rep)
+        assert len(reports) == 2
+        assert all(r.steps == 5 for r in reports)
+
+    def test_schema_change_closes_window(self):
+        agg = WindowAggregator(segmented_schema(world_size=4), window_steps=100)
+        for _ in range(3):
+            d = _healthy(n=1, r=4)[0]
+            agg.add_step(d, d.sum(-1))
+        rep = agg.add_step(_healthy(n=1, r=8)[0], 1.0)  # world-size change
+        assert rep is not None and rep.closed_reason == "schema_change"
+        assert rep.steps == 3
+
+    def test_gather_failure_downgrades(self):
+        agg = WindowAggregator(segmented_schema(world_size=4), window_steps=3)
+        rep = None
+        for i in range(3):
+            d = _healthy(n=1, r=4)[0]
+            rep = agg.add_step(d, d.sum(-1), gather_ok=(i != 1))
+        assert rep is not None
+        assert rep.diagnosis.has(TELEMETRY_LIMITED)
+
+    def test_bounded_reports(self):
+        agg = WindowAggregator(
+            segmented_schema(world_size=2), window_steps=1, max_pending_reports=4
+        )
+        for _ in range(10):
+            d = _healthy(n=1, r=2)[0]
+            agg.add_step(d, d.sum(-1))
+        assert len(agg.reports) == 4  # bounded queue
+
+    def test_callback_never_raises(self):
+        def bad_callback(report):
+            raise RuntimeError("monitoring bug")
+
+        agg = WindowAggregator(
+            segmented_schema(world_size=2), window_steps=1, on_report=bad_callback
+        )
+        d = _healthy(n=1, r=2)[0]
+        rep = agg.add_step(d, d.sum(-1))  # must not raise
+        assert rep is not None
+
+
+class TestRoleAwareGrouping:
+    def test_grouped_diagnosis_recovers_per_role_routing(self):
+        """The role_aware_needed upgrade path: a global frontier is unsafe,
+        but per-role frontiers route each group's own fault."""
+        from repro.core.labeler import diagnose_grouped
+        from repro.sim import Fault
+        from repro.sim.scenarios import ddp_scenario
+        from repro.sim.cluster import simulate
+
+        roles = ("pp0",) * 4 + ("pp1",) * 4
+        sc = ddp_scenario(
+            world_size=8, steps=60, seed=0, roles=roles,
+            faults=(
+                Fault(1, "data.next_wait", 0.15),            # pp0 rank
+                Fault(6, "model.fwd_loss_cpu_wall", 0.15),   # pp1 rank
+            ),
+        )
+        res = simulate(sc)
+        schema = sc.schema()
+        global_diag = diagnose(res.durations, schema)
+        assert global_diag.has(ROLE_AWARE_NEEDED)
+        grouped = diagnose_grouped(res.durations, schema)
+        assert set(grouped) == {"pp0", "pp1"}
+        assert grouped["pp0"].routing_stages[0] == "data.next_wait"
+        assert grouped["pp0"].leader.leader_rank == 1  # local index == rank 1
+        assert grouped["pp1"].routing_stages[0] == "model.fwd_loss_cpu_wall"
+        assert grouped["pp1"].leader.leader_rank == 2  # rank 6 -> local 2
+        for g in grouped.values():
+            assert not g.has(ROLE_AWARE_NEEDED)
+
+    def test_grouped_present_ranks_remap(self):
+        from repro.core.labeler import diagnose_grouped
+
+        schema = segmented_schema(world_size=4).with_world_size(
+            4, roles=["a", "a", "b", "b"]
+        )
+        d = _healthy(n=10, r=4)
+        grouped = diagnose_grouped(d, schema, present_ranks=[0, 1, 2])
+        # role b is missing rank 3 -> telemetry_limited there only
+        assert grouped["b"].has(TELEMETRY_LIMITED)
+        assert not grouped["a"].has(TELEMETRY_LIMITED)

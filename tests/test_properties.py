@@ -1,0 +1,140 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra.numpy import arrays
+
+from repro.core import (
+    advances_via_slack,
+    all_stage_gains,
+    candidate_set,
+    cohort_median_baseline,
+    frontier_accounting,
+    per_stage_average_total,
+    per_stage_max_total,
+)
+from repro.core.gain import clipped_matrix
+
+durations = st.integers(1, 6).flatmap(
+    lambda n: st.integers(1, 9).flatmap(
+        lambda r: st.integers(2, 8).flatmap(
+            lambda s: arrays(
+                np.float64,
+                (n, r, s),
+                elements=st.floats(0.0, 1e6, allow_nan=False, allow_infinity=False),
+            )
+        )
+    )
+)
+
+
+@settings(max_examples=150, deadline=None)
+@given(durations)
+def test_telescoping_always_exact(d):
+    res = frontier_accounting(d)
+    np.testing.assert_allclose(
+        res.advances.sum(axis=1), res.exposed_makespan, rtol=1e-12, atol=1e-6
+    )
+
+
+@settings(max_examples=150, deadline=None)
+@given(durations)
+def test_advances_nonnegative_and_monotone_frontier(d):
+    res = frontier_accounting(d)
+    assert np.all(res.advances >= -1e-9)
+    assert np.all(np.diff(res.frontier, axis=1) >= -1e-9)
+
+
+@settings(max_examples=100, deadline=None)
+@given(durations)
+def test_slack_identity(d):
+    np.testing.assert_allclose(
+        frontier_accounting(d).advances,
+        advances_via_slack(d),
+        rtol=1e-10,
+        atol=1e-6,
+    )
+
+
+@settings(max_examples=100, deadline=None)
+@given(durations)
+def test_max_avg_bounds(d):
+    res = frontier_accounting(d)
+    n, r, s = d.shape
+    m = per_stage_max_total(d)
+    avg = per_stage_average_total(d)
+    tol = 1e-6 + 1e-9 * np.abs(m)
+    assert np.all(res.exposed_makespan <= m + tol)
+    assert np.all(m <= min(r, s) * res.exposed_makespan + tol)
+    assert np.all(avg <= res.exposed_makespan + tol)
+    assert np.all(res.exposed_makespan / r <= avg + tol)
+
+
+@settings(max_examples=60, deadline=None)
+@given(durations)
+def test_clipped_gain_nonnegative_and_bounded(d):
+    gains = all_stage_gains(d, cohort_median_baseline(d))
+    assert np.all(gains >= -1e-12)
+    assert np.all(gains <= 1.0 + 1e-12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(durations, st.integers(0, 7))
+def test_clipping_never_exceeds_observation(d, stage):
+    stage = stage % d.shape[2]
+    clipped = clipped_matrix(d, cohort_median_baseline(d), stage)
+    assert np.all(clipped <= d + 1e-12)
+    # exposed makespan never increases under clipping
+    f0 = frontier_accounting(d).exposed_makespan
+    f1 = frontier_accounting(clipped).exposed_makespan
+    assert np.all(f1 <= f0 + 1e-9)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    arrays(
+        np.float64,
+        st.integers(2, 10),
+        elements=st.floats(0.0, 1e3, allow_nan=False, allow_infinity=False),
+    ),
+    st.floats(0.5, 0.95),
+)
+def test_candidate_set_reaches_tau_and_is_minimal(scores, tau):
+    rs = candidate_set(scores, tau)
+    tot = scores.sum()
+    if tot <= 0:
+        assert rs.size == 0
+        return
+    p = np.asarray(rs.scores) / tot
+    cum = sum(p[i] for i in rs.stages)
+    assert cum >= tau - 1e-9
+    if rs.size > 1:
+        # dropping the last (smallest) candidate falls below tau: minimality
+        assert cum - p[rs.stages[-1]] < tau + 1e-12
+
+
+@settings(max_examples=60, deadline=None)
+@given(durations)
+def test_permuting_ranks_is_invariant(d):
+    """Frontier accounting is symmetric in ranks (no rank identity used)."""
+    perm = np.random.default_rng(0).permutation(d.shape[1])
+    a0 = frontier_accounting(d).advances
+    a1 = frontier_accounting(d[:, perm, :]).advances
+    np.testing.assert_allclose(a0, a1, rtol=1e-12, atol=1e-9)
+
+
+@settings(max_examples=60, deadline=None)
+@given(durations, st.floats(1e-3, 10.0))
+def test_scale_equivariance(d, c):
+    """Scaling all durations by c scales advances by c (clock-unit freedom)."""
+    a0 = frontier_accounting(d).advances
+    a1 = frontier_accounting(d * c).advances
+    np.testing.assert_allclose(a1, a0 * c, rtol=1e-9, atol=1e-6)
+
+
+@settings(max_examples=60, deadline=None)
+@given(durations)
+def test_adding_rank_never_decreases_frontier(d):
+    """Monotonicity: adding a rank can only raise (or keep) the frontier."""
+    f_all = frontier_accounting(d).frontier
+    f_drop = frontier_accounting(d[:, : max(1, d.shape[1] - 1), :]).frontier
+    assert np.all(f_all + 1e-9 >= f_drop)

@@ -1,0 +1,176 @@
+"""Telemetry runtime tests: recorder, device events, gather, packets."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import segmented_schema
+from repro.telemetry import (
+    DeviceEventChannel,
+    InProcTransport,
+    StageRecorder,
+    TelemetryGather,
+    decode_packet,
+    encode_packet,
+)
+from repro.telemetry.packets import EvidencePacket
+
+
+class TestRecorder:
+    def test_ordered_stages_and_residual(self):
+        rec = StageRecorder(segmented_schema())
+        with rec.step():
+            with rec.stage("data.next_wait"):
+                time.sleep(0.01)
+            with rec.stage("model.fwd_loss_cpu_wall"):
+                time.sleep(0.005)
+            time.sleep(0.004)  # untracked -> residual
+        r = rec.last()
+        assert r.durations["data.next_wait"] >= 0.009
+        assert r.durations["model.fwd_loss_cpu_wall"] >= 0.004
+        assert r.durations["step.other_cpu_wall"] >= 0.003
+        v = r.vector(rec.schema)
+        assert len(v) == 6 and abs(sum(v) - r.wall) < 2e-3
+
+    def test_nested_ordered_spans_rejected(self):
+        rec = StageRecorder(segmented_schema())
+        with rec.step():
+            with rec.stage("model.fwd_loss_cpu_wall"):
+                with rec.stage("model.backward_cpu_wall"):  # nested: dropped
+                    pass
+        assert rec.dropped_spans == 1
+        assert rec.last().durations.get("model.backward_cpu_wall", 0.0) == 0.0
+
+    def test_side_channel_allowed_nested(self):
+        rec = StageRecorder(segmented_schema())
+        with rec.step():
+            with rec.stage("model.fwd_loss_cpu_wall"):
+                with rec.side_channel("fwd_device_ms"):
+                    time.sleep(0.002)
+        assert rec.dropped_spans == 0
+        assert rec.last().side["fwd_device_ms"] >= 0.001
+
+    def test_prefetch_data_wait_charged_to_consuming_step(self):
+        rec = StageRecorder(segmented_schema())
+        with rec.stage("data.next_wait"):  # outside any step (prefetch)
+            time.sleep(0.005)
+        with rec.step():
+            pass
+        assert rec.last().durations["data.next_wait"] >= 0.004
+
+    def test_unknown_stage_dropped(self):
+        rec = StageRecorder(segmented_schema())
+        with rec.step():
+            with rec.stage("not.a.stage"):
+                pass
+        assert rec.dropped_spans == 1
+
+    def test_bounded_history(self):
+        rec = StageRecorder(segmented_schema(), max_history=3)
+        for _ in range(10):
+            with rec.step():
+                pass
+        assert len(rec.history) == 3
+
+
+class TestDeviceEvents:
+    class _Ready:
+        def is_ready(self):
+            return True
+
+    class _NotReady:
+        def is_ready(self):
+            return False
+
+    def test_sampling_period(self):
+        ch = DeviceEventChannel(0.05)
+        samples = [s for s in range(100) if ch.should_sample(s)]
+        assert samples == [0, 20, 40, 60, 80]
+        assert not DeviceEventChannel(0.0).should_sample(0)
+        assert DeviceEventChannel(1.0).should_sample(7)
+
+    def test_poll_ready(self):
+        ch = DeviceEventChannel(1.0)
+        ch.observe(0, self._Ready(), cpu_wall_ms=5.0)
+        out = ch.poll()
+        assert len(out) == 1 and out[0][0] == 0
+        assert ch.ready_ratio == 1.0
+
+    def test_bounded_pending(self):
+        ch = DeviceEventChannel(1.0, max_pending=2)
+        for i in range(5):
+            ch.observe(i, self._NotReady(), 1.0)
+        assert len(ch._pending) == 2 and ch.dropped == 3
+
+
+class TestGather:
+    def test_success(self):
+        tr = InProcTransport(4)
+        local = np.ones((10, 6))
+        for r in range(4):
+            tr.deposit(r, local * (r + 1))
+        res = TelemetryGather(tr, 0).gather_window(local)
+        assert res.ok and res.window.shape == (10, 4, 6)
+        assert np.all(res.window[:, 2, :] == 3.0)
+
+    def test_failed_rank_downgrades(self):
+        tr = InProcTransport(4, fail_ranks=frozenset({2}))
+        local = np.ones((5, 6))
+        for r in range(4):
+            tr.deposit(r, local)
+        res = TelemetryGather(tr, 0).gather_window(local)
+        assert not res.ok
+        assert 2 not in res.present_ranks
+        assert res.window is None  # never fabricate a full window
+
+    def test_timeout_downgrades(self):
+        tr = InProcTransport(2, slow_ranks=frozenset({1}), slow_delay_s=10.0)
+        res = TelemetryGather(tr, 0, timeout_s=0.1).gather_window(np.ones((2, 6)))
+        assert not res.ok and res.present_ranks == (0,)
+
+    def test_transport_exception_never_raises(self):
+        class Broken:
+            def allgather(self, *a, **k):
+                raise RuntimeError("link down")
+
+        res = TelemetryGather(Broken(), 0).gather_window(np.ones((2, 6)))
+        assert not res.ok and "transport" in res.error
+
+
+class TestPackets:
+    def _pkt(self, with_window=True):
+        return EvidencePacket(
+            window_index=3,
+            schema_hash="abc",
+            stages=("a", "b"),
+            steps=10,
+            world_size=8,
+            gather_ok=True,
+            labels=("frontier_accounting",),
+            routing_stages=("a",),
+            shares=(0.7, 0.3),
+            gains=(0.1, 0.0),
+            co_critical_stages=(),
+            downgrade_reasons=(),
+            leader_rank=5,
+            window=np.ones((10, 8, 2)) if with_window else None,
+        )
+
+    def test_roundtrip(self):
+        pkt = self._pkt()
+        out = decode_packet(encode_packet(pkt))
+        assert out.window_index == 3 and out.leader_rank == 5
+        np.testing.assert_array_equal(out.window, pkt.window)
+        assert out.shares == pkt.shares
+
+    def test_compact_mode(self):
+        pkt = self._pkt(with_window=False)
+        blob = encode_packet(pkt)
+        assert len(blob) < 1024
+        assert decode_packet(blob).window is None
+
+    def test_corruption_detected(self):
+        blob = bytearray(encode_packet(self._pkt()))
+        blob[-5] ^= 0xFF
+        with pytest.raises(ValueError, match="hash"):
+            decode_packet(bytes(blob))
