@@ -22,6 +22,7 @@ MODULES = [
     ("aba_accum_sharded", "paper E6/E7/E8: A/B/A, grad-accum, FSDP/ZeRO"),
     ("overhead", "paper Table 7 (E1): live-loop overhead bounds"),
     ("kernel_frontier", "fused frontier kernel throughput"),
+    ("fleet_scale", "fleet ingest jobs/sec + batched [J,N,R,S] accounting"),
 ]
 
 

@@ -1,12 +1,20 @@
-"""Fleet-scale monitoring demo: the Pallas kernel path + failure handling.
+"""Fleet-scale monitoring demo: the repro.fleet subsystem end-to-end.
 
     PYTHONPATH=src python examples/fleet_monitor.py
 
-Processes windows from a simulated 2048-rank fleet through the FUSED
-frontier kernel (one pass computes Eq. 2 shares, Eq. 4 gains, leaders and
-gaps), then exercises the failure-safe gather path: a node stops reporting,
-the window degrades to telemetry_limited, and the policy escalates to a
-checkpoint-and-reshard proposal after the configured persistence.
+Drives the streaming fleet pipeline over simulated jobs with heterogeneous
+faults:
+
+  1. a fleet of jobs (mixed DDP/FSDP/ZeRO-1 sync profiles) streams evidence
+     packets over the int8 wire format into a FleetService; injected E3
+     faults must surface in the top-K profiler routing with the seeded
+     stage and rank;
+  2. the incremental StreamingFrontier state matches the batch pass
+     bit-for-bit while never holding a [N, R, S] window;
+  3. failure drill: one job dies (evicted), one job's gather degrades
+     (telemetry_limited -> excluded from routing, dead ranks recorded);
+  4. the fused [J, N, R, S] fleet kernel re-accounts every window-carrying
+     job in one dispatch and agrees with the per-job path.
 """
 import sys
 
@@ -15,60 +23,70 @@ sys.path.insert(0, "src")
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import WindowAggregator, segmented_schema
-from repro.distributed.policy import MonitorPolicy
-from repro.kernels.frontier import frontier_window
+from repro.core import StreamingFrontier, frontier_accounting
+from repro.fleet import FleetService
+from repro.kernels.frontier import fleet_frontier_loop, fleet_frontier_window
+from repro.launch.serve_fleet import make_argparser, run
 from repro.sim import simulate
 from repro.sim.scenarios import hidden_rank_scenario
-from repro.telemetry.gather import InProcTransport, TelemetryGather
 
 
 def main() -> None:
-    # --- fused-kernel accounting on a 2048-rank window --------------------
-    sc = hidden_rank_scenario("data", world_size=2048, steps=50, seed=3,
+    # --- 1. heterogeneous fleet through the service ------------------------
+    args = make_argparser().parse_args(
+        ["--jobs", "9", "--ranks", "8", "--window", "20", "--rounds", "3",
+         "--top-k", "4", "--delay-ms", "250"]
+    )
+    summary = run(args)
+    print("fleet service summary:")
+    print(f"  jobs={summary['snapshot']['jobs']} "
+          f"degraded={summary['snapshot']['degraded_jobs']} "
+          f"evicted={summary['snapshot']['evicted_total']} "
+          f"wire bytes/packet={summary['wire_bytes_per_packet']}")
+    for r in summary["routing"]:
+        print(f"  route -> {r['job']}: {r['stage']} rank {r['rank']} "
+              f"score {r['score']}")
+    assert summary["snapshot"]["evicted_total"] >= 1, "dead job must evict"
+    assert summary["snapshot"]["degraded_jobs"] >= 1, "bad gather must degrade"
+    routed_jobs = {r["job"] for r in summary["routing"]}
+    faulted = {f"job-{j:03d}" for j in range(args.jobs)
+               if j % args.fault_every == 0 and j not in (1, 2)}
+    hits = {j for j in routed_jobs if j[:7] in faulted}
+    assert hits, f"faulted jobs must appear in routing, got {routed_jobs}"
+
+    # --- 2. streaming state == batch pass, bit-for-bit ----------------------
+    sc = hidden_rank_scenario("data", world_size=64, steps=40, seed=5,
                               delay_ms=180.0)
     res = simulate(sc)
-    pkt = frontier_window(jnp.asarray(res.durations, jnp.float32))
-    top = int(np.argmax(np.asarray(pkt.shares)))
-    leader = int(np.asarray(pkt.leader)[:, top][0])
-    print(f"fleet window (2048 ranks x 50 steps):")
-    print(f"  kernel shares: " + " ".join(
-        f"{s}={v:.2f}" for s, v in zip(sc.stages, np.asarray(pkt.shares)) if v > 0.02))
-    print(f"  top stage: {sc.stages[top]}  leader rank: {leader} "
-          f"(injected {sc.faults[0].rank})")
+    sf = StreamingFrontier(64, len(sc.stages), capacity=40)
+    for t in range(40):
+        sf.push(res.durations[t])
+    ref = frontier_accounting(res.durations)
+    st = sf.state()
+    assert np.array_equal(st.frontier, ref.frontier)
+    assert np.array_equal(st.advances, ref.advances)
+    assert np.array_equal(st.leader, ref.leader)
+    top = int(np.argmax(st.shares()))
+    print(f"\nstreaming engine: 40 steps folded, top stage "
+          f"{sc.stages[top]} (seeded {sc.faults[0].stage}) — bit-exact")
     assert top == res.seeded_stage_index()
-    assert leader == sc.faults[0].rank
 
-    # --- failure-safe gather + fail-slow escalation ------------------------
-    print("\nnode failure drill:")
-    world = 16
-    schema = segmented_schema(world_size=world)
-    policy = MonitorPolicy(reshard_after=3)
-    agg = WindowAggregator(schema, window_steps=10)
-    transport = InProcTransport(world, fail_ranks=frozenset({5}))
-    gatherer = TelemetryGather(transport, 0)
-    healthy = simulate(hidden_rank_scenario("data", world_size=world, steps=40,
-                                            seed=0, delay_ms=0.1))
-    actions = []
-    for w in range(4):
-        block = healthy.durations[w * 10:(w + 1) * 10]
-        for r in range(world):
-            transport.deposit(r, block[:, r, :]) if r != 5 else None
-        g = gatherer.gather_window(block[:, 0, :])
-        for t in range(block.shape[0]):
-            win = block[t] if g.ok else np.where(
-                np.arange(world)[:, None] == 5, 0.0, block[t])
-            rep = agg.add_step(win, win.sum(-1), gather_ok=g.ok,
-                               present_ranks=g.present_ranks)
-            if rep:
-                acts = policy.on_report(rep)
-                actions.extend(acts)
-                print(f"  window {rep.window_index}: gather_ok={g.ok} "
-                      f"labels={rep.diagnosis.labels}"
-                      + "".join(f" -> {a.kind}" for a in acts))
-    assert any(a.kind == "checkpoint_reshard" for a in actions), \
-        "fail-slow must escalate to fail-stop after persistence"
-    print("\nOK: kernel fleet accounting + fail-slow escalation both work")
+    # --- 3. fused fleet kernel: one dispatch for the whole fleet -----------
+    fleet = np.stack([
+        simulate(hidden_rank_scenario("data", world_size=256, steps=10,
+                                      seed=s, delay_ms=200.0)).durations
+        for s in range(4)
+    ]).astype(np.float32)                       # [J=4, N=10, R=256, S=6]
+    batched = fleet_frontier_window(jnp.asarray(fleet))
+    looped = fleet_frontier_loop(jnp.asarray(fleet))
+    np.testing.assert_allclose(batched.shares, looped.shares,
+                               rtol=1e-4, atol=1e-5)
+    tops = np.argmax(np.asarray(batched.shares), axis=1)
+    print(f"fleet kernel: 4 jobs x 256 ranks in one dispatch, "
+          f"top stages {[sc.stages[t] for t in tops]}")
+    assert (tops == 0).all(), "every job seeded a data fault"
+
+    print("\nOK: fleet service + streaming engine + fused fleet kernel")
 
 
 if __name__ == "__main__":

@@ -10,6 +10,7 @@ Layers:
   routing       compact candidate routing sets (tau_C prefix)
   accumulation  gradient-accumulation ordered-substage expansion
   windows       bounded streaming window aggregation
+  streaming     incremental one-step-at-a-time frontier engine (fleet path)
 """
 from .contract import (
     FUSED_STAGES,
@@ -63,6 +64,7 @@ from .accumulation import (
     expand_schema,
     semantic_groups,
 )
+from .streaming import StreamingFrontier, StreamingWindowState
 from .windows import WindowAggregator, WindowReport
 
 __all__ = [k for k in dir() if not k.startswith("_")]

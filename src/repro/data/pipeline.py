@@ -23,7 +23,13 @@ __all__ = ["SyntheticTokens", "PrefetchPipeline"]
 
 
 class SyntheticTokens:
-    """Pure-function token batches: LCG-mixed, label = next-token shift."""
+    """Pure-function token batches: LCG-mixed, label = next-token shift.
+
+    Tokens are power-law tilted (not uniform): a uniform stream has its
+    cross-entropy floor at exactly log(V), leaving an untrained model zero
+    headroom to improve; the tilt puts learnable unigram structure in the
+    stream so short smoke trainings show a real loss decrease.
+    """
 
     def __init__(
         self,
@@ -48,8 +54,9 @@ class SyntheticTokens:
             + cursor * self.num_shards + self.shard + 1
         ) % (2**63)
         rng = np.random.default_rng(key)
-        tokens = rng.integers(
-            0, self.vocab_size, size=(self.batch, self.seq + 1), dtype=np.int32
+        u = rng.random(size=(self.batch, self.seq + 1))
+        tokens = np.minimum(
+            (self.vocab_size * u**3).astype(np.int32), self.vocab_size - 1
         )
         return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
 

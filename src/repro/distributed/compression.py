@@ -14,8 +14,15 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["EFState", "init_ef", "compress_grads"]
+__all__ = [
+    "EFState",
+    "init_ef",
+    "compress_grads",
+    "quantize_i8",
+    "dequantize_i8",
+]
 
 
 class EFState(NamedTuple):
@@ -26,6 +33,50 @@ def init_ef(params: Any) -> EFState:
     return EFState(
         error=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
     )
+
+
+# ---------------------------------------------------------------------------
+# Symmetric int8 codec (shared math: gradient transform AND the fleet
+# telemetry wire format in repro.telemetry.packets / repro.fleet.ingest)
+# ---------------------------------------------------------------------------
+
+
+def quantize_i8(
+    x: np.ndarray, *, axis: int | None = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Symmetric int8 quantization: q = round(x / scale), scale = amax/127.
+
+    `axis=None` is the per-tensor scale of the gradient path; the telemetry
+    wire format passes the stage axis so each stage column keeps its own
+    dynamic range (a 100 ms backward must not flatten a 2 ms residual).
+
+    Returns (q int8 same-shape, scale float64 — scalar or per-slice).
+    """
+    xf = np.asarray(x, np.float64)
+    amax = np.abs(xf).max() if axis is None else np.abs(xf).max(
+        axis=tuple(i for i in range(xf.ndim) if i != axis % xf.ndim),
+        keepdims=False,
+    )
+    scale = np.maximum(amax, 1e-12) / 127.0
+    s = scale if axis is None else np.expand_dims(
+        scale, tuple(i for i in range(xf.ndim) if i != axis % xf.ndim)
+    )
+    q = np.clip(np.round(xf / s), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def dequantize_i8(
+    q: np.ndarray, scale: np.ndarray, *, axis: int | None = None
+) -> np.ndarray:
+    """Inverse of `quantize_i8` (up to the quantization error)."""
+    qf = np.asarray(q, np.float64)
+    if axis is None:
+        return qf * float(scale)
+    s = np.expand_dims(
+        np.asarray(scale, np.float64),
+        tuple(i for i in range(qf.ndim) if i != axis % qf.ndim),
+    )
+    return qf * s
 
 
 def _quantize_dequantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:

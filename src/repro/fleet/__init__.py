@@ -1,0 +1,24 @@
+"""repro.fleet — streaming multi-job aggregation (the fleet tier).
+
+One job's always-on signal is a 0.11 MB summary; a fleet's is a service
+that ingests those summaries from every concurrent job, keeps per-job
+frontier accounting incrementally up to date, and answers "which K jobs
+need a heavy profiler, and where" in one call.
+
+Layers:
+  ingest     failure-safe wire decoding (raw f64 or int8-compressed)
+  registry   bounded per-job streaming state + liveness/eviction
+  service    logical-clock service: submit / tick / refresh_batched / route
+"""
+from .ingest import FleetIngest, IngestStats
+from .registry import FleetRegistry, JobState
+from .service import FleetService, RouteEntry
+
+__all__ = [
+    "FleetIngest",
+    "FleetRegistry",
+    "FleetService",
+    "IngestStats",
+    "JobState",
+    "RouteEntry",
+]

@@ -1,0 +1,50 @@
+"""Fleet wire ingest: failure-safe evidence-packet decoding.
+
+The fleet boundary is hostile by construction — thousands of jobs ship
+packets over flaky transports, versions skew, payloads truncate.  The
+ingest layer applies the same contract as the telemetry gather (§5):
+malformed input is *counted and dropped*, never raised into the service
+loop.  Both wire encodings are accepted: raw float64 windows and the
+per-stage symmetric-int8 compressed form (the codec shared with
+`repro.distributed.compression`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..telemetry.packets import EvidencePacket, decode_packet
+
+__all__ = ["FleetIngest", "IngestStats"]
+
+
+@dataclasses.dataclass
+class IngestStats:
+    packets: int = 0
+    bytes: int = 0
+    decode_errors: int = 0
+
+    @property
+    def error_ratio(self) -> float:
+        total = self.packets + self.decode_errors
+        return self.decode_errors / total if total else 0.0
+
+
+class FleetIngest:
+    """Stateless decoder with drop counters (the fleet's gather contract)."""
+
+    def __init__(self):
+        self.stats = IngestStats()
+
+    def decode(self, data: bytes | EvidencePacket) -> EvidencePacket | None:
+        """Decode one wire payload; returns None (and counts) on any error."""
+        if isinstance(data, EvidencePacket):
+            self.stats.packets += 1
+            return data
+        try:
+            pkt = decode_packet(bytes(data))
+        except Exception:
+            self.stats.decode_errors += 1
+            return None
+        self.stats.packets += 1
+        self.stats.bytes += len(data)
+        return pkt

@@ -1,0 +1,193 @@
+"""Per-job registry: bounded streaming state for every job in the fleet.
+
+Each registered job owns a `StreamingFrontier` (O(window * S) state — the
+[N, R, S] window matrices are folded step-by-step and dropped, never
+accumulated), the last decoded packet summary, and liveness counters that
+mirror the failure-safe gather semantics of `repro.telemetry.gather`:
+
+  * a job whose packets report ``gather_ok=False`` accumulates a missing
+    streak; past ``degrade_after`` consecutive windows the job is marked
+    degraded and its absent ranks are recorded as dead (the fleet analogue
+    of the fail-slow -> fail-stop promotion in `distributed.policy`);
+  * a job that stops reporting entirely for ``evict_after`` ticks is
+    evicted — symmetric failure-safe collection, bounded registry.
+
+Degraded jobs stay visible (operators need to see them) but are excluded
+from profiler routing: telemetry-quality labels never trigger
+workload-touching actions.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.streaming import StreamingFrontier
+from ..telemetry.packets import EvidencePacket
+
+__all__ = ["JobState", "FleetRegistry"]
+
+_STRONG_LABELS = frozenset(
+    {"direct_exposure", "sync_wait_dependent", "likely_sync_wait"}
+)
+
+
+@dataclasses.dataclass
+class JobState:
+    """Mutable per-job record held by the registry."""
+
+    job_id: str
+    stages: tuple[str, ...]
+    world_size: int
+    schema_hash: str
+    streaming: StreamingFrontier
+    #: last full [N, R, S] window (f32, only when packets ship windows);
+    #: feeds the batched fleet-kernel refresh, which releases it — raw
+    #: windows are consumed, never accumulated.
+    last_window: np.ndarray | None = None
+    last_packet: EvidencePacket | None = None
+    last_tick: int = 0
+    windows_seen: int = 0
+    missing_streak: int = 0
+    dead_ranks: frozenset[int] = frozenset()
+    degraded: bool = False
+    #: kernel-refreshed per-stage shares/gains ([S] each, None until a
+    #: batched refresh has covered this job).
+    kernel_shares: np.ndarray | None = None
+    kernel_gains: np.ndarray | None = None
+    kernel_leader: int = -1
+
+    @property
+    def labels(self) -> tuple[str, ...]:
+        return self.last_packet.labels if self.last_packet else ()
+
+    @property
+    def has_strong_evidence(self) -> bool:
+        return bool(_STRONG_LABELS & set(self.labels))
+
+    def shares(self) -> np.ndarray:
+        """Freshest per-stage shares: kernel > streaming > packet header."""
+        if self.kernel_shares is not None:
+            return self.kernel_shares
+        if self.streaming.num_steps:
+            return self.streaming.shares()
+        if self.last_packet is not None:
+            return np.asarray(self.last_packet.shares)
+        return np.zeros(len(self.stages))
+
+    def urgency(self) -> float:
+        """Scalar 'how much does this job need a heavy profiler' score."""
+        if self.degraded or self.last_packet is None:
+            return 0.0
+        sh = self.shares()
+        top_share = float(sh.max()) if sh.size else 0.0
+        top_gain = max(self.last_packet.gains, default=0.0)
+        if self.kernel_gains is not None and self.kernel_gains.size:
+            top_gain = max(top_gain, float(self.kernel_gains.max()))
+        return (2.0 if self.has_strong_evidence else 0.0) + top_share + top_gain
+
+
+class FleetRegistry:
+    """Bounded job table with tick-based liveness."""
+
+    def __init__(self, *, window_capacity: int = 100, evict_after: int = 10,
+                 degrade_after: int = 3, max_jobs: int = 100_000):
+        self.window_capacity = window_capacity
+        self.evict_after = evict_after
+        self.degrade_after = degrade_after
+        self.max_jobs = max_jobs
+        self.rejected_total = 0
+        self.duplicate_total = 0
+        self._jobs: dict[str, JobState] = {}
+
+    # -- updates -----------------------------------------------------------
+
+    def update(
+        self, job_id: str, pkt: EvidencePacket, tick: int
+    ) -> JobState | None:
+        """Fold one decoded packet into the job's state (creates the job).
+
+        Returns None when the registry is full and `job_id` is new: bounded
+        state means refusing registrations, never silently deleting a live
+        job.  Refusals are counted in `rejected_total`.
+        """
+        job = self._jobs.get(job_id)
+        if job is None or job.schema_hash != pkt.schema_hash:
+            if job is None and len(self._jobs) >= self.max_jobs:
+                self.rejected_total += 1
+                return None
+            # new job, or schema break: restart the stream (Table 11 rule —
+            # never merge rows across schema hashes).
+            job = JobState(
+                job_id=job_id,
+                stages=tuple(pkt.stages),
+                world_size=pkt.world_size,
+                schema_hash=pkt.schema_hash,
+                streaming=StreamingFrontier(
+                    pkt.world_size, len(pkt.stages),
+                    capacity=self.window_capacity,
+                ),
+            )
+            self._jobs[job_id] = job
+        elif (
+            job.last_packet is not None
+            and pkt.window_index == job.last_packet.window_index
+        ):
+            # transport retry re-delivered a window already folded: refresh
+            # liveness only, never double-count the window.
+            self.duplicate_total += 1
+            job.last_tick = tick
+            return job
+        job.last_tick = tick
+        job.windows_seen += 1
+        job.last_packet = pkt
+
+        if pkt.gather_ok:
+            job.missing_streak = 0
+            job.degraded = False
+            job.dead_ranks = frozenset()   # a healthy gather clears the set
+        else:
+            job.missing_streak += 1
+            if job.missing_streak >= self.degrade_after:
+                job.degraded = True
+                if pkt.present_ranks:
+                    job.dead_ranks = frozenset(
+                        set(range(pkt.world_size)) - set(pkt.present_ranks)
+                    )
+
+        if pkt.window is not None:
+            w = np.asarray(pkt.window, np.float64)
+            if w.ndim == 3 and w.shape[1:] == (pkt.world_size, len(pkt.stages)):
+                job.streaming.push_many(w)
+                # f32 is what the kernel consumes; half the pinned bytes,
+                # and refresh_batched() releases it after the refresh.
+                job.last_window = w.astype(np.float32)
+                # a fresh raw window invalidates the last kernel refresh
+                job.kernel_shares = None
+                job.kernel_gains = None
+                job.kernel_leader = -1
+        return job
+
+    def evict_stale(self, tick: int) -> list[str]:
+        """Drop jobs silent for >= evict_after ticks; returns evicted ids."""
+        stale = [
+            jid for jid, j in self._jobs.items()
+            if tick - j.last_tick >= self.evict_after
+        ]
+        for jid in stale:
+            del self._jobs[jid]
+        return stale
+
+    # -- reads -------------------------------------------------------------
+
+    def get(self, job_id: str) -> JobState | None:
+        return self._jobs.get(job_id)
+
+    def jobs(self) -> list[JobState]:
+        return list(self._jobs.values())
+
+    def __len__(self) -> int:
+        return len(self._jobs)
+
+    def __contains__(self, job_id: str) -> bool:
+        return job_id in self._jobs

@@ -1,0 +1,192 @@
+"""Fleet aggregation service: ingest -> registry -> top-K profiler routing.
+
+The serving loop of the always-on signal at fleet scale:
+
+  1. `submit()` decodes one wire packet (failure-safe) and folds it into
+     the job's streaming frontier state — incremental, no batch re-run;
+  2. `refresh_batched()` stacks the jobs that shipped raw windows into one
+     [J, N, R, S] tensor per shape group and runs the fused fleet kernel
+     (jobs on the grid dimension): fleet-wide shares/gains/leaders in one
+     pass instead of J dispatches;
+  3. `route(k)` answers the operator question the paper poses — *where do
+     I aim the heavy profiler* — across the whole fleet: the top-K
+     non-degraded jobs by urgency, each with its (stage, rank) target.
+
+Ticks are logical: callers advance `tick()` per aggregation round; jobs
+silent for `evict_after` ticks are evicted (bounded state, dead jobs never
+pin memory).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+import numpy as np
+
+from ..telemetry.packets import EvidencePacket
+from .ingest import FleetIngest
+from .registry import FleetRegistry, JobState
+
+__all__ = ["FleetService", "RouteEntry"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteEntry:
+    """One 'aim the profiler here' answer."""
+
+    job_id: str
+    stage: str
+    rank: int
+    score: float
+    window_index: int
+    labels: tuple[str, ...]
+
+
+class FleetService:
+    def __init__(
+        self,
+        *,
+        window_capacity: int = 100,
+        evict_after: int = 10,
+        degrade_after: int = 3,
+        max_jobs: int = 100_000,
+    ):
+        self.ingest = FleetIngest()
+        self.registry = FleetRegistry(
+            window_capacity=window_capacity,
+            evict_after=evict_after,
+            degrade_after=degrade_after,
+            max_jobs=max_jobs,
+        )
+        self._tick = 0
+        self.evicted_total = 0
+
+    # -- ingest ------------------------------------------------------------
+
+    @property
+    def current_tick(self) -> int:
+        return self._tick
+
+    def submit(
+        self, job_id: str, data: bytes | EvidencePacket
+    ) -> JobState | None:
+        """Ingest one packet for `job_id`; returns the job state, or None
+        if the payload was undecodable (counted, never raised)."""
+        pkt = self.ingest.decode(data)
+        if pkt is None:
+            return None
+        return self.registry.update(job_id, pkt, self._tick)
+
+    def tick(self) -> list[str]:
+        """Advance the logical clock; evicts and returns stale job ids."""
+        self._tick += 1
+        evicted = self.registry.evict_stale(self._tick)
+        self.evicted_total += len(evicted)
+        return evicted
+
+    # -- batched kernel refresh --------------------------------------------
+
+    def refresh_batched(self, *, min_jobs: int = 2) -> int:
+        """Re-account every *dirty* window-carrying job through the fused
+        fleet kernel, grouped by window shape.  Returns jobs refreshed.
+
+        Dirty = a new raw window arrived since the last refresh (the
+        registry nulls `kernel_shares` on ingest), so per-tick cost scales
+        with updated jobs, not fleet size.  Groups smaller than `min_jobs`
+        are left to their streaming state — a one-job batch is just the
+        single-job kernel with extra steps.
+        """
+        from ..kernels.frontier import fleet_frontier_window
+
+        groups: dict[tuple[int, int, int], list[JobState]] = defaultdict(list)
+        for job in self.registry.jobs():
+            if (
+                job.last_window is not None
+                and not job.degraded
+                and job.kernel_shares is None
+            ):
+                groups[job.last_window.shape].append(job)
+
+        refreshed = 0
+        for shape, jobs in sorted(groups.items()):
+            if len(jobs) < min_jobs:
+                continue
+            stacked = np.stack([j.last_window for j in jobs])
+            pkt = fleet_frontier_window(stacked)
+            shares = np.asarray(pkt.shares)          # [J, S]
+            gains = np.asarray(pkt.gains)            # [J, S]
+            leader = np.asarray(pkt.leader)          # [J, N, S]
+            for i, job in enumerate(jobs):
+                job.kernel_shares = shares[i]
+                job.kernel_gains = gains[i]
+                top = int(np.argmax(shares[i]))
+                # mode of the per-step leader at the top boundary
+                ranks, counts = np.unique(leader[i, :, top], return_counts=True)
+                job.kernel_leader = int(ranks[np.argmax(counts)])
+                # raw window consumed: release it (bounded registry state)
+                job.last_window = None
+                refreshed += 1
+        return refreshed
+
+    # -- routing -----------------------------------------------------------
+
+    def route(self, k: int = 10) -> list[RouteEntry]:
+        """Top-K jobs needing a heavy profiler, most urgent first.
+
+        Degraded (telemetry_limited) jobs never appear: quality labels
+        must not trigger workload-touching actions.
+        """
+        scored = sorted(
+            ((job.urgency(), job) for job in self.registry.jobs()),
+            key=lambda t: (-t[0], t[1].job_id),
+        )
+        out: list[RouteEntry] = []
+        for score, job in scored:
+            if len(out) >= k or score <= 0.0:
+                break
+            pkt = job.last_packet
+            # (stage, rank) must come from the SAME evidence source: the
+            # kernel refresh when fresh, else the last packet's own routing
+            # — never a stage from one window paired with another's leader.
+            if job.kernel_shares is not None and job.kernel_leader >= 0:
+                stage = job.stages[int(np.argmax(job.kernel_shares))]
+                rank = job.kernel_leader
+            else:
+                stage = (
+                    pkt.routing_stages[0]
+                    if pkt and pkt.routing_stages
+                    else (
+                        job.stages[int(np.argmax(pkt.shares))]
+                        if pkt and pkt.shares
+                        else ""
+                    )
+                )
+                rank = pkt.leader_rank if pkt else -1
+            out.append(
+                RouteEntry(
+                    job_id=job.job_id,
+                    stage=stage,
+                    rank=rank,
+                    score=float(score),
+                    window_index=pkt.window_index if pkt else -1,
+                    labels=job.labels,
+                )
+            )
+        return out
+
+    # -- summaries ---------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        jobs = self.registry.jobs()
+        return {
+            "tick": self._tick,
+            "jobs": len(jobs),
+            "degraded_jobs": sum(1 for j in jobs if j.degraded),
+            "evicted_total": self.evicted_total,
+            "rejected_total": self.registry.rejected_total,
+            "duplicate_total": self.registry.duplicate_total,
+            "packets": self.ingest.stats.packets,
+            "bytes": self.ingest.stats.bytes,
+            "decode_errors": self.ingest.stats.decode_errors,
+            "windows_seen": sum(j.windows_seen for j in jobs),
+        }

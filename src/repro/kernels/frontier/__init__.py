@@ -1,9 +1,19 @@
-from .ops import FrontierPacket, frontier_window, frontier_window_reference
+from .ops import (
+    FleetPacket,
+    FrontierPacket,
+    fleet_frontier_loop,
+    fleet_frontier_window,
+    frontier_window,
+    frontier_window_reference,
+)
 from .ref import FrontierWindow, frontier_window_ref
 
 __all__ = [
+    "FleetPacket",
     "FrontierPacket",
     "FrontierWindow",
+    "fleet_frontier_loop",
+    "fleet_frontier_window",
     "frontier_window",
     "frontier_window_ref",
     "frontier_window_reference",

@@ -39,22 +39,12 @@ def _merge_second(m1, s1, m2, s2):
     return jnp.maximum(jnp.minimum(m1, m2), jnp.maximum(s1, s2))
 
 
-def _frontier_kernel(
-    d_ref,      # [1, S_pad, R_TILE] durations tile (stage-major, rank lanes)
-    b_ref,      # [1, S_pad, R_TILE] clipped-gain baseline tile
-    f_ref,      # out [1, S_pad] frontier
-    lead_ref,   # out [1, S_pad] leader (global rank idx)
-    sec_ref,    # out [1, S_pad] second max
-    clip_ref,   # out [1, S_pad] clipped final makespan per stage
-    *,
-    r_total: int,
-    r_tile: int,
-    s_pad: int,
-):
-    j = pl.program_id(1)
-    d = d_ref[0].astype(jnp.float32)            # [S_pad, R_TILE]
-    b = b_ref[0].astype(jnp.float32)
+def _tile_reduce(d, b, j, *, r_total: int, r_tile: int, s_pad: int):
+    """Per-tile reduction shared by the single-job and fleet kernels.
 
+    d, b: [S_pad, R_TILE] f32 tiles of tile index j.
+    Returns (f_t, lead_t, sec_t, clip_t), each [S_pad].
+    """
     # Global lane indices for this tile and validity mask for padded ranks.
     lane = jax.lax.broadcasted_iota(jnp.int32, (s_pad, r_tile), 1)
     gidx = lane + j * r_tile                     # [S_pad, R_TILE]
@@ -76,6 +66,30 @@ def _frontier_kernel(
     excess = jnp.maximum(0.0, d - b)             # [S_pad, R_TILE]
     final = prefix[s_pad - 1, :][None, :]        # [1, R_TILE] (valid-masked)
     clip_t = jnp.where(valid, final - excess, NEG_INF).max(axis=1)
+    return f_t, lead_t, sec_t, clip_t
+
+
+def _frontier_kernel(
+    d_ref,      # [1, S_pad, R_TILE] durations tile (stage-major, rank lanes)
+    b_ref,      # [1, S_pad, R_TILE] clipped-gain baseline tile
+    f_ref,      # out [1, S_pad] frontier
+    lead_ref,   # out [1, S_pad] leader (global rank idx)
+    sec_ref,    # out [1, S_pad] second max
+    clip_ref,   # out [1, S_pad] clipped final makespan per stage
+    *,
+    r_total: int,
+    r_tile: int,
+    s_pad: int,
+):
+    j = pl.program_id(1)
+    f_t, lead_t, sec_t, clip_t = _tile_reduce(
+        d_ref[0].astype(jnp.float32),
+        b_ref[0].astype(jnp.float32),
+        j,
+        r_total=r_total,
+        r_tile=r_tile,
+        s_pad=s_pad,
+    )
 
     @pl.when(j == 0)
     def _init():
@@ -147,3 +161,9 @@ def frontier_window_kernel(
         ],
         interpret=interpret,
     )(d_srp, b_srp)
+
+
+# The fleet route ([J, N, R, S] — see ops.fleet_frontier_window) reuses this
+# kernel unchanged: per-step accounting is independent, so stacked jobs fold
+# into the leading grid dimension as a [J*N, ...] reshape — one dispatch for
+# the whole fleet, no second kernel to keep in sync.

@@ -56,13 +56,67 @@ def frontier_window(
 
     baseline defaults to the cohort median (cross-rank, per-stage) — the
     hidden-rank-exposing default of the labeler.
+
+    Implemented as the J=1 squeeze of the fleet route: one copy of the
+    transpose/pad/dispatch/postprocess wrapper serves both.
     """
-    n, r, s = d.shape
+    p = fleet_frontier_window(
+        d[None],
+        None if baseline is None else baseline[None],
+        r_tile=r_tile,
+        interpret=interpret,
+    )
+    return FrontierPacket(
+        frontier=p.frontier[0],
+        advances=p.advances[0],
+        leader=p.leader[0],
+        gap=p.gap[0],
+        exposed=p.exposed[0],
+        shares=p.shares[0],
+        gains=p.gains[0],
+    )
+
+
+class FleetPacket(NamedTuple):
+    """Per-job evidence packets for a stacked fleet tensor d[J, N, R, S]."""
+
+    frontier: jax.Array   # [J, N, S]
+    advances: jax.Array   # [J, N, S]
+    leader: jax.Array     # [J, N, S] i32
+    gap: jax.Array        # [J, N, S]
+    exposed: jax.Array    # [J, N]
+    shares: jax.Array     # [J, S]   Eq. 2 per job
+    gains: jax.Array      # [J, S]   Eq. 4 per job
+
+
+def _fleet_median_baseline(d: jax.Array) -> jax.Array:
+    """Per-job cohort median baseline (cross-rank, cross-step, per-stage)."""
+    jn, n, r, s = d.shape
+    med = jnp.median(d.reshape(jn, n * r, s), axis=1)       # [J, S]
+    return jnp.broadcast_to(med[:, None, None, :], d.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("r_tile", "interpret"))
+def fleet_frontier_window(
+    d: jax.Array,
+    baseline: jax.Array | None = None,
+    *,
+    r_tile: int | None = None,
+    interpret: bool | None = None,
+) -> FleetPacket:
+    """Batched frontier accounting of a stacked-jobs tensor d[J, N, R, S].
+
+    One fused pallas dispatch covers every job: the (job, step) pairs fold
+    into the kernel's leading grid dimension (per-step math is independent,
+    so [J, N, ...] -> [J*N, ...] is exact), and per-job shares/gains come
+    from the tiny [J, N, S] accumulators.  The baseline defaults to each
+    job's own cohort median — jobs never share a baseline (heterogeneous
+    workloads are not comparable).
+    """
+    jn, n, r, s = d.shape
     d = d.astype(jnp.float32)
     if baseline is None:
-        baseline = jnp.broadcast_to(
-            jnp.median(d.reshape(n * r, s), axis=0)[None, None, :], d.shape
-        )
+        baseline = _fleet_median_baseline(d)
     baseline = jnp.broadcast_to(baseline.astype(jnp.float32), d.shape)
     if interpret is None:
         interpret = not _on_tpu()
@@ -73,22 +127,52 @@ def frontier_window(
     r_pad = _pad_to(r, r_tile)
     # stage-major transpose + pad (padded stages add 0 to every prefix;
     # padded ranks are masked inside the kernel).
-    dt = jnp.transpose(d, (0, 2, 1))
-    bt = jnp.transpose(baseline, (0, 2, 1))
-    dt = jnp.pad(dt, ((0, 0), (0, s_pad - s), (0, r_pad - r)))
-    bt = jnp.pad(bt, ((0, 0), (0, s_pad - s), (0, r_pad - r)))
+    dt = jnp.transpose(d, (0, 1, 3, 2)).reshape(jn * n, s, r)
+    bt = jnp.transpose(baseline, (0, 1, 3, 2)).reshape(jn * n, s, r)
+    pad = ((0, 0), (0, s_pad - s), (0, r_pad - r))
+    dt = jnp.pad(dt, pad)
+    bt = jnp.pad(bt, pad)
 
     f, lead, sec, clip = frontier_window_kernel(
         dt, bt, r_total=r, r_tile=r_tile, interpret=interpret
     )
-    f, lead, sec, clip = f[:, :s], lead[:, :s], sec[:, :s], clip[:, :s]
-    advances = jnp.diff(f, axis=1, prepend=0.0)
-    gap = f - sec                              # sec = -inf when R == 1
-    exposed = f[:, -1]
-    denom = jnp.maximum(exposed.sum(), 1e-30)
-    shares = advances.sum(axis=0) / denom
-    gains = jnp.maximum(0.0, (exposed[:, None] - clip).sum(axis=0)) / denom
-    return FrontierPacket(f, advances, lead, gap, exposed, shares, gains)
+    f = f[:, :s].reshape(jn, n, s)
+    lead = lead[:, :s].reshape(jn, n, s)
+    sec = sec[:, :s].reshape(jn, n, s)
+    clip = clip[:, :s].reshape(jn, n, s)
+    advances = jnp.diff(f, axis=2, prepend=0.0)
+    gap = f - sec                               # sec = -inf when R == 1
+    exposed = f[:, :, -1]                       # [J, N]
+    denom = jnp.maximum(exposed.sum(axis=1), 1e-30)          # [J]
+    shares = advances.sum(axis=1) / denom[:, None]
+    gains = (
+        jnp.maximum(0.0, (exposed[:, :, None] - clip).sum(axis=1))
+        / denom[:, None]
+    )
+    return FleetPacket(f, advances, lead, gap, exposed, shares, gains)
+
+
+def fleet_frontier_loop(
+    d: jax.Array, baseline: jax.Array | None = None
+) -> FleetPacket:
+    """Naive per-job loop over `frontier_window` — the fleet baseline.
+
+    Dispatches J separate kernels; exists so the fleet benchmark and tests
+    can compare the one-pass batched route against it.
+    """
+    packets = [
+        frontier_window(d[j], None if baseline is None else baseline[j])
+        for j in range(d.shape[0])
+    ]
+    return FleetPacket(
+        frontier=jnp.stack([p.frontier for p in packets]),
+        advances=jnp.stack([p.advances for p in packets]),
+        leader=jnp.stack([p.leader for p in packets]),
+        gap=jnp.stack([p.gap for p in packets]),
+        exposed=jnp.stack([p.exposed for p in packets]),
+        shares=jnp.stack([p.shares for p in packets]),
+        gains=jnp.stack([p.gains for p in packets]),
+    )
 
 
 def frontier_window_reference(

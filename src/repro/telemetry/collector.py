@@ -139,6 +139,7 @@ class Monitor:
                 window.shape[1],
                 report.window_index,
                 window=report.durations if self.keep_windows else None,
+                present_ranks=tuple(present) if present is not None else (),
             )
             self.packets.append(pkt)
             acts = self.policy.on_report(report)

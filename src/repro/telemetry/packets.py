@@ -17,6 +17,7 @@ from typing import Any
 import numpy as np
 
 from ..core.labeler import Diagnosis
+from ..distributed.compression import dequantize_i8, quantize_i8
 
 __all__ = ["EvidencePacket", "encode_packet", "decode_packet"]
 
@@ -38,6 +39,8 @@ class EvidencePacket:
     co_critical_stages: tuple[str, ...]
     downgrade_reasons: tuple[str, ...]
     leader_rank: int
+    #: ranks that contributed to the window gather; () = all present.
+    present_ranks: tuple[int, ...] = ()
     #: full [N, R, S] matrix (None in compact mode)
     window: np.ndarray | None = None
 
@@ -53,6 +56,7 @@ def from_diagnosis(
     world_size: int,
     window_index: int,
     window: np.ndarray | None = None,
+    present_ranks: tuple[int, ...] = (),
 ) -> EvidencePacket:
     return EvidencePacket(
         window_index=window_index,
@@ -68,11 +72,17 @@ def from_diagnosis(
         co_critical_stages=diag.co_critical_stages,
         downgrade_reasons=diag.downgrade_reasons,
         leader_rank=diag.leader.leader_rank if diag.leader else -1,
+        present_ranks=tuple(present_ranks),
         window=window,
     )
 
 
-def encode_packet(p: EvidencePacket) -> bytes:
+def encode_packet(p: EvidencePacket, *, compress: str = "none") -> bytes:
+    """Serialize a packet.  `compress="int8"` ships the window matrix as
+    per-stage symmetric int8 (the fleet wire format: 8x smaller payloads,
+    same codec as the gradient path in repro.distributed.compression)."""
+    if compress not in ("none", "int8"):
+        raise ValueError(f"unknown compression {compress!r}")
     header: dict[str, Any] = {
         k: v
         for k, v in dataclasses.asdict(p).items()
@@ -85,10 +95,20 @@ def encode_packet(p: EvidencePacket) -> bytes:
     buf.write(head)
     if p.window is not None:
         w = np.ascontiguousarray(p.window, np.float64)
-        meta = json.dumps({"shape": w.shape, "dtype": "float64"}).encode()
+        if compress == "int8":
+            q, scale = quantize_i8(w, axis=-1)
+            meta_d: dict[str, Any] = {
+                "shape": w.shape,
+                "dtype": "int8",
+                "scales": [float(v) for v in np.atleast_1d(scale)],
+            }
+            raw = np.ascontiguousarray(q).tobytes()
+        else:
+            meta_d = {"shape": w.shape, "dtype": "float64"}
+            raw = w.tobytes()
+        meta = json.dumps(meta_d).encode()
         buf.write(len(meta).to_bytes(4, "little"))
         buf.write(meta)
-        raw = w.tobytes()
         buf.write(hashlib.sha256(raw).digest()[:8])  # provenance hash
         buf.write(raw)
     else:
@@ -114,7 +134,12 @@ def decode_packet(data: bytes) -> EvidencePacket:
         raw = data[off:]
         if hashlib.sha256(raw).digest()[:8] != digest:
             raise ValueError("packet payload hash mismatch")
-        window = np.frombuffer(raw, np.float64).reshape(meta["shape"])
+        if meta.get("dtype") == "int8":
+            q = np.frombuffer(raw, np.int8).reshape(meta["shape"])
+            window = dequantize_i8(q, np.asarray(meta["scales"]), axis=-1)
+        else:
+            window = np.frombuffer(raw, np.float64).reshape(meta["shape"])
+    header.setdefault("present_ranks", [])
     for key in (
         "stages",
         "labels",
@@ -123,6 +148,7 @@ def decode_packet(data: bytes) -> EvidencePacket:
         "gains",
         "co_critical_stages",
         "downgrade_reasons",
+        "present_ranks",
     ):
         header[key] = tuple(header[key])
     return EvidencePacket(window=window, **header)

@@ -1,0 +1,359 @@
+"""Fleet subsystem tests: streaming equivalence, batched kernel, ingest,
+registry liveness, service routing, int8 wire format."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    StreamingFrontier,
+    WindowAggregator,
+    frontier_accounting,
+    segmented_schema,
+)
+from repro.distributed.compression import dequantize_i8, quantize_i8
+from repro.fleet import FleetIngest, FleetRegistry, FleetService
+from repro.kernels.frontier import (
+    fleet_frontier_loop,
+    fleet_frontier_window,
+    frontier_window,
+)
+from repro.sim import simulate
+from repro.sim.scenarios import ddp_scenario, hidden_rank_scenario
+from repro.telemetry.packets import decode_packet, encode_packet, from_diagnosis
+
+
+# ---------------------------------------------------------------------------
+# Streaming engine: bit-for-bit equivalence with the batch pass
+# ---------------------------------------------------------------------------
+
+
+class TestStreamingFrontier:
+    @pytest.mark.parametrize(
+        "shape", [(1, 1, 2), (7, 3, 6), (30, 8, 6), (5, 33, 4), (12, 2, 9)]
+    )
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_bit_for_bit_equivalence(self, shape, seed):
+        n, r, s = shape
+        d = np.random.default_rng(seed).exponential(1.0, size=(n, r, s))
+        sf = StreamingFrontier(r, s, capacity=n)
+        for t in range(n):
+            sf.push(d[t])
+        st, ref = sf.state(), frontier_accounting(d)
+        np.testing.assert_array_equal(st.frontier, ref.frontier)
+        np.testing.assert_array_equal(st.advances, ref.advances)
+        np.testing.assert_array_equal(st.leader, ref.leader)
+        np.testing.assert_array_equal(st.gap, ref.gap)
+        np.testing.assert_array_equal(st.lag, ref.lag)
+        np.testing.assert_array_equal(
+            st.exposed_makespan, ref.exposed_makespan
+        )
+        np.testing.assert_array_equal(st.shares(), ref.shares())
+
+    def test_push_many_matches_sequential_push(self):
+        d = np.random.default_rng(4).exponential(1.0, size=(23, 6, 5))
+        one = StreamingFrontier(6, 5, capacity=10)
+        for t in range(23):
+            one.push(d[t])
+        # fold as three packets of windows, like the registry ingest path
+        many = StreamingFrontier(6, 5, capacity=10)
+        many.push_many(d[:8])
+        many.push_many(d[8:20])
+        many.push_many(d[20:])
+        a, b = one.state(), many.state()
+        np.testing.assert_array_equal(a.frontier, b.frontier)
+        np.testing.assert_array_equal(a.advances, b.advances)
+        np.testing.assert_array_equal(a.leader, b.leader)
+        np.testing.assert_array_equal(a.gap, b.gap)
+        np.testing.assert_array_equal(a.lag, b.lag)
+        assert a.steps_seen == b.steps_seen == 23
+
+    def test_sliding_window_matches_batch_over_tail(self):
+        d = np.random.default_rng(2).exponential(1.0, size=(37, 5, 6))
+        sf = StreamingFrontier(5, 6, capacity=10)
+        for t in range(37):
+            sf.push(d[t])
+        st, ref = sf.state(), frontier_accounting(d[-10:])
+        np.testing.assert_array_equal(st.frontier, ref.frontier)
+        np.testing.assert_array_equal(st.advances, ref.advances)
+        np.testing.assert_array_equal(st.leader, ref.leader)
+        np.testing.assert_array_equal(st.gap, ref.gap)
+        np.testing.assert_array_equal(st.lag, ref.lag)
+        assert st.steps_seen == 37 and st.num_steps == 10
+
+    def test_rejects_bad_input(self):
+        sf = StreamingFrontier(4, 6, capacity=8)
+        with pytest.raises(ValueError):
+            sf.push(np.zeros((3, 6)))
+        with pytest.raises(ValueError):
+            sf.push(np.full((4, 6), -1.0))
+        with pytest.raises(ValueError):
+            sf.push(np.full((4, 6), np.nan))
+
+    def test_reset_clears_state(self):
+        sf = StreamingFrontier(2, 3, capacity=4)
+        sf.push(np.ones((2, 3)))
+        sf.reset()
+        assert sf.num_steps == 0 and sf.steps_seen == 0
+        assert sf.state().frontier.shape == (0, 3)
+
+
+# ---------------------------------------------------------------------------
+# Batched fleet kernel
+# ---------------------------------------------------------------------------
+
+
+class TestFleetKernel:
+    @pytest.mark.parametrize(
+        "shape", [(1, 2, 3, 6), (3, 4, 33, 6), (2, 3, 129, 7), (4, 2, 8, 3)]
+    )
+    def test_matches_per_job_loop(self, shape):
+        jn, n, r, s = shape
+        d = jnp.asarray(
+            np.random.default_rng(0).exponential(1.0, size=shape), jnp.float32
+        )
+        got = fleet_frontier_window(d)
+        want = fleet_frontier_loop(d)
+        np.testing.assert_allclose(got.frontier, want.frontier, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(got.advances, want.advances, rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(got.leader), np.asarray(want.leader))
+        np.testing.assert_allclose(got.exposed, want.exposed, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(got.shares, want.shares, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(got.gains, want.gains, rtol=1e-4, atol=1e-5)
+
+    def test_matches_single_job_kernel(self):
+        d = jnp.asarray(
+            np.random.default_rng(1).exponential(1.0, size=(3, 5, 16, 6)),
+            jnp.float32,
+        )
+        got = fleet_frontier_window(d)
+        for j in range(3):
+            single = frontier_window(d[j])
+            np.testing.assert_allclose(
+                got.shares[j], single.shares, rtol=1e-4, atol=1e-5
+            )
+
+    def test_per_job_telescoping(self):
+        d = jnp.asarray(
+            np.random.default_rng(3).exponential(1.0, size=(4, 6, 32, 6)),
+            jnp.float32,
+        )
+        got = fleet_frontier_window(d)
+        np.testing.assert_allclose(
+            np.asarray(got.advances).sum(axis=2), np.asarray(got.exposed),
+            rtol=1e-5,
+        )
+
+
+# ---------------------------------------------------------------------------
+# int8 wire format
+# ---------------------------------------------------------------------------
+
+
+class TestWireFormat:
+    def _packet(self, *, window=True, ranks=8, steps=10):
+        sc = ddp_scenario(world_size=ranks, steps=steps, seed=0)
+        res = simulate(sc)
+        agg = WindowAggregator(sc.schema(), window_steps=steps)
+        report = None
+        for t in range(steps):
+            report = agg.add_step(
+                res.durations[t], res.durations[t].sum(-1)
+            ) or report
+        return from_diagnosis(
+            report.diagnosis, sc.stages, report.steps, ranks,
+            report.window_index,
+            window=report.durations if window else None,
+        )
+
+    def test_int8_roundtrip_header_exact_window_close(self):
+        pkt = self._packet()
+        wire = encode_packet(pkt, compress="int8")
+        back = decode_packet(wire)
+        assert back.labels == pkt.labels
+        assert back.shares == pkt.shares
+        assert back.schema_hash == pkt.schema_hash
+        # per-stage scales: relative error bounded by the int8 step
+        err = np.abs(back.window - pkt.window).max(axis=(0, 1))
+        amax = np.abs(pkt.window).max(axis=(0, 1))
+        assert (err <= amax / 127 + 1e-12).all()
+
+    def test_int8_payload_smaller(self):
+        # large enough that the window dominates the fixed JSON header
+        pkt = self._packet(ranks=16, steps=40)
+        assert len(encode_packet(pkt, compress="int8")) < len(
+            encode_packet(pkt)
+        ) / 4
+
+    def test_quantize_axis_scales(self):
+        x = np.random.default_rng(0).exponential(0.01, size=(4, 8, 6))
+        x[:, :, 3] *= 1e3  # huge dynamic-range split across stages
+        q, scale = quantize_i8(x, axis=-1)
+        back = dequantize_i8(q, scale, axis=-1)
+        rel = np.abs(back - x).max(axis=(0, 1)) / x.max(axis=(0, 1))
+        assert (rel <= 1 / 127 + 1e-9).all()
+
+    def test_uncompressed_roundtrip_still_exact(self):
+        pkt = self._packet()
+        back = decode_packet(encode_packet(pkt))
+        np.testing.assert_array_equal(back.window, pkt.window)
+
+
+# ---------------------------------------------------------------------------
+# Ingest + registry
+# ---------------------------------------------------------------------------
+
+
+class TestIngestRegistry:
+    def test_malformed_packets_counted_not_raised(self):
+        ing = FleetIngest()
+        assert ing.decode(b"garbage") is None
+        assert ing.decode(b"SFP1\xff\xff\xff\xff") is None
+        assert ing.stats.decode_errors == 2 and ing.stats.packets == 0
+
+    def _mk_packet(self, seed=0, gather_ok=True, ranks=4, present=(), widx=0):
+        sc = ddp_scenario(world_size=ranks, steps=5, seed=seed)
+        res = simulate(sc)
+        agg = WindowAggregator(sc.schema(), window_steps=5)
+        report = None
+        for t in range(5):
+            report = agg.add_step(
+                res.durations[t], res.durations[t].sum(-1),
+                gather_ok=gather_ok,
+                present_ranks=present or range(ranks),
+            ) or report
+        return from_diagnosis(
+            report.diagnosis, sc.stages, report.steps, ranks,
+            widx, window=report.durations,
+            present_ranks=tuple(present or range(ranks)),
+        )
+
+    def test_registry_streams_windows(self):
+        reg = FleetRegistry(window_capacity=20)
+        pkt = self._mk_packet()
+        job = reg.update("a", pkt, tick=0)
+        assert job.streaming.num_steps == 5
+        assert job.windows_seen == 1
+        # shares from streaming state match the packet's batch-pass shares
+        np.testing.assert_allclose(job.shares(), pkt.shares, atol=1e-9)
+
+    def test_degrade_after_consecutive_bad_gathers(self):
+        reg = FleetRegistry(degrade_after=2)
+        job = reg.update(
+            "a", self._mk_packet(gather_ok=False, present=(0, 1, 2)), 0
+        )
+        assert not job.degraded
+        job = reg.update(
+            "a", self._mk_packet(gather_ok=False, present=(0, 1, 2), widx=1), 1
+        )
+        assert job.degraded and job.dead_ranks == frozenset({3})
+        assert job.urgency() == 0.0  # degraded jobs never route
+        good = self._mk_packet(gather_ok=True, widx=2)
+        job = reg.update("a", good, 2)
+        assert not job.degraded  # recovery clears the streak
+        assert job.dead_ranks == frozenset()  # ...and the dead set
+
+    def test_evict_stale_jobs(self):
+        reg = FleetRegistry(evict_after=3)
+        reg.update("a", self._mk_packet(), 0)
+        reg.update("b", self._mk_packet(seed=1), 2)
+        assert reg.evict_stale(3) == ["a"]
+        assert "b" in reg and len(reg) == 1
+
+    def test_duplicate_window_not_double_counted(self):
+        reg = FleetRegistry()
+        pkt = self._mk_packet()
+        reg.update("a", pkt, 0)
+        job = reg.update("a", pkt, 1)   # transport retry, same window_index
+        assert job.windows_seen == 1
+        assert job.streaming.steps_seen == 5
+        assert reg.duplicate_total == 1
+        assert job.last_tick == 1       # liveness still refreshed
+
+    def test_full_registry_refuses_new_jobs(self):
+        reg = FleetRegistry(max_jobs=2)
+        assert reg.update("a", self._mk_packet(), 0) is not None
+        assert reg.update("b", self._mk_packet(seed=1), 0) is not None
+        assert reg.update("c", self._mk_packet(seed=2), 0) is None
+        assert reg.rejected_total == 1 and len(reg) == 2
+        # existing jobs still update when full
+        assert reg.update("a", self._mk_packet(), 1) is not None
+
+    def test_schema_change_restarts_stream(self):
+        reg = FleetRegistry()
+        job = reg.update("a", self._mk_packet(ranks=4), 0)
+        assert job.streaming.num_steps == 5
+        job2 = reg.update("a", self._mk_packet(ranks=8), 1)
+        assert job2.world_size == 8 and job2.streaming.num_steps == 5
+        assert job2.windows_seen == 1  # fresh stream, never merged
+
+
+# ---------------------------------------------------------------------------
+# Service: routing + batched refresh
+# ---------------------------------------------------------------------------
+
+
+class TestFleetService:
+    def _wire(self, *, seed=0, faulted=False, ranks=8, steps=12,
+              delay_ms=200.0):
+        if faulted:
+            sc = hidden_rank_scenario(
+                "data", world_size=ranks, steps=steps, seed=seed,
+                delay_ms=delay_ms,
+            )
+        else:
+            sc = ddp_scenario(world_size=ranks, steps=steps, seed=seed)
+        res = simulate(sc)
+        agg = WindowAggregator(sc.schema(), window_steps=steps)
+        report = None
+        for t in range(steps):
+            report = agg.add_step(
+                res.durations[t], res.durations[t].sum(-1)
+            ) or report
+        pkt = from_diagnosis(
+            report.diagnosis, sc.stages, report.steps, ranks,
+            report.window_index, window=report.durations,
+        )
+        return encode_packet(pkt, compress="int8"), sc
+
+    def test_faulted_job_routes_to_seeded_stage_and_rank(self):
+        svc = FleetService()
+        wire_bad, sc = self._wire(seed=3, faulted=True)
+        svc.submit("sick", wire_bad)
+        for j in range(4):
+            wire, _ = self._wire(seed=10 + j)
+            svc.submit(f"healthy-{j}", wire)
+        svc.tick()
+        svc.refresh_batched()
+        routes = svc.route(2)
+        assert routes and routes[0].job_id == "sick"
+        assert routes[0].stage == sc.faults[0].stage
+        assert routes[0].rank == sc.faults[0].rank
+
+    def test_batched_refresh_covers_window_jobs(self):
+        svc = FleetService()
+        for j in range(3):
+            wire, _ = self._wire(seed=j)
+            svc.submit(f"j{j}", wire)
+        assert svc.refresh_batched() == 3
+        for j in range(3):
+            job = svc.registry.get(f"j{j}")
+            assert job.kernel_shares is not None
+            # kernel shares agree with the streaming/batch shares
+            np.testing.assert_allclose(
+                job.kernel_shares, job.streaming.shares(), atol=1e-4
+            )
+        # nothing dirty: a second refresh is a no-op
+        assert svc.refresh_batched() == 0
+
+    def test_undecodable_submit_returns_none(self):
+        svc = FleetService()
+        assert svc.submit("x", b"not a packet") is None
+        assert svc.snapshot()["decode_errors"] == 1
+
+    def test_eviction_through_ticks(self):
+        svc = FleetService(evict_after=2)
+        wire, _ = self._wire()
+        svc.submit("short-lived", wire)
+        assert svc.tick() == []
+        assert svc.tick() == ["short-lived"]
+        assert svc.snapshot()["jobs"] == 0

@@ -24,10 +24,7 @@ class TestShardingPlans:
         return make_local_mesh(data=1, model=1)
 
     def test_spec_conflict_resolution(self):
-        mesh = jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        mesh = self._mesh()
         # expert + expert_mlp: expert wins model, expert_mlp takes data
         spec = spec_for_axes(mesh, ("expert", "embed", "expert_mlp"), BASELINE_PLAN)
         assert spec[0] == "model" and spec[2] == "data"
@@ -36,10 +33,7 @@ class TestShardingPlans:
         assert spec2[0] == "model" and spec2[1] is None
 
     def test_shape_sanitization(self):
-        mesh = jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        mesh = self._mesh()
         axes_tree = {"w": ("embed", "mlp")}
         specs = {"w": jax.ShapeDtypeStruct((7, 6482), jnp.float32)}
         sh = tree_shardings(mesh, axes_tree, BASELINE_PLAN, specs)
@@ -77,6 +71,7 @@ class TestShardingPlans:
         )
 
 
+@pytest.mark.slow
 class TestTrainDriver:
     def _args(self, tmp_path, steps, extra=()):
         argv = [
@@ -117,6 +112,7 @@ class TestTrainDriver:
         ) > 0.3, summary["windows"]
 
 
+@pytest.mark.slow
 class TestServeDriver:
     def test_batched_decode(self):
         from repro.launch.serve import make_argparser as serve_args, run as serve_run

@@ -34,6 +34,7 @@ def _window(n, r, s, dtype, seed=0):
     return jnp.asarray(d, dtype=dtype)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("shape", SHAPES, ids=[f"{n}x{r}x{s}" for n, r, s in SHAPES])
 @pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
 def test_kernel_matches_oracle(shape, dtype):

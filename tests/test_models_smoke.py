@@ -15,6 +15,9 @@ from repro.configs import ARCHITECTURES, ASSIGNED, get_config
 from repro.configs.base import ShapeConfig
 from repro.models import build_model
 
+#: per-arch jit compiles dominate the suite wall time: fast loop skips them
+pytestmark = pytest.mark.slow
+
 SMOKE_B, SMOKE_S = 2, 64
 
 

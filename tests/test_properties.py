@@ -1,5 +1,8 @@
 """Property-based tests (hypothesis) for the system's core invariants."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra.numpy import arrays
 
