@@ -8,7 +8,10 @@ faults:
   1. a fleet of jobs (mixed DDP/FSDP/ZeRO-1 sync profiles) streams evidence
      packets over the int8 wire format into a FleetService; injected E3
      faults must surface in the top-K profiler routing with the seeded
-     stage and rank;
+     stage and rank, and the top entry's counterfactual recoverable
+     seconds must cover >= 90% of the known injected delay (the routing
+     score IS the what-if answer, replayed under each job's declared sync
+     profile);
   2. the incremental StreamingFrontier state matches the batch pass
      bit-for-bit while never holding a [N, R, S] window;
   3. failure drill: one job dies (evicted), one job's gather degrades
@@ -45,7 +48,7 @@ def main() -> None:
           f"wire bytes/packet={summary['wire_bytes_per_packet']}")
     for r in summary["routing"]:
         print(f"  route -> {r['job']}: {r['stage']} rank {r['rank']} "
-              f"score {r['score']}")
+              f"recoverable {r['recoverable_s']}s")
     assert summary["snapshot"]["evicted_total"] >= 1, "dead job must evict"
     assert summary["snapshot"]["degraded_jobs"] >= 1, "bad gather must degrade"
     routed_jobs = {r["job"] for r in summary["routing"]}
@@ -53,6 +56,14 @@ def main() -> None:
                if j % args.fault_every == 0 and j not in (1, 2)}
     hits = {j for j in routed_jobs if j[:7] in faulted}
     assert hits, f"faulted jobs must appear in routing, got {routed_jobs}"
+    # job-000 carries the rank-attributable data fault (rank 3, 250 ms x
+    # 20-step windows => 5 s injected per window); the counterfactual
+    # routing score must localize it and price it at >= 90%.
+    top = summary["routing"][0]
+    injected = args.delay_ms / 1e3 * args.window
+    assert top["job"].startswith("job-000"), top
+    assert top["stage"] == "data.next_wait" and top["rank"] == 3, top
+    assert top["recoverable_s"] >= 0.9 * injected, (top, injected)
 
     # --- 2. streaming state == batch pass, bit-for-bit ----------------------
     sc = hidden_rank_scenario("data", world_size=64, steps=40, seed=5,

@@ -11,6 +11,7 @@ Layers:
   accumulation  gradient-accumulation ordered-substage expansion
   windows       bounded streaming window aggregation
   streaming     incremental one-step-at-a-time frontier engine (fleet path)
+  whatif        counterfactual per-(stage, rank) recoverable-time matrix
 """
 from .contract import (
     FUSED_STAGES,
@@ -64,7 +65,17 @@ from .accumulation import (
     expand_schema,
     semantic_groups,
 )
-from .streaming import StreamingFrontier, StreamingWindowState
+from .streaming import StreamingFrontier, StreamingWhatIf, StreamingWindowState
+from .whatif import (
+    Intervention,
+    WhatIfResult,
+    imputed_work,
+    make_sync_mask,
+    step_contributions,
+    top_interventions,
+    whatif_matrix,
+    whatif_matrix_naive,
+)
 from .windows import WindowAggregator, WindowReport
 
 __all__ = [k for k in dir() if not k.startswith("_")]

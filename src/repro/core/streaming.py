@@ -27,7 +27,47 @@ import numpy as np
 
 from .frontier import frontier_accounting, window_shares
 
-__all__ = ["StreamingFrontier", "StreamingWindowState"]
+__all__ = ["StreamingFrontier", "StreamingWindowState", "StreamingWhatIf"]
+
+
+class _Ring:
+    """Sliding-window cursor shared by the streaming engines.
+
+    Tracks the filled slot count, the write position, and lifetime pushes
+    over `capacity` ring slots — one copy of the eviction/ordering logic,
+    so `StreamingFrontier` and `StreamingWhatIf` cannot drift apart.
+    """
+
+    __slots__ = ("capacity", "count", "next", "seen")
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.count = 0           # filled slots (<= capacity)
+        self.next = 0            # ring write cursor
+        self.seen = 0            # lifetime pushes
+
+    def advance(self, n: int = 1) -> int:
+        """Claim `n` consecutive slots; returns the first slot index."""
+        i = self.next
+        self.next = (self.next + n) % self.capacity
+        self.count = min(self.count + n, self.capacity)
+        self.seen += n
+        return i
+
+    def reset(self) -> None:
+        self.count = 0
+        self.next = 0
+        self.seen = 0
+
+    def order(self) -> np.ndarray:
+        """Ring slot indices in chronological order."""
+        if self.count < self.capacity:
+            return np.arange(self.count)
+        return np.concatenate(
+            [np.arange(self.next, self.capacity), np.arange(self.next)]
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,20 +111,19 @@ class StreamingFrontier:
     def __init__(self, world_size: int, num_stages: int, *, capacity: int = 100):
         if world_size < 1 or num_stages < 1:
             raise ValueError("world_size and num_stages must be >= 1")
-        if capacity < 1:
-            raise ValueError("capacity must be >= 1")
         self.world_size = world_size
         self.num_stages = num_stages
-        self.capacity = capacity
+        self._ring = _Ring(capacity)
         c, s = capacity, num_stages
         self._frontier = np.zeros((c, s))
         self._advances = np.zeros((c, s))
         self._leader = np.zeros((c, s), dtype=np.intp)
         self._gap = np.zeros((c, s))
         self._lag = np.zeros((c, s))
-        self._count = 0          # filled slots (<= capacity)
-        self._next = 0           # ring write cursor
-        self._seen = 0           # lifetime pushes
+
+    @property
+    def capacity(self) -> int:
+        return self._ring.capacity
 
     # -- feeding -----------------------------------------------------------
 
@@ -101,16 +140,13 @@ class StreamingFrontier:
         # not by keeping two copies of the reductions in sync.  Only the
         # [S]-sized boundary summaries are retained.
         res = frontier_accounting(d)
-        i = self._next
+        i = self._ring.advance()
         self._frontier[i] = res.frontier[0]
         self._advances[i] = res.advances[0]
         self._leader[i] = res.leader[0]
         self._gap[i] = res.gap[0]
         self._lag[i] = res.lag[0]
-        self._next = (i + 1) % self.capacity
-        self._count = min(self._count + 1, self.capacity)
-        self._seen += 1
-        return self._seen - 1
+        return self._ring.seen - 1
 
     fold = push  # folding one step into the accumulators IS the push
 
@@ -130,59 +166,173 @@ class StreamingFrontier:
             )
         n = d.shape[0]
         if n == 0:
-            return self._seen - 1
+            return self._ring.seen - 1
         keep = min(n, self.capacity)
         # only the trailing `capacity` steps survive eviction; per-step math
         # is independent, so accounting just the tail is bit-identical
         res = frontier_accounting(d[n - keep:])
-        idx = (self._next + np.arange(n - keep, n)) % self.capacity
+        idx = (self._ring.next + np.arange(n - keep, n)) % self.capacity
         self._frontier[idx] = res.frontier
         self._advances[idx] = res.advances
         self._leader[idx] = res.leader
         self._gap[idx] = res.gap
         self._lag[idx] = res.lag
-        self._next = (self._next + n) % self.capacity
-        self._count = min(self._count + n, self.capacity)
-        self._seen += n
-        return self._seen - 1
+        self._ring.advance(n)
+        return self._ring.seen - 1
 
     def reset(self) -> None:
-        self._count = 0
-        self._next = 0
-        self._seen = 0
+        self._ring.reset()
 
     # -- reading -----------------------------------------------------------
 
     @property
     def num_steps(self) -> int:
         """Steps currently held in the window (<= capacity)."""
-        return self._count
+        return self._ring.count
 
     @property
     def steps_seen(self) -> int:
-        return self._seen
-
-    def _order(self) -> np.ndarray:
-        """Ring slot indices in chronological order."""
-        if self._count < self.capacity:
-            return np.arange(self._count)
-        return np.concatenate(
-            [np.arange(self._next, self.capacity), np.arange(self._next)]
-        )
+        return self._ring.seen
 
     def state(self) -> StreamingWindowState:
         """Assemble the current window (chronological, oldest first)."""
-        o = self._order()
+        o = self._ring.order()
         frontier = self._frontier[o]
         return StreamingWindowState(
             frontier=frontier,
             advances=self._advances[o],
-            exposed_makespan=frontier[:, -1] if self._count else np.zeros(0),
+            exposed_makespan=frontier[:, -1]
+            if self._ring.count
+            else np.zeros(0),
             leader=self._leader[o],
             gap=self._gap[o],
             lag=self._lag[o],
-            steps_seen=self._seen,
+            steps_seen=self._ring.seen,
         )
 
     def shares(self) -> np.ndarray:
         return self.state().shares()
+
+    def exposed_total(self) -> float:
+        """sum_t F[t, S] over the retained window — one O(window) gather,
+        no full `state()` assembly (the fleet routing denominator)."""
+        return float(self._frontier[:, -1][self._ring.order()].sum())
+
+
+class StreamingWhatIf:
+    """Incremental counterfactual what-if matrix over a sliding window.
+
+    The batch engine (`core.whatif.whatif_matrix`) wants the whole
+    [N, R, S] window; at fleet scale the aggregator sees one step at a
+    time.  Each pushed step's per-(stage, rank) recoverable-time
+    contribution ``contrib[t, s, r] = M[t] - M^{(s,r)<-b}[t]`` is
+    per-step independent, so the window matrix is just the sum of the
+    retained per-step contributions: a ring buffer of [S, R] summaries
+    (O(window * S * R) state — the matrix itself is [S, R], so this is the
+    output size times the window, and the raw [R, S] step is dropped at
+    fold time).
+
+    The baseline is fixed at construction (an explicit reference, or a
+    cohort median carried over from a previous window): a window-median
+    baseline cannot be known at push time, and silently re-deriving it
+    per push would make early and late folds of the same step disagree.
+    Call `rebase(baseline)` to swap references — it resets the window.
+    `sync_mask` declares barrier-bearing stages (see `core.whatif`'s
+    sync-wait model); the imputation and replay are per-step, so the
+    streaming fold models them exactly like the batch pass.
+
+    Equivalence contract (property-tested): `matrix()` is **bit-for-bit**
+    equal to ``whatif_matrix(stacked, baseline, sync_mask=...).matrix``
+    over the same trailing `capacity` steps — both paths run
+    `step_contributions` and sum the identical per-step arrays in
+    chronological order.
+    """
+
+    def __init__(
+        self,
+        world_size: int,
+        num_stages: int,
+        baseline: np.ndarray,
+        *,
+        capacity: int = 100,
+        sync_mask=None,
+    ):
+        if world_size < 1 or num_stages < 1:
+            raise ValueError("world_size and num_stages must be >= 1")
+        self.world_size = world_size
+        self.num_stages = num_stages
+        self._ring = _Ring(capacity)
+        self._baseline = np.broadcast_to(
+            np.asarray(baseline, dtype=np.float64),
+            (world_size, num_stages),
+        ).copy()
+        self._sync_mask = (
+            None
+            if sync_mask is None
+            else np.asarray(sync_mask, dtype=bool).copy()
+        )
+        if self._sync_mask is not None and self._sync_mask.shape != (
+            num_stages,
+        ):
+            raise ValueError(
+                f"sync_mask must be [S]=({num_stages},), "
+                f"got {self._sync_mask.shape}"
+            )
+        self._contrib = np.zeros((capacity, num_stages, world_size))
+        self._exposed = np.zeros(capacity)
+
+    @property
+    def capacity(self) -> int:
+        return self._ring.capacity
+
+    @property
+    def baseline(self) -> np.ndarray:
+        return self._baseline
+
+    @property
+    def num_steps(self) -> int:
+        return self._ring.count
+
+    @property
+    def steps_seen(self) -> int:
+        return self._ring.seen
+
+    def push(self, durations: np.ndarray) -> int:
+        """Fold one step matrix d[R, S]; returns the lifetime step index."""
+        from .whatif import step_contributions
+
+        d = np.asarray(durations, dtype=np.float64)
+        if d.shape != (self.world_size, self.num_stages):
+            raise ValueError(
+                f"expected [R,S]=({self.world_size},{self.num_stages}), "
+                f"got {d.shape}"
+            )
+        contrib, exposed = step_contributions(
+            d[None], self._baseline[None], self._sync_mask
+        )
+        i = self._ring.advance()
+        self._contrib[i] = contrib[0]
+        self._exposed[i] = exposed[0]
+        return self._ring.seen - 1
+
+    def rebase(self, baseline: np.ndarray) -> None:
+        """Swap the baseline reference; resets the window (contributions
+        against the old reference are not comparable to new ones)."""
+        self._baseline = np.broadcast_to(
+            np.asarray(baseline, dtype=np.float64),
+            (self.world_size, self.num_stages),
+        ).copy()
+        self.reset()
+
+    def reset(self) -> None:
+        self._ring.reset()
+
+    def matrix(self) -> np.ndarray:
+        """Window recoverable-time matrix W[S, R] (seconds, >= 0)."""
+        if not self._ring.count:
+            return np.zeros((self.num_stages, self.world_size))
+        return self._contrib[self._ring.order()].sum(axis=0)
+
+    def exposed_total(self) -> float:
+        """sum_t F[t, S] over the window (the fraction denominator)."""
+        return float(self._exposed[self._ring.order()].sum())

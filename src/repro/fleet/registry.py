@@ -41,6 +41,9 @@ class JobState:
     world_size: int
     schema_hash: str
     streaming: StreamingFrontier
+    #: declared sync profile (stage names ending in a group barrier) — set
+    #: from the job's packets; drives the counterfactual replay model.
+    sync_stages: tuple[str, ...] = ()
     #: last full [N, R, S] window (f32, only when packets ship windows);
     #: feeds the batched fleet-kernel refresh, which releases it — raw
     #: windows are consumed, never accumulated.
@@ -56,10 +59,21 @@ class JobState:
     kernel_shares: np.ndarray | None = None
     kernel_gains: np.ndarray | None = None
     kernel_leader: int = -1
+    #: kernel-refreshed counterfactual what-if matrix W[S, R] (recoverable
+    #: seconds per (stage, rank) candidate); None until a batched refresh
+    #: has covered this job.
+    whatif: np.ndarray | None = None
 
     @property
     def labels(self) -> tuple[str, ...]:
         return self.last_packet.labels if self.last_packet else ()
+
+    def sync_index_tuple(self) -> tuple[int, ...]:
+        """Declared sync stages as ordered stage indices (kernel static
+        arg and batched-refresh group key; unknown names are ignored)."""
+        return tuple(
+            i for i, s in enumerate(self.stages) if s in set(self.sync_stages)
+        )
 
     @property
     def has_strong_evidence(self) -> bool:
@@ -85,6 +99,56 @@ class JobState:
         if self.kernel_gains is not None and self.kernel_gains.size:
             top_gain = max(top_gain, float(self.kernel_gains.max()))
         return (2.0 if self.has_strong_evidence else 0.0) + top_share + top_gain
+
+    def recoverable(self) -> tuple[float, int, int]:
+        """Estimated recoverable seconds and the candidate that yields them.
+
+        Returns ``(seconds, stage_index, rank)``.  Evidence ladder,
+        freshest first (one source per answer — never a stage from one
+        window paired with another window's rank):
+
+          1. kernel what-if matrix: the exact counterfactual, argmax cell;
+          2. packet gains x a window denominator: the whole-stage clipped
+             gain converted to seconds (a stage-level estimate).  The rank
+             is the packet's own leader *only when* the gain-argmax stage
+             is also the packet's top routing stage — the leader belongs
+             to the packet's routing answer, and pairing it with some
+             other stage would violate the one-source rule; otherwise the
+             rank is reported unknown (-1).  The denominator is the
+             packet's own `exposed_total` when declared, else the
+             streaming state's summed exposed makespan (packets from
+             pre-whatif emitters decode with exposed_total = -1);
+          3. gains with no denominator anywhere (compact pre-whatif
+             packets): the top gain *fraction* stands in as the score —
+             dimensionless, so such jobs rank conservatively against
+             seconds-priced peers, but they stay routable;
+          4. nothing usable: (0.0, -1, -1).
+
+        Degraded jobs report 0.0 — quality labels never route profilers.
+        """
+        if self.degraded:
+            return 0.0, -1, -1
+        if self.whatif is not None and self.whatif.size:
+            flat = int(np.argmax(self.whatif))
+            si, ri = divmod(flat, self.whatif.shape[1])
+            return float(self.whatif[si, ri]), si, ri
+        pkt = self.last_packet
+        if pkt is not None and pkt.gains:
+            si = int(np.argmax(pkt.gains))
+            denom = pkt.exposed_total
+            if denom <= 0.0 and self.streaming.num_steps:
+                denom = self.streaming.exposed_total()
+            scale = denom if denom > 0.0 else 1.0
+            rec = float(pkt.gains[si]) * scale
+            stage_name = self.stages[si] if si < len(self.stages) else ""
+            ri = (
+                pkt.leader_rank
+                if pkt.routing_stages and pkt.routing_stages[0] == stage_name
+                else -1
+            )
+            if rec > 0.0:
+                return rec, si, ri
+        return 0.0, -1, -1
 
 
 class FleetRegistry:
@@ -127,6 +191,7 @@ class FleetRegistry:
                     pkt.world_size, len(pkt.stages),
                     capacity=self.window_capacity,
                 ),
+                sync_stages=tuple(pkt.sync_stages),
             )
             self._jobs[job_id] = job
         elif (
@@ -141,6 +206,16 @@ class FleetRegistry:
         job.last_tick = tick
         job.windows_seen += 1
         job.last_packet = pkt
+        if pkt.sync_stages:
+            job.sync_stages = tuple(pkt.sync_stages)
+        # Any accepted packet is fresher evidence than a kernel refresh
+        # computed from an older window: invalidate the refreshed state so
+        # `recoverable()`/`shares()` fall to the packet (or the next
+        # refresh) instead of serving a stale matrix forever.
+        job.kernel_shares = None
+        job.kernel_gains = None
+        job.kernel_leader = -1
+        job.whatif = None
 
         if pkt.gather_ok:
             job.missing_streak = 0
@@ -162,10 +237,6 @@ class FleetRegistry:
                 # f32 is what the kernel consumes; half the pinned bytes,
                 # and refresh_batched() releases it after the refresh.
                 job.last_window = w.astype(np.float32)
-                # a fresh raw window invalidates the last kernel refresh
-                job.kernel_shares = None
-                job.kernel_gains = None
-                job.kernel_leader = -1
         return job
 
     def evict_stale(self, tick: int) -> list[str]:

@@ -8,9 +8,11 @@ The serving loop of the always-on signal at fleet scale:
      [J, N, R, S] tensor per shape group and runs the fused fleet kernel
      (jobs on the grid dimension): fleet-wide shares/gains/leaders in one
      pass instead of J dispatches;
-  3. `route(k)` answers the operator question the paper poses — *where do
-     I aim the heavy profiler* — across the whole fleet: the top-K
-     non-degraded jobs by urgency, each with its (stage, rank) target.
+  3. `route(k)` answers the operator question one step past the paper —
+     not just *where do I aim the heavy profiler* but *what is a fix
+     worth*: the top-K non-degraded jobs by estimated recoverable seconds
+     (counterfactual what-if evidence), each with the (stage, rank)
+     candidate that yields that recovery.
 
 Ticks are logical: callers advance `tick()` per aggregation round; jobs
 silent for `evict_after` ticks are evicted (bounded state, dead jobs never
@@ -32,7 +34,13 @@ __all__ = ["FleetService", "RouteEntry"]
 
 @dataclasses.dataclass(frozen=True)
 class RouteEntry:
-    """One 'aim the profiler here' answer."""
+    """One 'aim the profiler here' answer.
+
+    `score` IS the estimated recoverable seconds (`recoverable_s` is the
+    same number under its semantic name): routing ranks jobs by what a fix
+    is worth, not by how anomalous they look.  `urgency` carries the old
+    evidence-weighted anomaly score for dashboards.
+    """
 
     job_id: str
     stage: str
@@ -40,6 +48,8 @@ class RouteEntry:
     score: float
     window_index: int
     labels: tuple[str, ...]
+    recoverable_s: float = 0.0
+    urgency: float = 0.0
 
 
 class FleetService:
@@ -86,36 +96,49 @@ class FleetService:
 
     # -- batched kernel refresh --------------------------------------------
 
-    def refresh_batched(self, *, min_jobs: int = 2) -> int:
+    def refresh_batched(self, *, min_jobs: int = 1) -> int:
         """Re-account every *dirty* window-carrying job through the fused
         fleet kernel, grouped by window shape.  Returns jobs refreshed.
 
         Dirty = a new raw window arrived since the last refresh (the
         registry nulls `kernel_shares` on ingest), so per-tick cost scales
-        with updated jobs, not fleet size.  Groups smaller than `min_jobs`
-        are left to their streaming state — a one-job batch is just the
-        single-job kernel with extra steps.
-        """
-        from ..kernels.frontier import fleet_frontier_window
+        with updated jobs, not fleet size.  Every dirty group refreshes by
+        default — routing quality depends on the what-if matrix, and a
+        skipped group would also keep its raw windows pinned; callers that
+        prefer leaving tiny groups to their streaming state can raise
+        `min_jobs`.
 
-        groups: dict[tuple[int, int, int], list[JobState]] = defaultdict(list)
+        Each refresh also runs the batched counterfactual route
+        (`fleet_whatif_matrix`) on the same stacked tensor, so every
+        refreshed job carries a dense [S, R] recoverable-time matrix —
+        the evidence `route(k)` ranks by.  The counterfactual replays each
+        job's *declared* sync profile (packet `sync_stages`), so jobs are
+        grouped by (window shape, sync profile) — the sync segmentation is
+        a static kernel argument and must match within a batch.
+        """
+        from ..kernels.frontier import fleet_frontier_window, fleet_whatif_matrix
+
+        groups: dict[tuple, list[JobState]] = defaultdict(list)
         for job in self.registry.jobs():
             if (
                 job.last_window is not None
                 and not job.degraded
                 and job.kernel_shares is None
             ):
-                groups[job.last_window.shape].append(job)
+                key = (job.last_window.shape, job.sync_index_tuple())
+                groups[key].append(job)
 
         refreshed = 0
-        for shape, jobs in sorted(groups.items()):
+        for (shape, sync_idx), jobs in sorted(groups.items()):
             if len(jobs) < min_jobs:
                 continue
             stacked = np.stack([j.last_window for j in jobs])
             pkt = fleet_frontier_window(stacked)
+            wif = fleet_whatif_matrix(stacked, sync_stages=sync_idx)
             shares = np.asarray(pkt.shares)          # [J, S]
             gains = np.asarray(pkt.gains)            # [J, S]
             leader = np.asarray(pkt.leader)          # [J, N, S]
+            whatif = np.asarray(wif.matrix)          # [J, S, R]
             for i, job in enumerate(jobs):
                 job.kernel_shares = shares[i]
                 job.kernel_gains = gains[i]
@@ -123,6 +146,7 @@ class FleetService:
                 # mode of the per-step leader at the top boundary
                 ranks, counts = np.unique(leader[i, :, top], return_counts=True)
                 job.kernel_leader = int(ranks[np.argmax(counts)])
+                job.whatif = whatif[i]
                 # raw window consumed: release it (bounded registry state)
                 job.last_window = None
                 refreshed += 1
@@ -131,45 +155,42 @@ class FleetService:
     # -- routing -----------------------------------------------------------
 
     def route(self, k: int = 10) -> list[RouteEntry]:
-        """Top-K jobs needing a heavy profiler, most urgent first.
+        """Top-K jobs by estimated recoverable seconds, largest first.
 
-        Degraded (telemetry_limited) jobs never appear: quality labels
-        must not trigger workload-touching actions.
+        The ranking answers "where is a fix worth the most step time", not
+        "which job looks most anomalous": each job's score is its best
+        counterfactual — the argmax cell of the kernel-refreshed what-if
+        matrix when fresh, else the packet's whole-stage clipped gain
+        converted to seconds (see `JobState.recoverable`).  The reported
+        (stage, rank) is that same candidate — one evidence source per
+        answer, never a stage from one window paired with another's rank.
+
+        Ordering is fully deterministic: recoverable seconds descending,
+        ties broken by job id ascending (stable across dict insertion
+        order and refresh timing).  Degraded (telemetry_limited) jobs
+        never appear: quality labels must not trigger workload-touching
+        actions.
         """
         scored = sorted(
-            ((job.urgency(), job) for job in self.registry.jobs()),
-            key=lambda t: (-t[0], t[1].job_id),
+            ((job.recoverable(), job) for job in self.registry.jobs()),
+            key=lambda t: (-t[0][0], t[1].job_id),
         )
         out: list[RouteEntry] = []
-        for score, job in scored:
-            if len(out) >= k or score <= 0.0:
+        for (rec, si, ri), job in scored:
+            if len(out) >= k or rec <= 0.0:
                 break
             pkt = job.last_packet
-            # (stage, rank) must come from the SAME evidence source: the
-            # kernel refresh when fresh, else the last packet's own routing
-            # — never a stage from one window paired with another's leader.
-            if job.kernel_shares is not None and job.kernel_leader >= 0:
-                stage = job.stages[int(np.argmax(job.kernel_shares))]
-                rank = job.kernel_leader
-            else:
-                stage = (
-                    pkt.routing_stages[0]
-                    if pkt and pkt.routing_stages
-                    else (
-                        job.stages[int(np.argmax(pkt.shares))]
-                        if pkt and pkt.shares
-                        else ""
-                    )
-                )
-                rank = pkt.leader_rank if pkt else -1
+            stage = job.stages[si] if 0 <= si < len(job.stages) else ""
             out.append(
                 RouteEntry(
                     job_id=job.job_id,
                     stage=stage,
-                    rank=rank,
-                    score=float(score),
+                    rank=ri,
+                    score=rec,
                     window_index=pkt.window_index if pkt else -1,
                     labels=job.labels,
+                    recoverable_s=rec,
+                    urgency=job.urgency(),
                 )
             )
         return out

@@ -1,20 +1,31 @@
 from .ops import (
     FleetPacket,
+    FleetWhatIfPacket,
     FrontierPacket,
+    WhatIfPacket,
     fleet_frontier_loop,
     fleet_frontier_window,
+    fleet_whatif_matrix,
     frontier_window,
     frontier_window_reference,
+    whatif_matrix,
+    whatif_matrix_loop,
 )
-from .ref import FrontierWindow, frontier_window_ref
+from .ref import FrontierWindow, frontier_window_ref, whatif_matrix_ref
 
 __all__ = [
     "FleetPacket",
+    "FleetWhatIfPacket",
     "FrontierPacket",
     "FrontierWindow",
+    "WhatIfPacket",
     "fleet_frontier_loop",
     "fleet_frontier_window",
+    "fleet_whatif_matrix",
     "frontier_window",
     "frontier_window_ref",
     "frontier_window_reference",
+    "whatif_matrix",
+    "whatif_matrix_loop",
+    "whatif_matrix_ref",
 ]

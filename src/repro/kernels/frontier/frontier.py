@@ -167,3 +167,155 @@ def frontier_window_kernel(
 # kernel unchanged: per-step accounting is independent, so stacked jobs fold
 # into the leading grid dimension as a [J*N, ...] reshape — one dispatch for
 # the whole fleet, no second kernel to keep in sync.
+
+
+# ---------------------------------------------------------------------------
+# Counterfactual what-if matrix kernel
+# ---------------------------------------------------------------------------
+#
+# Candidate-batched counterfactual recompute: for EVERY (stage, rank)
+# candidate, substitute the clipped baseline on that single cell and
+# re-derive the step makespan under the declared sync model.  The candidate
+# axes ride the existing layout for free — ranks are already on lanes and
+# stages on sublanes, so one [S_pad, R_TILE] tile evaluates S_pad * R_TILE
+# candidates at once and the grid sweeps (rank tiles, steps).
+#
+# Sync segments are STATIC (a tuple of (start, end) stage spans, each
+# ending at a declared barrier or the window end), so the per-segment
+# arrival reconstruction unrolls at trace time: within a segment, a rank's
+# replayed arrival at the governing boundary is
+#
+#     arr[r] = relprev + P[end, r] - P[start-1, r]
+#
+# with P the in-tile stage cumsum of the (imputed) work and relprev the
+# previous segment's release.  The per-step boundary stats the shift
+# identity needs (release max / leader / second / previous release) are
+# tiny [NT, S_pad] rows precomputed by the wrapper, so the whole dense
+# [S, R] matrix costs one HBM read of the window tensor instead of S*R
+# replays.
+#
+# Accumulation: steps are the FASTEST grid axis and the output block index
+# depends only on (job, rank tile), so consecutive iterations revisit the
+# same output block — it stays resident in VMEM while the per-step
+# contributions fold in (same pattern as the rank-tile fold above).
+
+
+def _whatif_kernel(
+    w_ref,      # [1, S_pad, R_TILE] work tile (stage-major, rank lanes)
+    b_ref,      # [1, S_pad, R_TILE] baseline tile
+    amax_ref,   # [1, S_pad] governing-boundary release (max arrival)
+    sec_ref,    # [1, S_pad] governing-boundary second max (-inf when R == 1)
+    lead_ref,   # [1, S_pad] i32 governing-boundary leader (global rank idx)
+    relp_ref,   # [1, S_pad] previous segment's release (0 for the first)
+    out_ref,    # out [1, S_pad, R_TILE] recoverable-seconds accumulator
+    *,
+    segments: tuple[tuple[int, int], ...],
+    r_total: int,
+    r_tile: int,
+    s_pad: int,
+    n_steps: int,
+):
+    j = pl.program_id(0)
+    t = pl.program_id(1)
+    w = w_ref[0].astype(jnp.float32)             # [S_pad, R_TILE]
+    b = b_ref[0].astype(jnp.float32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (s_pad, r_tile), 1)
+    gidx = lane + j * r_tile
+    valid = gidx < r_total
+
+    prefix = jnp.cumsum(w, axis=0)               # [S_pad, R_TILE]
+    excess = jnp.maximum(0.0, w - b)             # [S_pad, R_TILE]
+
+    # Replayed arrival of each lane at its stage's governing boundary —
+    # constant across the stages of one segment, so build it row-wise from
+    # the static segment table (padded stages live in the last segment and
+    # carry w = b = 0, so their contribution is exactly 0).
+    rows = []
+    for start, end in segments:
+        seg = prefix[end, :] - (prefix[start - 1, :] if start else 0.0)
+        for si in range(start, min(end + 1, s_pad)):
+            rows.append(relp_ref[0, si] + seg)
+    arr = jnp.stack(rows, axis=0)                # [S_pad, R_TILE]
+
+    amax = amax_ref[0, :][:, None]               # [S_pad, 1]
+    sec = sec_ref[0, :][:, None]
+    lead = lead_ref[0, :][:, None]
+    # max over the OTHER ranks' arrivals: the leader lane sees the second
+    # max (tied maxima keep second == max), every other lane the max.
+    other = jnp.where(gidx == lead, sec, amax)   # [S_pad, R_TILE]
+    new_a = jnp.maximum(other, arr - excess)
+    contrib = jnp.where(valid, jnp.maximum(0.0, amax - new_a), 0.0)
+
+    @pl.when(t % n_steps == 0)
+    def _init():
+        out_ref[0] = contrib
+
+    @pl.when(t % n_steps != 0)
+    def _fold():
+        out_ref[0] += contrib
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("segments", "r_total", "r_tile", "n_steps", "interpret"),
+)
+def whatif_matrix_kernel(
+    w_srp: jax.Array,
+    b_srp: jax.Array,
+    amax: jax.Array,
+    second: jax.Array,
+    leader: jax.Array,
+    relprev: jax.Array,
+    *,
+    segments: tuple[tuple[int, int], ...],
+    r_total: int | None = None,
+    r_tile: int = 512,
+    n_steps: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Candidate-batched counterfactual matrix on stage-major input.
+
+    Args:
+      w_srp: [NT, S_pad, R_pad] imputed work (NT = jobs * steps),
+        stage-major, rank lanes; R_pad a multiple of r_tile (padded ranks
+        masked out).
+      b_srp: same shape, clipped baseline.
+      amax / second / leader / relprev: [NT, S_pad] per-(step, stage)
+        governing-boundary stats (see `ops._whatif_stats`).
+      segments: static sync segmentation over the S_pad stage rows.
+      n_steps: steps per job (defaults to NT: one job); output rows
+        accumulate per job.
+
+    Returns W[NT // n_steps, S_pad, R_pad] f32 — per-job recoverable
+    seconds for every (stage, rank) candidate.
+    """
+    nt, s_pad, r_pad = w_srp.shape
+    if r_pad % r_tile:
+        raise ValueError(f"R_pad={r_pad} not a multiple of r_tile={r_tile}")
+    r_total = r_pad if r_total is None else r_total
+    n_steps = nt if n_steps is None else n_steps
+    if nt % n_steps:
+        raise ValueError(f"NT={nt} not a multiple of n_steps={n_steps}")
+    jobs = nt // n_steps
+    grid = (r_pad // r_tile, nt)                 # steps fastest: VMEM fold
+    kernel = functools.partial(
+        _whatif_kernel,
+        segments=segments,
+        r_total=r_total,
+        r_tile=r_tile,
+        s_pad=s_pad,
+        n_steps=n_steps,
+    )
+    tile_spec = pl.BlockSpec((1, s_pad, r_tile), lambda j, t: (t, 0, j))
+    stat_spec = pl.BlockSpec((1, s_pad), lambda j, t: (t, 0))
+    out_spec = pl.BlockSpec(
+        (1, s_pad, r_tile), lambda j, t: (t // n_steps, 0, j)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[tile_spec, tile_spec] + [stat_spec] * 4,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((jobs, s_pad, r_pad), jnp.float32),
+        interpret=interpret,
+    )(w_srp, b_srp, amax, second, leader, relprev)

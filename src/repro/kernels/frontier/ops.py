@@ -14,8 +14,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .frontier import frontier_window_kernel
-from .ref import FrontierWindow, frontier_window_ref
+from .frontier import frontier_window_kernel, whatif_matrix_kernel
+from .ref import (
+    FrontierWindow,
+    frontier_window_ref,
+    sync_segments,
+    whatif_matrix_ref,
+)
 
 _SUBLANE = 8
 _LANE = 128
@@ -96,6 +101,36 @@ def _fleet_median_baseline(d: jax.Array) -> jax.Array:
     return jnp.broadcast_to(med[:, None, None, :], d.shape)
 
 
+def _prep_stage_major(
+    d: jax.Array,
+    baseline: jax.Array | None,
+    *,
+    r_tile: int | None,
+    interpret: bool | None,
+) -> tuple[jax.Array, jax.Array, int, bool]:
+    """Shared front half of every kernel route: dtype, default baseline,
+    stage-major transpose + pad to [J*N, S_pad, R_pad].
+
+    Padded stages add 0 to every prefix; padded ranks are masked inside
+    the kernels.  Returns (dt, bt, r_tile, interpret).
+    """
+    jn, n, r, s = d.shape
+    d = d.astype(jnp.float32)
+    if baseline is None:
+        baseline = _fleet_median_baseline(d)
+    baseline = jnp.broadcast_to(baseline.astype(jnp.float32), d.shape)
+    if interpret is None:
+        interpret = not _on_tpu()
+    if r_tile is None:
+        r_tile = min(_pad_to(r, _LANE), 512)
+    s_pad = _pad_to(s, _SUBLANE)
+    r_pad = _pad_to(r, r_tile)
+    dt = jnp.transpose(d, (0, 1, 3, 2)).reshape(jn * n, s, r)
+    bt = jnp.transpose(baseline, (0, 1, 3, 2)).reshape(jn * n, s, r)
+    pad = ((0, 0), (0, s_pad - s), (0, r_pad - r))
+    return jnp.pad(dt, pad), jnp.pad(bt, pad), r_tile, interpret
+
+
 @functools.partial(jax.jit, static_argnames=("r_tile", "interpret"))
 def fleet_frontier_window(
     d: jax.Array,
@@ -114,25 +149,9 @@ def fleet_frontier_window(
     workloads are not comparable).
     """
     jn, n, r, s = d.shape
-    d = d.astype(jnp.float32)
-    if baseline is None:
-        baseline = _fleet_median_baseline(d)
-    baseline = jnp.broadcast_to(baseline.astype(jnp.float32), d.shape)
-    if interpret is None:
-        interpret = not _on_tpu()
-    if r_tile is None:
-        r_tile = min(_pad_to(r, _LANE), 512)
-
-    s_pad = _pad_to(s, _SUBLANE)
-    r_pad = _pad_to(r, r_tile)
-    # stage-major transpose + pad (padded stages add 0 to every prefix;
-    # padded ranks are masked inside the kernel).
-    dt = jnp.transpose(d, (0, 1, 3, 2)).reshape(jn * n, s, r)
-    bt = jnp.transpose(baseline, (0, 1, 3, 2)).reshape(jn * n, s, r)
-    pad = ((0, 0), (0, s_pad - s), (0, r_pad - r))
-    dt = jnp.pad(dt, pad)
-    bt = jnp.pad(bt, pad)
-
+    dt, bt, r_tile, interpret = _prep_stage_major(
+        d, baseline, r_tile=r_tile, interpret=interpret
+    )
     f, lead, sec, clip = frontier_window_kernel(
         dt, bt, r_total=r, r_tile=r_tile, interpret=interpret
     )
@@ -173,6 +192,196 @@ def fleet_frontier_loop(
         shares=jnp.stack([p.shares for p in packets]),
         gains=jnp.stack([p.gains for p in packets]),
     )
+
+
+class WhatIfPacket(NamedTuple):
+    """Counterfactual what-if output for one window tensor d[N, R, S]."""
+
+    matrix: jax.Array     # [S, R]  recoverable seconds per candidate
+    exposed: jax.Array    # [N]     F[t, S] (fraction denominator)
+
+
+class FleetWhatIfPacket(NamedTuple):
+    """Per-job what-if matrices for a stacked fleet tensor d[J, N, R, S]."""
+
+    matrix: jax.Array     # [J, S, R]
+    exposed: jax.Array    # [J, N]
+
+
+def _fleet_imputed_work(
+    d: jax.Array, sync_stages: tuple[int, ...] | None
+) -> jax.Array:
+    """jnp mirror of `core.whatif.imputed_work` on a stacked [J, N, R, S]
+    tensor: sync stages get the per-step cross-rank minimum (the only
+    wait-free observation a coarse stage vector contains)."""
+    if not sync_stages:
+        return d
+    s = d.shape[-1]
+    mask = jnp.zeros(s, bool).at[jnp.asarray(sync_stages)].set(True)
+    return jnp.where(mask, d.min(axis=2, keepdims=True), d)
+
+
+def _whatif_stats(
+    wt: jax.Array,
+    segments: tuple[tuple[int, int], ...],
+    r_total: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Per-(step, stage) governing-boundary stats for the what-if kernel.
+
+    wt: [NT, S_pad, R_pad] stage-major imputed work.  For each sync
+    segment, replays the arrivals at its boundary (previous release +
+    segment prefix) and reduces them to (max, second, leader); every stage
+    row then carries its own segment's stats.  Returns four [NT, S_pad]
+    arrays: amax, second, leader (i32), relprev.
+    """
+    nt, s_pad, r_pad = wt.shape
+    p = jnp.cumsum(wt, axis=1)                            # [NT, S_pad, R_pad]
+    lanes = jnp.arange(r_pad)[None, :] < r_total          # [1, R_pad]
+    relbase = jnp.zeros((nt,), jnp.float32)
+    amax_rows, sec_rows, lead_rows, relp_rows = [], [], [], []
+    for start, end in segments:
+        seg = p[:, end, :] - (p[:, start - 1, :] if start else 0.0)
+        arr = jnp.where(lanes, relbase[:, None] + seg, -jnp.inf)
+        amax = arr.max(axis=1)                            # [NT]
+        lead = jnp.argmax(arr, axis=1).astype(jnp.int32)  # first on ties
+        masked = jnp.where(
+            jnp.arange(r_pad)[None, :] == lead[:, None], -jnp.inf, arr
+        )
+        second = masked.max(axis=1)                       # -inf when R == 1
+        for _si in range(start, end + 1):
+            amax_rows.append(amax)
+            sec_rows.append(second)
+            lead_rows.append(lead)
+            relp_rows.append(relbase)
+        relbase = amax
+    return (
+        jnp.stack(amax_rows, axis=1),
+        jnp.stack(sec_rows, axis=1),
+        jnp.stack(lead_rows, axis=1),
+        jnp.stack(relp_rows, axis=1),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sync_stages", "r_tile", "interpret")
+)
+def whatif_matrix(
+    d: jax.Array,
+    baseline: jax.Array | None = None,
+    *,
+    sync_stages: tuple[int, ...] | None = None,
+    r_tile: int | None = None,
+    interpret: bool | None = None,
+) -> WhatIfPacket:
+    """Dense [S, R] counterfactual recoverable-time matrix of d[N, R, S].
+
+    Every (stage, rank) candidate is clipped to the baseline (default:
+    cohort median of the imputed work) and the step makespan replayed
+    under the declared sync model — candidates batched into the kernel
+    tiles, steps on the grid.  `sync_stages` is a static tuple of stage
+    indices that end with a group barrier (see `core.whatif`).  The J=1
+    squeeze of `fleet_whatif_matrix` (same wrapper, same kernels).
+    """
+    p = fleet_whatif_matrix(
+        d[None],
+        None if baseline is None else baseline[None],
+        sync_stages=sync_stages,
+        r_tile=r_tile,
+        interpret=interpret,
+    )
+    return WhatIfPacket(matrix=p.matrix[0], exposed=p.exposed[0])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sync_stages", "r_tile", "interpret")
+)
+def fleet_whatif_matrix(
+    d: jax.Array,
+    baseline: jax.Array | None = None,
+    *,
+    sync_stages: tuple[int, ...] | None = None,
+    r_tile: int | None = None,
+    interpret: bool | None = None,
+) -> FleetWhatIfPacket:
+    """Batched per-job what-if matrices for a stacked tensor d[J, N, R, S].
+
+    One fused dispatch covers every job and every candidate: a cheap jnp
+    prolog imputes wait-free work and reduces each step's sync-boundary
+    arrivals to tiny [J*N, S_pad] stats rows, then `whatif_matrix_kernel`
+    folds per-step candidate contributions into per-job [S, R]
+    accumulators — (job, step) pairs on the grid, candidates on the
+    (sublane, lane) tile axes.  Cost is one kernel HBM read of the window
+    tensor instead of S*R replays.  Baselines default to each job's own
+    cohort median of the imputed work (jobs never share a baseline).
+    `sync_stages` must be identical across the stacked jobs — group
+    heterogeneous fleets by sync profile (as `fleet.service` does).
+    """
+    jn, n, r, s = d.shape
+    w = _fleet_imputed_work(d.astype(jnp.float32), sync_stages)
+    wt, bt, r_tile, interpret = _prep_stage_major(
+        w, baseline, r_tile=r_tile, interpret=interpret
+    )
+    s_pad = wt.shape[1]
+    segments = sync_segments(sync_stages, s, s_pad)
+    amax, second, leader, relprev = _whatif_stats(wt, segments, r)
+    wk = whatif_matrix_kernel(
+        wt,
+        bt,
+        amax,
+        second,
+        leader,
+        relprev,
+        segments=segments,
+        r_total=r,
+        r_tile=r_tile,
+        n_steps=n,
+        interpret=interpret,
+    )
+    # observed per-step makespans (fraction denominator): from d, not w.
+    exposed = d.astype(jnp.float32).sum(axis=3).max(axis=2)
+    return FleetWhatIfPacket(matrix=wk[:, :s, :r], exposed=exposed)
+
+
+def _replay_exposed(
+    w: jax.Array, segments: tuple[tuple[int, int], ...]
+) -> jax.Array:
+    """Per-step replayed makespan [N] of work w[N, R, S] (jnp oracle)."""
+    p = jnp.cumsum(w, axis=2)
+    relbase = jnp.zeros(w.shape[0], w.dtype)
+    for start, end in segments:
+        seg = p[:, :, end] - (p[:, :, start - 1] if start else 0.0)
+        relbase = (relbase[:, None] + seg).max(axis=1)
+    return relbase
+
+
+def whatif_matrix_loop(
+    d: jax.Array,
+    baseline: jax.Array | None = None,
+    *,
+    sync_stages: tuple[int, ...] | None = None,
+) -> jax.Array:
+    """Per-candidate counterfactual loop — the route the batched kernel is
+    benchmarked against: one full sync replay per (stage, rank).
+
+    O(S*R) passes over the window tensor; exists for
+    `benchmarks/whatif_matrix.py` and parity tests, never to serve.
+    """
+    n, r, s = d.shape
+    w = _fleet_imputed_work(d.astype(jnp.float32)[None], sync_stages)[0]
+    if baseline is None:
+        baseline = _fleet_median_baseline(w[None])[0]
+    b = jnp.broadcast_to(baseline.astype(jnp.float32), w.shape)
+    segments = sync_segments(sync_stages, s)
+    base = _replay_exposed(w, segments).sum()
+    rows = []
+    for si in range(s):
+        cols = []
+        for ri in range(r):
+            clipped = jnp.minimum(w[:, ri, si], b[:, ri, si])
+            repl = w.at[:, ri, si].set(clipped)
+            cols.append(base - _replay_exposed(repl, segments).sum())
+        rows.append(jnp.stack(cols))
+    return jnp.stack(rows)                                  # [S, R]
 
 
 def frontier_window_reference(

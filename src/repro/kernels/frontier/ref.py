@@ -21,6 +21,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+# the one definition of the barrier-segment boundaries, shared with the
+# NumPy engine and the Pallas wrapper/kernel unroll
+from ...core.whatif import sync_segments
+
 
 class FrontierWindow(NamedTuple):
     frontier: jax.Array       # [N, S] f32
@@ -49,3 +53,63 @@ def frontier_window_ref(d: jax.Array, baseline: jax.Array) -> FrontierWindow:
     final = prefix[:, :, -1][:, :, None]                 # [N, R, 1]
     clipped = (final - excess).max(axis=1)               # [N, S]
     return FrontierWindow(frontier, advances, leader, second, clipped)
+
+
+def whatif_matrix_ref(
+    d: jax.Array,
+    baseline: jax.Array,
+    sync_stages: tuple[int, ...] | None = None,
+) -> jax.Array:
+    """Oracle for the counterfactual what-if route: W[S, R] seconds.
+
+    W[s, r] = sum_t (M[t] - M^{(s,r)<-b}[t]) — clip ONE (stage, rank)
+    cell of the (imputed) work to the baseline and replay the step
+    makespan under the declared sync model.  Per rank, the shift identity
+    applies at the candidate's governing boundary (the first declared
+    barrier at/after its stage, or the window end): only rank r's arrival
+    there drops (by excess = max(0, w - b)), the release is the max
+    arrival, and everything downstream shifts uniformly — so the
+    counterfactual release is max(max over OTHER ranks' arrivals, rank r's
+    shifted arrival), the "other" max being the boundary's top-2.  With no
+    declared syncs this is exactly the final-prefix identity.  The jnp
+    mirror of `repro.core.whatif.step_contributions` and what the Pallas
+    `whatif_matrix` route must match.
+    """
+    d = d.astype(jnp.float32)
+    n, r, s = d.shape
+    syncs = tuple(sorted(set(int(i) for i in (sync_stages or ()))))
+    if syncs:
+        mask = jnp.zeros(s, bool).at[jnp.asarray(syncs)].set(True)
+        w = jnp.where(mask, d.min(axis=1, keepdims=True), d)
+    else:
+        w = d
+    b = jnp.broadcast_to(baseline.astype(jnp.float32), w.shape)
+    excess = jnp.maximum(0.0, w - b)                     # [N, R, S]
+    prefix = jnp.cumsum(w, axis=2)                       # [N, R, S]
+    bounds = sync_segments(syncs, s)
+    contrib = jnp.zeros((n, r, s), jnp.float32)
+    relbase = jnp.zeros((n,), jnp.float32)
+    for seg_start, seg_end in bounds:
+        seg = prefix[:, :, seg_end] - (
+            prefix[:, :, seg_start - 1] if seg_start else 0.0
+        )
+        arr = relbase[:, None] + seg                     # [N, R]
+        amax = arr.max(axis=1)                           # [N]
+        lead = arr.argmax(axis=1)                        # lowest index on ties
+        if r >= 2:
+            onehot = jax.nn.one_hot(lead, r, dtype=bool)
+            second = jnp.where(onehot, -jnp.inf, arr).max(axis=1)
+        else:
+            second = jnp.full((n,), -jnp.inf, jnp.float32)
+        other = jnp.where(
+            jnp.arange(r)[None, :] == lead[:, None],
+            second[:, None],
+            amax[:, None],
+        )                                                # [N, R]
+        e = excess[:, :, seg_start : seg_end + 1]
+        new_a = jnp.maximum(other[:, :, None], arr[:, :, None] - e)
+        contrib = contrib.at[:, :, seg_start : seg_end + 1].set(
+            jnp.maximum(0.0, amax[:, None, None] - new_a)
+        )
+        relbase = amax
+    return contrib.sum(axis=0).T                         # [S, R]

@@ -7,8 +7,10 @@ Simulates a heterogeneous fleet (DDP / FSDP / ZeRO-1 sync profiles, E3
 fault families on a subset of jobs, one job that dies, one whose gather
 degrades), runs each job's windows through the standard WindowAggregator,
 ships the resulting evidence packets over the int8 wire format, and drives
-a `FleetService`: ingest -> tick/evict -> batched kernel refresh -> top-K
-profiler routing.  Prints a JSON summary (the serving response shape).
+a `FleetService`: ingest -> tick/evict -> batched kernel refresh (frontier
++ counterfactual what-if) -> top-K recoverable-time routing.  Prints a
+JSON summary (the serving response shape): each routing entry carries the
+estimated recoverable seconds a fix at its (stage, rank) is worth.
 """
 from __future__ import annotations
 
@@ -117,6 +119,7 @@ def run(args) -> dict:
                 report.window_index,
                 window=report.durations,
                 present_ranks=present,
+                sync_stages=job["scenario"].sync_stages,
             )
             wire = encode_packet(pkt, compress=args.compress)
             service.submit(job["job_id"], wire)
@@ -140,7 +143,8 @@ def run(args) -> dict:
                 "job": r.job_id,
                 "stage": r.stage,
                 "rank": r.rank,
-                "score": round(r.score, 3),
+                "recoverable_s": round(r.recoverable_s, 4),
+                "urgency": round(r.urgency, 3),
                 "labels": list(r.labels),
             }
             for r in routes

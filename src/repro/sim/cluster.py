@@ -11,13 +11,44 @@ one rank (e.g. a host-only callback) surfaces as *next-step* sync wait on
 the others: the cross-step displacement that defeats per-stage max/average
 summaries.
 
-Fault modes:
-  host          delay added to the rank's stage span (host-visible there)
-  comm          collective itself is slow: delay added to the sync release
-                time (everyone observes it in the sync stage)
+Fault modes — and the counterfactual ground truth each implies
+---------------------------------------------------------------
+The simulator is the what-if engine's oracle: because delay is injected
+explicitly, each mode fixes what a perfect intervention could recover
+(`repro.sim.scenarios.injected_recoverable` computes it per candidate).
+
+  host          delay added to the rank's stage span (host-visible there).
+                When the seeded stage is NOT a barrier stage, the delay is
+                observed on the faulted rank before the group reacts:
+                rank-attributable, and the sync-aware counterfactual
+                (`core.whatif`) recovers both the local span and the wait
+                it would have displaced onto the group — ~delay_s per
+                active step, a true lower bound on a fix.  When the seeded
+                stage IS a barrier stage the release shifts for everyone
+                and the observed rows match a slow collective exactly:
+                group-ambiguous, priced ~0 and flagged
+                `sync_stage_ambiguous` (see `scenarios.
+                attributable_recoverable`).
+  comm          the collective itself is slow: delay added to the sync
+                release time, so EVERY rank observes it in the sync stage.
+                Group-wide: no single-rank substitution removes it (and
+                the work imputation absorbs it, since all ranks inflate
+                together) — the correct what-if answer is ~0, flagged
+                `group_wide` / `sync_stage_ambiguous`, routing the
+                operator to the fabric rather than a rank.
   spillover     device work launched in `stage` becomes host-visible in
                 `spill_to` (the paper's forward/device family): only
-                (1-spill_frac) of the delay lands in the seeded stage
+                (1-spill_frac) of the delay lands in the seeded stage, the
+                rest in the spill target.  The ground truth splits the
+                same way across the two (stage, rank) candidates; both sit
+                on the same rank, so the rank localization stays exact
+                even when the stage attribution is split — except for any
+                piece that lands in a barrier stage, which is
+                group-ambiguous per the `host` rule above.
+
+Role groups (`Scenario.roles`) synchronize independently: a fault in one
+role group never displaces wait into another, which is why role-aware
+(grouped) diagnosis is exact per group.
 """
 from __future__ import annotations
 

@@ -4,6 +4,56 @@ The DDP profile uses the paper's six broad stages with backward carrying the
 gradient collective (reducer activity and exposed collective waits land in
 the backward stage, §5).  Magnitudes roughly track the paper's 8-rank runs
 (~208 ms median step, E6).
+
+Fault families (E3) and the counterfactual ground truth each yields
+---------------------------------------------------------------------
+Because the simulator injects delay explicitly, every scenario knows — by
+construction — what a perfect fix would recover, which is what validates
+the what-if engine (`repro.core.whatif`).  `injected_recoverable(sc)`
+returns that ground truth per (stage, rank) candidate.
+
+``data``           host-mode delay in ``data.next_wait`` on one hidden
+                   rank.  Rank-attributable: the delay is host-visible on
+                   the faulted rank *before* the barrier, so the what-if
+                   candidate (data.next_wait, rank) recovers ~delay x
+                   active steps (the sync replay removes the group wait
+                   the delay would have displaced downstream).
+``backward``       host-mode delay inside ``model.backward_cpu_wall`` —
+                   the DDP sync stage itself.  A perfect fix recovers
+                   delay x steps (that is the oracle ground truth), but
+                   from coarse stage durations the fault is
+                   *group-ambiguous*: the release shifts for every rank,
+                   so the observed rows are indistinguishable from a slow
+                   collective.  An honest engine reports ~0 for every
+                   single-rank candidate here and flags
+                   ``sync_stage_ambiguous`` — see
+                   `attributable_recoverable`.
+``backward_comm``  the collective itself is slow: the release time of the
+                   backward sync shifts for EVERY rank.  Deliberately NOT
+                   rank-attributable — no single-rank counterfactual
+                   recovers it, and the work imputation absorbs it (all
+                   ranks inflate together), so the correct what-if answer
+                   is ~0 with the candidate flagged ``group_wide`` /
+                   ``sync_stage_ambiguous``.  `injected_recoverable`
+                   therefore excludes it.
+``forward_device`` device work launched in forward becomes host-visible in
+                   backward (spillover, ``spill_frac=0.8``): the ground
+                   truth splits — ~20% of delay x steps at
+                   (fwd_loss, rank), ~80% at (backward, rank).  Under DDP
+                   only the fwd_loss piece is observed at a non-sync
+                   stage, so only it is attributable from stage spans;
+                   the backward piece is sync-stage-ambiguous (above).
+``forward_host``   host-mode delay in ``model.fwd_loss_cpu_wall``;
+                   rank-attributable at (fwd_loss, rank) under DDP and
+                   ZeRO-1 (non-sync there) — under FSDP fwd_loss is a
+                   barrier stage and the same ambiguity applies.
+
+Sync profiles: **DDP** barriers at backward, **FSDP** at forward and
+backward, **ZeRO-1** at backward and optimizer step — a fault surfaces as
+wait at whichever profile boundary first follows it.  The oracle
+ground-truth recoverable time is profile-independent (the delay is the
+delay), but *which of it is attributable from coarse durations* depends
+on the profile: exactly the candidates observed at non-sync stages.
 """
 from __future__ import annotations
 
@@ -32,6 +82,61 @@ ZERO1_SYNC = (
 
 #: E3 hidden-rank fault families -> fault constructor.
 E3_FAMILIES = ("data", "backward", "backward_comm", "forward_device", "forward_host")
+
+
+def injected_recoverable(sc: Scenario) -> dict[tuple[str, int], float]:
+    """Ground-truth recoverable seconds per (stage, rank) candidate.
+
+    Known by construction: each *rank-attributable* fault contributes
+    ``delay_s x active_steps`` at the stage where the host observes it
+    (spillover faults split ``spill_frac`` of it into their target
+    stage).  ``comm``-mode faults are group-wide — no single-rank
+    intervention removes them — so they are deliberately absent; a
+    correct what-if engine reports ~0 for them.
+
+    This is the *oracle*: what a perfect intervention recovers, including
+    delay injected inside a sync stage that no coarse-duration engine can
+    rank-attribute (see `attributable_recoverable` for the subset an
+    honest engine can price).  `tests/test_whatif.py` and
+    `benchmarks/whatif_matrix.py` score the engine against the
+    attributable subset (acceptance: top-1 recovers >= 90%).
+    """
+    out: dict[tuple[str, int], float] = {}
+
+    def _add(stage: str, rank: int, seconds: float) -> None:
+        key = (stage, rank)
+        out[key] = out.get(key, 0.0) + seconds
+
+    for f in sc.faults:
+        hi = sc.steps if f.end_step is None else min(f.end_step, sc.steps)
+        active = max(0, hi - f.start_step)
+        if not active:
+            continue
+        if f.mode == "host":
+            _add(f.stage, f.rank, f.delay_s * active)
+        elif f.mode == "spillover":
+            _add(f.stage, f.rank, f.delay_s * (1.0 - f.spill_frac) * active)
+            _add(f.spill_to, f.rank, f.delay_s * f.spill_frac * active)
+    return out
+
+
+def attributable_recoverable(sc: Scenario) -> dict[tuple[str, int], float]:
+    """The subset of `injected_recoverable` observable at non-sync stages.
+
+    Delay that first becomes host-visible *inside* a barrier-bearing stage
+    shifts the release for the whole group: every rank's observed span
+    inflates identically (up to jitter), so the faulted rank is
+    information-theoretically hidden from coarse stage durations — a host
+    fault there and a slow collective produce the same rows.  The what-if
+    engine marks such candidates ``sync_stage_ambiguous`` and prices them
+    ~0 rather than guessing; this helper returns the candidates it CAN
+    price, which is what the >= 90% top-1 validation runs against.
+    """
+    return {
+        (stage, rank): v
+        for (stage, rank), v in injected_recoverable(sc).items()
+        if stage not in sc.sync_stages
+    }
 
 
 def e3_fault(family: str, rank: int, delay_s: float) -> Fault:

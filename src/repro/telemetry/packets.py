@@ -41,6 +41,15 @@ class EvidencePacket:
     leader_rank: int
     #: ranks that contributed to the window gather; () = all present.
     present_ranks: tuple[int, ...] = ()
+    #: window denominator sum_t F[t,S] (seconds); converts the relative
+    #: gains G_s into recoverable seconds fleet-side.  -1.0 = unknown
+    #: (packets from pre-whatif emitters decode with this default).
+    exposed_total: float = -1.0
+    #: stage names that end with a group synchronization (the job's sync
+    #: profile: DDP/FSDP/ZeRO-1 declare different barriers).  Drives the
+    #: fleet-side counterfactual replay (`core.whatif` sync model); () =
+    #: undeclared, the what-if engine falls back to pure substitution.
+    sync_stages: tuple[str, ...] = ()
     #: full [N, R, S] matrix (None in compact mode)
     window: np.ndarray | None = None
 
@@ -57,6 +66,7 @@ def from_diagnosis(
     window_index: int,
     window: np.ndarray | None = None,
     present_ranks: tuple[int, ...] = (),
+    sync_stages: tuple[str, ...] = (),
 ) -> EvidencePacket:
     return EvidencePacket(
         window_index=window_index,
@@ -73,6 +83,8 @@ def from_diagnosis(
         downgrade_reasons=diag.downgrade_reasons,
         leader_rank=diag.leader.leader_rank if diag.leader else -1,
         present_ranks=tuple(present_ranks),
+        exposed_total=diag.exposed_makespan_total,
+        sync_stages=tuple(sync_stages),
         window=window,
     )
 
@@ -140,6 +152,8 @@ def decode_packet(data: bytes) -> EvidencePacket:
         else:
             window = np.frombuffer(raw, np.float64).reshape(meta["shape"])
     header.setdefault("present_ranks", [])
+    header.setdefault("exposed_total", -1.0)
+    header.setdefault("sync_stages", [])
     for key in (
         "stages",
         "labels",
@@ -149,6 +163,7 @@ def decode_packet(data: bytes) -> EvidencePacket:
         "co_critical_stages",
         "downgrade_reasons",
         "present_ranks",
+        "sync_stages",
     ):
         header[key] = tuple(header[key])
     return EvidencePacket(window=window, **header)

@@ -1,0 +1,469 @@
+"""What-if counterfactual engine tests: closed form vs replay oracle,
+Pallas kernel parity, streaming equivalence, Eq. 4 bit-for-bit
+properties, injected-fault ground-truth validation, recoverable-time
+routing determinism."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    StreamingFrontier,
+    StreamingWhatIf,
+    imputed_work,
+    make_sync_mask,
+    whatif_matrix,
+    whatif_matrix_naive,
+)
+from repro.core.gain import cohort_median_baseline, direct_exposure_gain
+from repro.core.whatif import (
+    GROUP_WIDE,
+    SINGLE_RANK,
+    SYNC_STAGE_AMBIGUOUS,
+    step_contributions,
+)
+from repro.fleet import FleetService
+from repro.fleet.registry import JobState
+from repro.kernels.frontier import (
+    fleet_whatif_matrix,
+    whatif_matrix_loop,
+    whatif_matrix_ref,
+)
+from repro.kernels.frontier import whatif_matrix as whatif_kernel
+from repro.kernels.frontier.ops import (
+    _fleet_imputed_work,
+    _fleet_median_baseline,
+)
+from repro.sim import simulate
+from repro.sim.scenarios import (
+    DDP_SYNC,
+    FSDP_SYNC,
+    ZERO1_SYNC,
+    attributable_recoverable,
+    ddp_scenario,
+    e3_fault,
+    injected_recoverable,
+)
+
+
+def _masks(s, rng):
+    yield None
+    m = np.zeros(s, bool)
+    m[s // 2] = True
+    yield m
+    yield rng.random(s) < 0.4
+
+
+# ---------------------------------------------------------------------------
+# Closed form vs the S*R-replay oracle
+# ---------------------------------------------------------------------------
+
+
+class TestClosedForm:
+    @pytest.mark.parametrize(
+        "shape", [(1, 1, 3), (6, 5, 5), (9, 8, 6), (3, 2, 2), (5, 1, 4)]
+    )
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_matches_naive_replay(self, shape, seed):
+        rng = np.random.default_rng(seed)
+        d = rng.exponential(1.0, size=shape)
+        for mask in _masks(shape[2], rng):
+            res = whatif_matrix(d, sync_mask=mask)
+            naive = whatif_matrix_naive(d, sync_mask=mask)
+            np.testing.assert_allclose(res.matrix, naive, atol=1e-10)
+            assert (res.matrix >= 0.0).all()
+
+    def test_all_sync_erases_rank_attribution(self):
+        # every stage a barrier: all observed spans are release-aligned,
+        # the imputation equalizes ranks, nothing is rank-attributable.
+        d = np.random.default_rng(0).exponential(1.0, size=(5, 6, 4))
+        res = whatif_matrix(d, sync_mask=np.ones(4, bool))
+        assert res.matrix.max() < 1e-9
+
+    def test_explicit_baseline_clips_never_negative(self):
+        d = np.random.default_rng(3).exponential(1.0, size=(4, 3, 5))
+        res = whatif_matrix(d, baseline=np.zeros_like(d))
+        assert (res.matrix >= 0.0).all()
+        # zero baseline clips everything: the leader's full slack recovers
+        assert res.matrix.sum() > 0.0
+
+    def test_rejects_bad_sync_mask(self):
+        d = np.ones((2, 2, 3))
+        with pytest.raises(ValueError):
+            whatif_matrix(d, sync_mask=np.ones(4, bool))
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel route parity (acceptance: exact vs ref on all shape groups)
+# ---------------------------------------------------------------------------
+
+_SHAPE_GROUPS = [(2, 3, 6), (4, 8, 3), (1, 1, 4), (3, 16, 8)]
+_SLOW_SHAPE_GROUPS = [(3, 33, 6), (2, 129, 7), (6, 8, 8)]
+
+
+class TestKernelRoute:
+    def _check_shape(self, shape, syncs_list):
+        n, r, s = shape
+        d = jnp.asarray(
+            np.random.default_rng(0).exponential(1.0, size=shape),
+            jnp.float32,
+        )
+        for syncs in syncs_list:
+            w = _fleet_imputed_work(d[None], syncs)[0]
+            med = _fleet_median_baseline(w[None])[0]
+            got = whatif_kernel(d, sync_stages=syncs)
+            ref = whatif_matrix_ref(d, med, syncs)
+            np.testing.assert_array_equal(
+                np.asarray(got.matrix), np.asarray(ref)
+            )
+            loop = whatif_matrix_loop(d, sync_stages=syncs)
+            np.testing.assert_allclose(
+                np.asarray(ref), np.asarray(loop), atol=2e-3
+            )
+
+    @pytest.mark.parametrize("shape", _SHAPE_GROUPS)
+    def test_matches_ref_exactly(self, shape):
+        s = shape[2]
+        self._check_shape(shape, [None, (s - 1,), (1,)])
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("shape", _SLOW_SHAPE_GROUPS)
+    def test_matches_ref_exactly_wide(self, shape):
+        s = shape[2]
+        self._check_shape(shape, [None, (1, s - 1)])
+
+    def test_fleet_batch_matches_per_job(self):
+        d = jnp.asarray(
+            np.random.default_rng(2).exponential(1.0, size=(3, 4, 8, 6)),
+            jnp.float32,
+        )
+        fp = fleet_whatif_matrix(d, sync_stages=(2,))
+        for j in range(3):
+            single = whatif_kernel(d[j], sync_stages=(2,))
+            np.testing.assert_array_equal(
+                np.asarray(fp.matrix[j]), np.asarray(single.matrix)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(fp.exposed[j]), np.asarray(single.exposed)
+            )
+
+    def test_matches_core_engine(self):
+        d64 = np.random.default_rng(4).exponential(1.0, size=(5, 8, 6))
+        mask = np.zeros(6, bool)
+        mask[2] = True
+        core = whatif_matrix(d64, sync_mask=mask)
+        kp = whatif_kernel(jnp.asarray(d64, jnp.float32), sync_stages=(2,))
+        np.testing.assert_allclose(
+            np.asarray(kp.matrix), core.matrix, rtol=1e-3, atol=2e-3
+        )
+
+
+# ---------------------------------------------------------------------------
+# Streaming engine equivalence
+# ---------------------------------------------------------------------------
+
+
+class TestStreamingWhatIf:
+    @pytest.mark.parametrize("shape", [(7, 3, 6), (12, 8, 5), (4, 1, 3)])
+    @pytest.mark.parametrize("with_sync", [False, True])
+    def test_bit_for_bit_vs_batch(self, shape, with_sync):
+        n, r, s = shape
+        rng = np.random.default_rng(1)
+        d = rng.exponential(1.0, size=shape)
+        mask = None
+        if with_sync:
+            mask = np.zeros(s, bool)
+            mask[s - 2] = True
+        b = cohort_median_baseline(imputed_work(d, mask))
+        sw = StreamingWhatIf(r, s, b[0], capacity=n, sync_mask=mask)
+        for t in range(n):
+            sw.push(d[t])
+        res = whatif_matrix(d, b, sync_mask=mask)
+        np.testing.assert_array_equal(sw.matrix(), res.matrix)
+        assert sw.exposed_total() == res.exposed_total
+
+    def test_sliding_window_matches_batch_tail(self):
+        d = np.random.default_rng(2).exponential(1.0, size=(23, 4, 5))
+        mask = np.array([0, 0, 1, 0, 0], bool)
+        b = cohort_median_baseline(imputed_work(d[-8:], mask))
+        sw = StreamingWhatIf(4, 5, b[0], capacity=8, sync_mask=mask)
+        for t in range(23):
+            sw.push(d[t])
+        res = whatif_matrix(d[-8:], b, sync_mask=mask)
+        np.testing.assert_array_equal(sw.matrix(), res.matrix)
+        assert sw.steps_seen == 23 and sw.num_steps == 8
+
+    def test_rebase_resets_window(self):
+        sw = StreamingWhatIf(2, 3, np.ones((2, 3)), capacity=4)
+        sw.push(np.ones((2, 3)) * 2)
+        sw.rebase(np.ones((2, 3)) * 0.5)
+        assert sw.num_steps == 0
+        assert sw.matrix().sum() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Seeded invariants (the hypothesis versions live in
+# tests/test_whatif_properties.py, guarded on the optional dependency)
+# ---------------------------------------------------------------------------
+
+
+class TestInvariants:
+    @pytest.mark.parametrize("seed", range(5))
+    def test_stage_gains_bit_for_bit_eq4(self, seed):
+        """The whatif result's per-stage gain entries for the default
+        cohort-median baseline equal `direct_exposure_gain` bit-for-bit
+        (same function, same work matrix, same baseline)."""
+        rng = np.random.default_rng(seed)
+        d = rng.exponential(1.0, size=(4, 3 + seed, 5))
+        res = whatif_matrix(d)
+        b = cohort_median_baseline(d)
+        for s_ in range(d.shape[2]):
+            assert res.stage_gains[s_] == direct_exposure_gain(d, b, s_)
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_single_rank_matrix_is_eq4_numerator(self, seed):
+        """For R == 1 (no sync), clipping the single (s, rank-0) cell IS
+        the whole-stage clip: the matrix row equals G_s x denominator."""
+        d = np.random.default_rng(seed).exponential(1.0, size=(6, 1, 4))
+        res = whatif_matrix(d)
+        b = cohort_median_baseline(d)
+        for s_ in range(d.shape[2]):
+            want = direct_exposure_gain(d, b, s_) * res.exposed_total
+            np.testing.assert_allclose(
+                res.matrix[s_, 0], want, rtol=1e-9, atol=1e-9
+            )
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_contributions_nonnegative_and_bounded(self, seed):
+        rng = np.random.default_rng(seed)
+        d = rng.exponential(1.0, size=(5, 4, 6))
+        use = rng.random(6) < 0.4
+        use = use if use.any() else None
+        b = cohort_median_baseline(imputed_work(d, use))
+        contrib, exposed = step_contributions(d, b, use)
+        assert (contrib >= 0.0).all()
+        # no single intervention recovers more than the step's makespan
+        assert (contrib <= exposed[:, None, None] + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# Injected-fault ground truth (acceptance: top-1 recovers >= 90%)
+# ---------------------------------------------------------------------------
+
+
+class TestInjectedFaults:
+    @pytest.mark.parametrize("family", ["data", "forward_host"])
+    @pytest.mark.parametrize(
+        "sync", [DDP_SYNC, ZERO1_SYNC], ids=["ddp", "zero1"]
+    )
+    @pytest.mark.parametrize("seed", [0, 3])
+    def test_top1_recovers_90pct(self, family, sync, seed):
+        rank = (seed * 7 + 3) % 8
+        sc = ddp_scenario(
+            world_size=8,
+            steps=25,
+            seed=seed,
+            faults=(e3_fault(family, rank, 0.15),),
+            sync=sync,
+        )
+        res = simulate(sc)
+        wif = whatif_matrix(
+            res.durations,
+            sync_mask=make_sync_mask(sc.stages, sc.sync_stages),
+        )
+        truth = attributable_recoverable(sc)
+        key = max(truth, key=truth.get)
+        top = wif.top(1)[0]
+        assert (sc.stages[top.stage], top.rank) == key
+        assert top.recoverable_s >= 0.9 * truth[key]
+        assert top.feasible, top.flags
+
+    def test_spillover_attributable_piece(self):
+        # forward_device under DDP: 20% lands at fwd_loss (non-sync) and
+        # is attributable; 80% lands in the backward barrier and must NOT
+        # be pinned on a rank.
+        sc = ddp_scenario(
+            world_size=8,
+            steps=25,
+            seed=1,
+            faults=(e3_fault("forward_device", 5, 0.2),),
+        )
+        res = simulate(sc)
+        wif = whatif_matrix(
+            res.durations,
+            sync_mask=make_sync_mask(sc.stages, sc.sync_stages),
+        )
+        truth = attributable_recoverable(sc)
+        key = max(truth, key=truth.get)
+        top = wif.top(1)[0]
+        assert (sc.stages[top.stage], top.rank) == key
+        assert top.recoverable_s >= 0.9 * truth[key]
+        # the oracle knows more was injected than is attributable
+        assert sum(injected_recoverable(sc).values()) > sum(truth.values())
+
+    @pytest.mark.parametrize("family", ["backward", "backward_comm"])
+    def test_sync_stage_faults_never_pinned_on_a_rank(self, family):
+        sc = ddp_scenario(
+            world_size=8,
+            steps=25,
+            seed=2,
+            faults=(e3_fault(family, 4, 0.15),),
+        )
+        res = simulate(sc)
+        wif = whatif_matrix(
+            res.durations,
+            sync_mask=make_sync_mask(sc.stages, sc.sync_stages),
+        )
+        injected = 0.15 * sc.steps
+        assert wif.top(1)[0].recoverable_s < 0.1 * injected
+        # sync-stage candidates carry the honesty flag
+        sync_idx = sc.stages.index("model.backward_cpu_wall")
+        flagged = [
+            iv
+            for iv in wif.top(len(sc.stages) * 8)
+            if iv.stage == sync_idx
+        ]
+        assert flagged
+        assert all(SYNC_STAGE_AMBIGUOUS in iv.flags for iv in flagged)
+
+
+# ---------------------------------------------------------------------------
+# Feasibility flags
+# ---------------------------------------------------------------------------
+
+
+class TestFlags:
+    def test_single_rank_flag(self):
+        d = np.random.default_rng(0).exponential(1.0, size=(4, 1, 3))
+        top = whatif_matrix(d).top(1)[0]
+        assert SINGLE_RANK in top.flags and not top.feasible
+
+    def test_group_wide_flag_on_collective(self):
+        sc = ddp_scenario(
+            world_size=8,
+            steps=20,
+            seed=7,
+            faults=(e3_fault("backward_comm", 5, 0.15),),
+        )
+        res = simulate(sc)
+        # WITHOUT a declared sync profile the engine still refuses to pin
+        # the collective on a rank: the whole-stage clip dwarfs every
+        # single-rank candidate at the backward stage.
+        wif = whatif_matrix(res.durations)
+        bwd = sc.stages.index("model.backward_cpu_wall")
+        cands = [iv for iv in wif.top(48) if iv.stage == bwd]
+        assert cands and all(GROUP_WIDE in iv.flags for iv in cands)
+
+    def test_ordering_deterministic_on_ties(self):
+        res = whatif_matrix(np.zeros((3, 2, 2)) + 1.0)
+        ivs = res.top(4)
+        assert [(iv.stage, iv.rank) for iv in ivs] == [
+            (0, 0), (0, 1), (1, 0), (1, 1),
+        ]
+
+
+# ---------------------------------------------------------------------------
+# Recoverable-time routing: deterministic tie ordering
+# ---------------------------------------------------------------------------
+
+
+class TestRouteDeterminism:
+    def _job(self, jid, matrix, *, degraded=False):
+        job = JobState(
+            job_id=jid,
+            stages=("alpha", "beta"),
+            world_size=2,
+            schema_hash="h",
+            streaming=StreamingFrontier(2, 2, capacity=4),
+        )
+        job.whatif = np.asarray(matrix, float)
+        job.degraded = degraded
+        return job
+
+    def test_ties_break_by_job_id_not_insertion_order(self):
+        svc = FleetService()
+        m = [[1.5, 0.5], [0.25, 0.0]]
+        for jid in ["zeta", "beta", "alpha"]:  # worst-case insertion order
+            svc.registry._jobs[jid] = self._job(jid, m)
+        routes = svc.route(3)
+        assert [r.job_id for r in routes] == ["alpha", "beta", "zeta"]
+        assert all(r.score == 1.5 for r in routes)
+        assert all(r.stage == "alpha" and r.rank == 0 for r in routes)
+
+    def test_ranked_by_recoverable_seconds(self):
+        svc = FleetService()
+        svc.registry._jobs["small"] = self._job("small", [[0.1, 0.0], [0, 0]])
+        svc.registry._jobs["big"] = self._job("big", [[0.0, 2.0], [0, 0]])
+        svc.registry._jobs["dead"] = self._job(
+            "dead", [[9.0, 9.0], [9, 9]], degraded=True
+        )
+        routes = svc.route(5)
+        assert [r.job_id for r in routes] == ["big", "small"]
+        assert routes[0].rank == 1 and routes[0].recoverable_s == 2.0
+        # degraded jobs never route, whatever their matrix says
+        assert all(r.job_id != "dead" for r in routes)
+
+    def test_route_is_stable_across_calls(self):
+        svc = FleetService()
+        for jid in ["c", "a", "b"]:
+            svc.registry._jobs[jid] = self._job(jid, [[1.0, 0.0], [0, 0]])
+        first = [r.job_id for r in svc.route(3)]
+        assert first == [r.job_id for r in svc.route(3)] == ["a", "b", "c"]
+
+    def test_legacy_compact_packet_still_routes(self):
+        """Packets from pre-whatif emitters (exposed_total = -1, no
+        window) must stay routable on their gain fraction — the
+        recoverable ladder degrades, it never empties the fleet."""
+        from repro.telemetry.packets import EvidencePacket
+
+        pkt = EvidencePacket(
+            window_index=0,
+            schema_hash="h",
+            stages=("alpha", "beta"),
+            steps=5,
+            world_size=2,
+            gather_ok=True,
+            labels=("frontier_accounting",),
+            routing_stages=("beta",),
+            shares=(0.4, 0.6),
+            gains=(0.05, 0.3),
+            co_critical_stages=(),
+            downgrade_reasons=(),
+            leader_rank=1,
+        )
+        assert pkt.exposed_total == -1.0 and pkt.window is None
+        svc = FleetService()
+        svc.submit("legacy", pkt)
+        routes = svc.route(1)
+        assert routes and routes[0].job_id == "legacy"
+        assert routes[0].stage == "beta" and routes[0].rank == 1
+        assert routes[0].recoverable_s == pytest.approx(0.3)
+
+    def test_single_job_sync_groups_all_refresh(self):
+        """Same window shape but three different sync profiles must not
+        starve the refresh: every dirty group refreshes by default."""
+        from repro.core import WindowAggregator
+        from repro.telemetry.packets import from_diagnosis
+
+        svc = FleetService(window_capacity=6)
+        for j, sync in enumerate([(), ("model.backward_cpu_wall",), FSDP_SYNC]):
+            sc = ddp_scenario(world_size=4, steps=6, seed=j, sync=sync)
+            res = simulate(sc)
+            agg = WindowAggregator(sc.schema(), window_steps=6)
+            report = None
+            for t in range(6):
+                report = agg.add_step(
+                    res.durations[t], res.durations[t].sum(-1)
+                ) or report
+            svc.submit(
+                f"j{j}",
+                from_diagnosis(
+                    report.diagnosis, sc.stages, report.steps, 4,
+                    report.window_index, window=report.durations,
+                    sync_stages=sc.sync_stages,
+                ),
+            )
+        assert svc.refresh_batched() == 3
+        for j in range(3):
+            job = svc.registry.get(f"j{j}")
+            assert job.whatif is not None
+            assert job.last_window is None  # released after refresh

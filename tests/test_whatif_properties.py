@@ -1,0 +1,104 @@
+"""Property-based tests (hypothesis) for the what-if engine invariants:
+Eq. 4 bit-for-bit agreement, streaming == batch, replay-oracle parity."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra.numpy import arrays
+
+from repro.core import (
+    StreamingWhatIf,
+    imputed_work,
+    whatif_matrix,
+    whatif_matrix_naive,
+)
+from repro.core.gain import cohort_median_baseline, direct_exposure_gain
+from repro.core.whatif import step_contributions
+
+#: (durations [N, R, S], sync-mask bit pattern) — small windows, any mask.
+cases = st.integers(1, 5).flatmap(
+    lambda n: st.integers(1, 6).flatmap(
+        lambda r: st.integers(2, 6).flatmap(
+            lambda s: st.tuples(
+                arrays(
+                    np.float64,
+                    (n, r, s),
+                    elements=st.floats(
+                        0.0, 1e6, allow_nan=False, allow_infinity=False
+                    ),
+                ),
+                st.integers(0, 2 ** s - 1),
+            )
+        )
+    )
+)
+
+
+def _mask(bits, s):
+    m = np.array([(bits >> i) & 1 for i in range(s)], bool)
+    return m if m.any() else None
+
+
+@settings(max_examples=80, deadline=None)
+@given(cases)
+def test_stage_gains_bit_for_bit_eq4(case):
+    """The whatif matrix result's per-stage gain entry for the default
+    cohort-median baseline equals `direct_exposure_gain` from `core.gain`
+    bit-for-bit."""
+    d, _ = case
+    res = whatif_matrix(d)
+    b = cohort_median_baseline(d)
+    for s_ in range(d.shape[2]):
+        assert res.stage_gains[s_] == direct_exposure_gain(d, b, s_)
+
+
+@settings(max_examples=60, deadline=None)
+@given(cases)
+def test_single_rank_matrix_is_eq4_numerator(case):
+    """For R == 1 (no sync), the single (s, rank-0) clip IS the
+    whole-stage clip: the matrix row equals G_s x denominator."""
+    d, _ = case
+    d = d[:, :1, :]
+    res = whatif_matrix(d)
+    b = cohort_median_baseline(d)
+    for s_ in range(d.shape[2]):
+        want = direct_exposure_gain(d, b, s_) * res.exposed_total
+        np.testing.assert_allclose(
+            res.matrix[s_, 0], want, rtol=1e-9, atol=1e-9
+        )
+
+
+@settings(max_examples=80, deadline=None)
+@given(cases)
+def test_streaming_whatif_equals_batch_bit_for_bit(case):
+    d, bits = case
+    n, r, s = d.shape
+    use = _mask(bits, s)
+    b = cohort_median_baseline(imputed_work(d, use))
+    sw = StreamingWhatIf(r, s, b[0], capacity=n, sync_mask=use)
+    for t in range(n):
+        sw.push(d[t])
+    res = whatif_matrix(d, b, sync_mask=use)
+    np.testing.assert_array_equal(sw.matrix(), res.matrix)
+
+
+@settings(max_examples=40, deadline=None)
+@given(cases)
+def test_closed_form_matches_replay_oracle(case):
+    d, bits = case
+    use = _mask(bits, d.shape[2])
+    res = whatif_matrix(d, sync_mask=use)
+    naive = whatif_matrix_naive(d, sync_mask=use)
+    np.testing.assert_allclose(res.matrix, naive, rtol=1e-9, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(cases)
+def test_contributions_nonnegative_and_bounded(case):
+    d, bits = case
+    use = _mask(bits, d.shape[2])
+    b = cohort_median_baseline(imputed_work(d, use))
+    contrib, exposed = step_contributions(d, b, use)
+    assert (contrib >= -1e-9).all()
+    assert (contrib <= exposed[:, None, None] + 1e-6).all()

@@ -1,0 +1,89 @@
+"""Extract and run the ```bash code blocks from markdown docs.
+
+    PYTHONPATH=src python tools/run_doc_examples.py README.md docs/*.md
+
+Enforces the docs' "commands run as written" guarantee: every fenced
+block whose info string is exactly ``bash`` is executed (as one shell
+script, ``bash -e``) from the repo root.  A block may be excluded by
+placing an HTML comment ``<!-- docs-run: skip -->`` on any of the three
+lines above its opening fence (used for blocks that duplicate work CI
+already runs in full, e.g. the tier-1 pytest command).
+
+Exit code 0 iff every executed block succeeded; each block's verdict is
+printed with its source location.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import subprocess
+import sys
+
+SKIP_MARK = "docs-run: skip"
+TIMEOUT_S = 1200
+
+
+def extract_blocks(path: pathlib.Path) -> list[tuple[int, str, bool]]:
+    """Return (first_line_number, script, skipped) per ```bash block."""
+    lines = path.read_text().splitlines()
+    blocks = []
+    i = 0
+    while i < len(lines):
+        if lines[i].strip() == "```bash":
+            skipped = any(
+                SKIP_MARK in lines[j]
+                for j in range(max(0, i - 3), i)
+            )
+            body = []
+            i += 1
+            start = i + 1
+            while i < len(lines) and lines[i].strip() != "```":
+                body.append(lines[i])
+                i += 1
+            blocks.append((start, "\n".join(body), skipped))
+        i += 1
+    return blocks
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    root = pathlib.Path(__file__).resolve().parent.parent
+    failures = 0
+    ran = 0
+    for name in argv:
+        path = pathlib.Path(name)
+        for lineno, script, skipped in extract_blocks(path):
+            where = f"{name}:{lineno}"
+            if skipped:
+                print(f"SKIP  {where} (marked {SKIP_MARK!r})")
+                continue
+            ran += 1
+            try:
+                proc = subprocess.run(
+                    ["bash", "-e", "-c", script],
+                    cwd=root,
+                    timeout=TIMEOUT_S,
+                    capture_output=True,
+                    text=True,
+                )
+                ok = proc.returncode == 0
+            except subprocess.TimeoutExpired:
+                ok, proc = False, None
+            if ok:
+                print(f"PASS  {where}")
+            else:
+                failures += 1
+                print(f"FAIL  {where}")
+                if proc is not None:
+                    sys.stdout.write(proc.stdout[-2000:])
+                    sys.stdout.write(proc.stderr[-2000:])
+                else:
+                    print(f"  (timed out after {TIMEOUT_S}s)")
+    print(f"\n{ran - failures}/{ran} doc blocks passed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
