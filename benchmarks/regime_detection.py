@@ -1,0 +1,146 @@
+"""Temporal regime engine: detection latency, accuracy, route throughput.
+
+Three measurements:
+
+  1. classification accuracy vs injected ground truth: every temporal
+     fault family (`sim.scenarios.REGIME_FAMILIES` — self-healing blip,
+     intermittent data stalls, step-function degradation, slow thermal
+     drift) across seeds must classify the seeded candidate as its
+     by-construction label, with no stray non-`none` calls on healthy
+     candidates — acceptance: >= 90% correct;
+  2. detection latency: stream the same scenarios one step at a time
+     through `StreamingRegimes` and record how many steps after the
+     injected onset the seeded candidate first leaves `none` (the
+     "escalate to heavy profiling" trigger of continuous-diagnosis
+     systems);
+  3. batched kernel route (`kernels.frontier.fleet_regime_stats` — all
+     jobs in one dispatch, candidates on the tile axes, steps on the
+     grid) vs the per-job dispatch loop (`regime_stats_loop`) —
+     acceptance: batched >= loop.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import RegimeParams, StreamingRegimes, make_sync_mask, segment_regimes
+from repro.core.regimes import excess_stream
+from repro.kernels.frontier import fleet_regime_stats, regime_stats_loop
+from repro.sim import simulate
+from repro.sim.scenarios import (
+    REGIME_FAMILIES,
+    injected_activity,
+    regime_fault_rank,
+    regime_scenario,
+)
+
+from .common import emit, time_us
+
+_STAGE = "data.next_wait"
+
+
+def validate_classification(seeds: int = 6, steps: int = 60) -> float:
+    """Fraction of (family, seed) runs classified correctly, stray-free."""
+    correct = 0
+    total = 0
+    for family, want in REGIME_FAMILIES.items():
+        for seed in range(seeds):
+            sc = regime_scenario(family, steps=steps, seed=seed)
+            res = simulate(sc)
+            rr = segment_regimes(
+                res.durations,
+                sync_mask=make_sync_mask(sc.stages, sc.sync_stages),
+            )
+            rank = regime_fault_rank(seed)
+            si = sc.stages.index(_STAGE)
+            got = rr.label_name(si, rank)
+            strays = rr.labels.copy()
+            strays[si, rank] = 0
+            total += 1
+            if got == want and not strays.any():
+                correct += 1
+        emit(f"regime_detection/classify_{family}", 0.0, f"want={want}")
+    acc = correct / total
+    emit("regime_detection/accuracy", 0.0, f"correct={correct}/{total}")
+    return acc
+
+
+def measure_latency(seeds: int = 4, steps: int = 60) -> float:
+    """Mean steps from first detectable injected delay to first non-none
+    call at the seeded candidate, streaming one step at a time."""
+    latencies = []
+    for family in REGIME_FAMILIES:
+        fam_lat = []
+        for seed in range(seeds):
+            sc = regime_scenario(family, steps=steps, seed=seed)
+            res = simulate(sc)
+            rank = regime_fault_rank(seed)
+            si = sc.stages.index(_STAGE)
+            mask = make_sync_mask(sc.stages, sc.sync_stages)
+            _, base = excess_stream(res.durations, sync_mask=mask)
+            params = RegimeParams()
+            thresh = params.threshold(base)[rank, si]
+            inj = injected_activity(sc, _STAGE, rank)
+            detectable = np.flatnonzero(inj > thresh)
+            if not detectable.size:
+                continue
+            sr = StreamingRegimes(
+                sc.world_size, len(sc.stages), base,
+                capacity=steps, sync_mask=mask, params=params,
+            )
+            first = None
+            for t in range(steps):
+                sr.push(res.durations[t])
+                if first is None and sr.result().labels[si, rank] != 0:
+                    first = t
+            assert first is not None, (family, seed, "never detected")
+            fam_lat.append(first - int(detectable[0]))
+        mean = float(np.mean(fam_lat))
+        latencies.extend(fam_lat)
+        emit(f"regime_detection/latency_{family}", 0.0,
+             f"mean_steps={mean:.2f}")
+    return float(np.mean(latencies))
+
+
+def bench_kernel(jn: int = 64, n: int = 5, r: int = 64, s: int = 6) -> float:
+    """Batched vs per-job dispatch in the regime the fleet sees: MANY
+    small jobs, where per-job dispatch overhead is what batching
+    amortizes (same shape argument as `benchmarks/fleet_scale.py`)."""
+    rng = np.random.default_rng(0)
+    d = jnp.asarray(rng.exponential(0.05, size=(jn, n, r, s)), jnp.float32)
+    syncs = (2,)
+    # warm both jit caches before timing
+    fleet_regime_stats(d, sync_stages=syncs).count.block_until_ready()
+    regime_stats_loop(d, sync_stages=syncs).count.block_until_ready()
+    batched_us = time_us(
+        lambda: fleet_regime_stats(d, sync_stages=syncs)
+        .count.block_until_ready(),
+        repeat=3,
+    )
+    loop_us = time_us(
+        lambda: regime_stats_loop(d, sync_stages=syncs)
+        .count.block_until_ready(),
+        repeat=3,
+    )
+    speedup = loop_us / batched_us
+    emit(
+        f"regime_detection/kernel_batched_{jn}jx{n}x{r}x{s}",
+        batched_us,
+        f"per_job_loop_us={loop_us:.0f} batched_speedup={speedup:.2f}x",
+    )
+    return speedup
+
+
+def main() -> None:
+    acc = validate_classification()
+    lat = measure_latency()
+    emit("regime_detection/mean_latency", 0.0, f"steps={lat:.2f}")
+    k = bench_kernel()
+    # acceptance: >= 90% of injected fault families classify correctly,
+    # and the batched regime route beats the per-job dispatch loop.
+    assert acc >= 0.9, f"regime classification accuracy below 90%: {acc:.3f}"
+    assert k >= 1.0, f"batched regime route lost to the per-job loop: {k:.2f}x"
+
+
+if __name__ == "__main__":
+    main()

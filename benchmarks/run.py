@@ -24,6 +24,7 @@ MODULES = [
     ("kernel_frontier", "fused frontier kernel throughput"),
     ("fleet_scale", "fleet ingest jobs/sec + batched [J,N,R,S] accounting"),
     ("whatif_matrix", "counterfactual what-if matrix vs per-candidate loop"),
+    ("regime_detection", "temporal regime classification + batched route"),
 ]
 
 

@@ -8,16 +8,34 @@ faults:
   1. a fleet of jobs (mixed DDP/FSDP/ZeRO-1 sync profiles) streams evidence
      packets over the int8 wire format into a FleetService; injected E3
      faults must surface in the top-K profiler routing with the seeded
-     stage and rank, and the top entry's counterfactual recoverable
-     seconds must cover >= 90% of the known injected delay (the routing
-     score IS the what-if answer, replayed under each job's declared sync
-     profile);
+     stage and rank, the top entry's counterfactual recoverable seconds
+     must cover >= 90% of the known injected delay (the routing score IS
+     the what-if answer, replayed under each job's declared sync profile),
+     and the always-on fault must classify `persistent` with full
+     persistence weight (the temporal regime engine, `core.regimes`);
   2. the incremental StreamingFrontier state matches the batch pass
      bit-for-bit while never holding a [N, R, S] window;
   3. failure drill: one job dies (evicted), one job's gather degrades
      (telemetry_limited -> excluded from routing, dead ranks recorded);
   4. the fused [J, N, R, S] fleet kernel re-accounts every window-carrying
      job in one dispatch and agrees with the per-job path.
+
+Sample output (regenerated; each routing line carries the counterfactual
+price plus the temporal regime columns):
+
+    fleet service summary:
+      jobs=8 degraded=1 evicted=1 wire bytes/packet=2272
+      route -> job-000-ddp: data.next_wait rank 3 recoverable 4.9685s \\
+          regime=persistent persistence=1.0 onset=0
+      route -> job-003-ddp: model.fwd_loss_cpu_wall rank 0 recoverable \\
+          0.9643s regime=persistent persistence=1.0 onset=0
+      ...
+    streaming engine: 40 steps folded, top stage data.next_wait (seeded
+    data.next_wait) — bit-exact
+    fleet kernel: 4 jobs x 256 ranks in one dispatch, top stages
+    ['data.next_wait', 'data.next_wait', 'data.next_wait', 'data.next_wait']
+
+    OK: fleet service + streaming engine + fused fleet kernel
 """
 import sys
 
@@ -48,7 +66,9 @@ def main() -> None:
           f"wire bytes/packet={summary['wire_bytes_per_packet']}")
     for r in summary["routing"]:
         print(f"  route -> {r['job']}: {r['stage']} rank {r['rank']} "
-              f"recoverable {r['recoverable_s']}s")
+              f"recoverable {r['recoverable_s']}s "
+              f"regime={r['regime'] or '?'} persistence={r['persistence']} "
+              f"onset={r['onset_step']}")
     assert summary["snapshot"]["evicted_total"] >= 1, "dead job must evict"
     assert summary["snapshot"]["degraded_jobs"] >= 1, "bad gather must degrade"
     routed_jobs = {r["job"] for r in summary["routing"]}
@@ -64,6 +84,10 @@ def main() -> None:
     assert top["job"].startswith("job-000"), top
     assert top["stage"] == "data.next_wait" and top["rank"] == 3, top
     assert top["recoverable_s"] >= 0.9 * injected, (top, injected)
+    # the fault never heals, so the regime engine must call it persistent
+    # (live since onset) and keep its full routing weight
+    assert top["regime"] == "persistent" and top["persistence"] == 1.0, top
+    assert top["onset_step"] == 0, top
 
     # --- 2. streaming state == batch pass, bit-for-bit ----------------------
     sc = hidden_rank_scenario("data", world_size=64, steps=40, seed=5,

@@ -5,6 +5,21 @@
 Serves a reduced model with batched requests through the KV-cache decode
 path; the serving-taxonomy monitor windows the request/prefill/decode
 stages under the same ordered-stage contract as training.
+
+Sample output (regenerated; `last_window_labels` / `last_window_routing`
+are the monitor's evidence-scoped labels and share-ordered routing set
+of the last closed window — the single-rank reduced demo routes its
+prefill-dominated window to `prefill.cpu_wall`; tokens/s varies by host):
+
+    === serve demo summary ===
+    arch: paper-gpt-125m
+    batch: 4
+    decoded: 24
+    tokens_per_second: 31.74
+    last_window_labels: ['frontier_accounting']
+    last_window_routing: ['prefill.cpu_wall']
+    sample_output: [135, 22, 22, 22, 22, 80, 22, 80]
+    OK
 """
 import sys
 

@@ -12,6 +12,7 @@ Layers:
   windows       bounded streaming window aggregation
   streaming     incremental one-step-at-a-time frontier engine (fleet path)
   whatif        counterfactual per-(stage, rank) recoverable-time matrix
+  regimes       temporal regime segmentation (transient/recurring/persistent)
 """
 from .contract import (
     FUSED_STAGES,
@@ -65,7 +66,30 @@ from .accumulation import (
     expand_schema,
     semantic_groups,
 )
-from .streaming import StreamingFrontier, StreamingWhatIf, StreamingWindowState
+from .regimes import (
+    NONE,
+    PERSISTENT,
+    RECURRING,
+    REGIME_NAMES,
+    TRANSIENT,
+    RegimeCall,
+    RegimeParams,
+    RegimeResult,
+    RegimeSegment,
+    RegimeStats,
+    classify,
+    excess_stream,
+    persistence_weight,
+    regime_stats,
+    segment_regimes,
+    segment_stream,
+)
+from .streaming import (
+    StreamingFrontier,
+    StreamingRegimes,
+    StreamingWhatIf,
+    StreamingWindowState,
+)
 from .whatif import (
     Intervention,
     WhatIfResult,

@@ -27,7 +27,12 @@ import numpy as np
 
 from .frontier import frontier_accounting, window_shares
 
-__all__ = ["StreamingFrontier", "StreamingWindowState", "StreamingWhatIf"]
+__all__ = [
+    "StreamingFrontier",
+    "StreamingRegimes",
+    "StreamingWindowState",
+    "StreamingWhatIf",
+]
 
 
 class _Ring:
@@ -336,3 +341,168 @@ class StreamingWhatIf:
     def exposed_total(self) -> float:
         """sum_t F[t, S] over the window (the fraction denominator)."""
         return float(self._exposed[self._ring.order()].sum())
+
+
+class StreamingRegimes:
+    """Incremental temporal regime engine over a sliding window of steps.
+
+    The batch engine (`core.regimes.segment_regimes`) wants the whole
+    [N, R, S] window; the fleet aggregator sees one step matrix at a
+    time, and the temporal question — is the fault still happening? —
+    needs a history *longer* than one evidence packet.  Each pushed step
+    is reduced to its per-candidate excess row e[R, S] (the
+    exposed-increment stream's value at this step, computed against a
+    reference fixed at construction) and retained in a ring buffer; the
+    raw step matrix is dropped at fold time.
+
+    The reference is fixed at construction for the same reason as
+    `StreamingWhatIf`'s baseline: a window-derived reference cannot be
+    known at push time, and re-deriving it per push would make early and
+    late folds of the same step disagree.  `rebase(baseline)` swaps
+    references and resets the window.  `sync_mask` declares
+    barrier-bearing stages; the imputation is per-step (cross-rank
+    minimum), so the streaming fold models it exactly like the batch
+    pass.
+
+    Equivalence contract (property-tested): `result()` is **bit-for-bit**
+    equal to ``segment_regimes(stacked, baseline, sync_mask=...,
+    params=...)`` over the same trailing `capacity` steps — both paths
+    build the identical excess rows and run the identical reductions
+    (`core.regimes.regime_stats`) over them.  Onset/last/streak indices
+    are window-relative; `steps_seen` converts them to stream
+    coordinates.
+    """
+
+    def __init__(
+        self,
+        world_size: int,
+        num_stages: int,
+        baseline: np.ndarray,
+        *,
+        capacity: int = 100,
+        sync_mask=None,
+        params=None,
+        dtype=np.float64,
+    ):
+        """`dtype` sets the excess ring's storage precision.  float64
+        (default) keeps the bit-for-bit equivalence with the batch pass;
+        float32 halves the retained bytes (the fleet registry's choice —
+        classification thresholds sit far above f32 resolution, and the
+        Pallas route reduces in f32 anyway)."""
+        from .regimes import RegimeParams
+
+        if world_size < 1 or num_stages < 1:
+            raise ValueError("world_size and num_stages must be >= 1")
+        self.world_size = world_size
+        self.num_stages = num_stages
+        self.params = params or RegimeParams()
+        self._ring = _Ring(capacity)
+        self._baseline = np.broadcast_to(
+            np.asarray(baseline, dtype=np.float64),
+            (world_size, num_stages),
+        ).copy()
+        self._thresh = self.params.threshold(self._baseline)
+        self._sync_mask = (
+            None
+            if sync_mask is None
+            else np.asarray(sync_mask, dtype=bool).copy()
+        )
+        if self._sync_mask is not None and self._sync_mask.shape != (
+            num_stages,
+        ):
+            raise ValueError(
+                f"sync_mask must be [S]=({num_stages},), "
+                f"got {self._sync_mask.shape}"
+            )
+        self._excess = np.zeros((capacity, world_size, num_stages), dtype)
+
+    @property
+    def capacity(self) -> int:
+        return self._ring.capacity
+
+    @property
+    def baseline(self) -> np.ndarray:
+        return self._baseline
+
+    @property
+    def num_steps(self) -> int:
+        return self._ring.count
+
+    @property
+    def steps_seen(self) -> int:
+        return self._ring.seen
+
+    def push(self, durations: np.ndarray) -> int:
+        """Fold one step matrix d[R, S]; returns the lifetime step index."""
+        from .regimes import excess_stream
+
+        d = np.asarray(durations, dtype=np.float64)
+        if d.shape != (self.world_size, self.num_stages):
+            raise ValueError(
+                f"expected [R,S]=({self.world_size},{self.num_stages}), "
+                f"got {d.shape}"
+            )
+        e, _ = excess_stream(d[None], self._baseline, sync_mask=self._sync_mask)
+        i = self._ring.advance()
+        self._excess[i] = e[0]
+        return self._ring.seen - 1
+
+    def push_many(self, durations: np.ndarray) -> int:
+        """Fold a whole [N, R, S] block (bit-identical to N pushes —
+        the excess rows are per-step independent).  Returns the lifetime
+        index of the last folded step."""
+        from .regimes import excess_stream
+
+        d = np.asarray(durations, dtype=np.float64)
+        if d.ndim != 3 or d.shape[1:] != (self.world_size, self.num_stages):
+            raise ValueError(
+                f"expected [N,R,S]=(*,{self.world_size},{self.num_stages}), "
+                f"got {d.shape}"
+            )
+        n = d.shape[0]
+        if n == 0:
+            return self._ring.seen - 1
+        keep = min(n, self.capacity)
+        e, _ = excess_stream(
+            d[n - keep:], self._baseline, sync_mask=self._sync_mask
+        )
+        idx = (self._ring.next + np.arange(n - keep, n)) % self.capacity
+        self._excess[idx] = e
+        self._ring.advance(n)
+        return self._ring.seen - 1
+
+    def rebase(self, baseline: np.ndarray) -> None:
+        """Swap the reference; resets the window (excess rows against the
+        old reference are not comparable to new ones)."""
+        self._baseline = np.broadcast_to(
+            np.asarray(baseline, dtype=np.float64),
+            (self.world_size, self.num_stages),
+        ).copy()
+        self._thresh = self.params.threshold(self._baseline)
+        self.reset()
+
+    def reset(self) -> None:
+        self._ring.reset()
+
+    def stats(self):
+        """Window `RegimeStats` ([S, R]-oriented, window-relative steps)."""
+        from .regimes import regime_stats
+
+        o = self._ring.order()
+        return regime_stats(self._excess[o], self._thresh)
+
+    def result(self):
+        """Full window classification — identical to the batch pass."""
+        from .regimes import (
+            RegimeResult,
+            classify,
+            persistence_weight,
+        )
+
+        stats = self.stats()
+        return RegimeResult(
+            stats=stats,
+            labels=classify(stats, self.params),
+            weights=persistence_weight(stats, self.params),
+            params=self.params,
+        )

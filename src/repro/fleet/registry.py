@@ -22,7 +22,9 @@ import dataclasses
 
 import numpy as np
 
-from ..core.streaming import StreamingFrontier
+from ..core.regimes import REGIME_NAMES, RegimeCall
+from ..core.streaming import StreamingFrontier, StreamingRegimes
+from ..core.whatif import make_sync_mask
 from ..telemetry.packets import EvidencePacket
 
 __all__ = ["JobState", "FleetRegistry"]
@@ -63,6 +65,22 @@ class JobState:
     #: seconds per (stage, rank) candidate); None until a batched refresh
     #: has covered this job.
     whatif: np.ndarray | None = None
+    #: incremental temporal regime engine over the job's pushed windows —
+    #: spans multiple evidence packets (the temporal question needs a
+    #: history longer than one window).  None until the first raw window
+    #: arrives; the reference is fixed from that window's cohort median
+    #: (a moving reference would make early/late folds disagree).
+    regimes: StreamingRegimes | None = None
+    #: job-global step index of the regime stream's first pushed step
+    #: (from the first packet's declared `first_step`; 0 when packets
+    #: predate the field) — converts window-relative onsets to job steps.
+    step_origin: int = 0
+    #: sync profile the regime stream was built with; a later packet
+    #: declaring a different profile rebuilds the stream (the imputation
+    #: semantics of its excess rows changed, old history not comparable).
+    regime_sync: tuple[str, ...] = ()
+    #: cached `RegimeResult` of `regimes` (invalidated on every ingest).
+    _regime_cache: object = None
 
     @property
     def labels(self) -> tuple[str, ...]:
@@ -150,16 +168,75 @@ class JobState:
                 return rec, si, ri
         return 0.0, -1, -1
 
+    # -- temporal regime state --------------------------------------------
+
+    def regime_result(self):
+        """Window `RegimeResult` of the job's regime stream, cached until
+        the next ingest; None when no window has ever been pushed (or the
+        stream is empty)."""
+        if self.regimes is None or not self.regimes.num_steps:
+            return None
+        if self._regime_cache is None:
+            self._regime_cache = self.regimes.result()
+        return self._regime_cache
+
+    def regime_call(self, stage: int, rank: int) -> RegimeCall | None:
+        """Temporal classification of one candidate, with the onset
+        converted to job-global step coordinates.  None when the job has
+        no regime evidence (compact packets, empty stream, or a candidate
+        outside the matrix)."""
+        res = self.regime_result()
+        if res is None:
+            return None
+        if not (
+            0 <= stage < res.labels.shape[0] and 0 <= rank < res.labels.shape[1]
+        ):
+            return None
+        call = res.call(stage, rank)
+        if call.onset >= 0:
+            # ring-relative -> stream-relative -> job-global steps
+            dropped = self.regimes.steps_seen - self.regimes.num_steps
+            call = dataclasses.replace(
+                call, onset=self.step_origin + dropped + call.onset
+            )
+        return call
+
+    def persistence(self, stage: int, rank: int) -> float | None:
+        """Persistence weight of one candidate in [0, 1]; None when the
+        job has no regime evidence (callers treat unknown as 1.0 — a
+        fault of unknown temporal state must not be deprioritized)."""
+        res = self.regime_result()
+        if res is None:
+            return None
+        if not (
+            0 <= stage < res.weights.shape[0] and 0 <= rank < res.weights.shape[1]
+        ):
+            return None
+        return float(res.weights[stage, rank])
+
+    def regime_counts(self) -> dict[str, int]:
+        """Live candidates per temporal class (all-`none` when unknown)."""
+        res = self.regime_result()
+        if res is None:
+            return {name: 0 for name in REGIME_NAMES}
+        return res.counts()
+
 
 class FleetRegistry:
     """Bounded job table with tick-based liveness."""
 
     def __init__(self, *, window_capacity: int = 100, evict_after: int = 10,
-                 degrade_after: int = 3, max_jobs: int = 100_000):
+                 degrade_after: int = 3, max_jobs: int = 100_000,
+                 regime_windows: int = 4):
         self.window_capacity = window_capacity
         self.evict_after = evict_after
         self.degrade_after = degrade_after
         self.max_jobs = max_jobs
+        #: regime-stream depth in window_capacity multiples: the temporal
+        #: question needs a history longer than one window, so each job's
+        #: StreamingRegimes retains `regime_windows * window_capacity`
+        #: steps (bounded — the excess ring is O(capacity * R * S)).
+        self.regime_windows = max(1, regime_windows)
         self.rejected_total = 0
         self.duplicate_total = 0
         self._jobs: dict[str, JobState] = {}
@@ -216,6 +293,7 @@ class FleetRegistry:
         job.kernel_gains = None
         job.kernel_leader = -1
         job.whatif = None
+        job._regime_cache = None
 
         if pkt.gather_ok:
             job.missing_streak = 0
@@ -234,10 +312,67 @@ class FleetRegistry:
             w = np.asarray(pkt.window, np.float64)
             if w.ndim == 3 and w.shape[1:] == (pkt.world_size, len(pkt.stages)):
                 job.streaming.push_many(w)
+                self._fold_regimes(job, pkt, w)
                 # f32 is what the kernel consumes; half the pinned bytes,
                 # and refresh_batched() releases it after the refresh.
                 job.last_window = w.astype(np.float32)
         return job
+
+    def _fold_regimes(
+        self, job: JobState, pkt: EvidencePacket, w: np.ndarray
+    ) -> None:
+        """Fold one raw window into the job's temporal regime stream.
+
+        The stream is only meaningful over a *contiguous* step history
+        with a *fixed* imputation profile, so it restarts (never
+        silently stitches) when either breaks:
+
+          * the declared sync profile changed since the stream was
+            built — the excess rows' imputation semantics changed, so
+            old history is not comparable (same contract as
+            `StreamingRegimes.rebase`);
+          * the packet's declared `first_step` does not equal the next
+            expected step — a dropped window, a compact packet in
+            between, or reordering; stitching non-adjacent steps would
+            corrupt onsets and promote two distant bursts into one
+            contiguous run.  Legacy packets (`first_step == -1`) cannot
+            declare coordinates and are folded as contiguous.
+        """
+        sync_key = tuple(job.sync_stages)
+        if job.regimes is not None and sync_key != job.regime_sync:
+            job.regimes = None
+        if job.regimes is not None and pkt.first_step >= 0:
+            expected = job.step_origin + job.regimes.steps_seen
+            if pkt.first_step != expected:
+                job.regimes = None
+        if job.regimes is None:
+            # reference fixed from this window's cohort median of the
+            # sync-imputed work (the same default the batch engine
+            # derives); later windows fold against it so early/late
+            # folds agree.  float32 ring: at fleet scale the excess
+            # history is the registry's dominant pinned state, and the
+            # classification thresholds are far above f32 resolution
+            # (the engine-level bit-for-bit contract is property-tested
+            # at the default float64).
+            from ..core.regimes import excess_stream
+
+            mask = (
+                make_sync_mask(job.stages, job.sync_stages)
+                if job.sync_stages
+                else None
+            )
+            _, base = excess_stream(w, sync_mask=mask)
+            job.regimes = StreamingRegimes(
+                job.world_size,
+                len(job.stages),
+                base,
+                capacity=self.window_capacity * self.regime_windows,
+                sync_mask=mask,
+                dtype=np.float32,
+            )
+            job.step_origin = max(0, pkt.first_step)
+            job.regime_sync = sync_key
+        job.regimes.push_many(w)
 
     def evict_stale(self, tick: int) -> list[str]:
         """Drop jobs silent for >= evict_after ticks; returns evicted ids."""

@@ -8,11 +8,14 @@ The serving loop of the always-on signal at fleet scale:
      [J, N, R, S] tensor per shape group and runs the fused fleet kernel
      (jobs on the grid dimension): fleet-wide shares/gains/leaders in one
      pass instead of J dispatches;
-  3. `route(k)` answers the operator question one step past the paper —
+  3. `route(k)` answers the operator question two steps past the paper —
      not just *where do I aim the heavy profiler* but *what is a fix
-     worth*: the top-K non-degraded jobs by estimated recoverable seconds
-     (counterfactual what-if evidence), each with the (stage, rank)
-     candidate that yields that recovery.
+     worth, and is the fault still happening*: the top-K non-degraded
+     jobs by estimated recoverable seconds (counterfactual what-if
+     evidence) weighted by each candidate's temporal persistence
+     (`core.regimes` — persistent > recurring > healed transient), each
+     with the (stage, rank) candidate that yields that recovery and its
+     regime classification.
 
 Ticks are logical: callers advance `tick()` per aggregation round; jobs
 silent for `evict_after` ticks are evicted (bounded state, dead jobs never
@@ -36,10 +39,14 @@ __all__ = ["FleetService", "RouteEntry"]
 class RouteEntry:
     """One 'aim the profiler here' answer.
 
-    `score` IS the estimated recoverable seconds (`recoverable_s` is the
-    same number under its semantic name): routing ranks jobs by what a fix
-    is worth, not by how anomalous they look.  `urgency` carries the old
-    evidence-weighted anomaly score for dashboards.
+    `score` is the estimated recoverable seconds weighted by the fault's
+    temporal persistence: routing ranks jobs by what a fix is worth *and
+    whether the fault is still happening*.  `recoverable_s` keeps the raw
+    counterfactual seconds; `persistence` is the [0, 1] regime weight
+    (1.0 when the job has no temporal evidence — unknown is never
+    deprioritized), `regime` the temporal class of the routed candidate
+    ("" when unknown) and `onset_step` its job-global onset.  `urgency`
+    carries the old evidence-weighted anomaly score for dashboards.
     """
 
     job_id: str
@@ -50,9 +57,18 @@ class RouteEntry:
     labels: tuple[str, ...]
     recoverable_s: float = 0.0
     urgency: float = 0.0
+    regime: str = ""
+    persistence: float = 1.0
+    onset_step: int = -1
 
 
 class FleetService:
+    #: routing-score floor of the persistence weight: a fully healed
+    #: fault keeps this fraction of its recoverable-seconds score, so it
+    #: ranks far below live faults but never silently vanishes from the
+    #: answer (the operator can still see what it was worth).
+    PERSISTENCE_FLOOR = 0.05
+
     def __init__(
         self,
         *,
@@ -60,6 +76,7 @@ class FleetService:
         evict_after: int = 10,
         degrade_after: int = 3,
         max_jobs: int = 100_000,
+        regime_windows: int = 4,
     ):
         self.ingest = FleetIngest()
         self.registry = FleetRegistry(
@@ -67,6 +84,7 @@ class FleetService:
             evict_after=evict_after,
             degrade_after=degrade_after,
             max_jobs=max_jobs,
+            regime_windows=regime_windows,
         )
         self._tick = 0
         self.evicted_total = 0
@@ -155,30 +173,41 @@ class FleetService:
     # -- routing -----------------------------------------------------------
 
     def route(self, k: int = 10) -> list[RouteEntry]:
-        """Top-K jobs by estimated recoverable seconds, largest first.
+        """Top-K jobs by persistence-weighted recoverable seconds.
 
-        The ranking answers "where is a fix worth the most step time", not
-        "which job looks most anomalous": each job's score is its best
-        counterfactual — the argmax cell of the kernel-refreshed what-if
-        matrix when fresh, else the packet's whole-stage clipped gain
-        converted to seconds (see `JobState.recoverable`).  The reported
-        (stage, rank) is that same candidate — one evidence source per
-        answer, never a stage from one window paired with another's rank.
+        The ranking answers "where is a fix worth the most step time —
+        and is the fault still happening": each job's raw score is its
+        best counterfactual (the argmax cell of the kernel-refreshed
+        what-if matrix when fresh, else the packet's whole-stage clipped
+        gain converted to seconds — see `JobState.recoverable`),
+        multiplied by the candidate's temporal persistence weight
+        (`core.regimes`): a persistent fault keeps ~its full price, an
+        intermittent its duty cycle, a healed blip decays toward the
+        `PERSISTENCE_FLOOR`.  Jobs with no temporal evidence (compact
+        packets) keep weight 1.0 — unknown is never deprioritized.  The
+        reported (stage, rank) is that same candidate — one evidence
+        source per answer, never a stage from one window paired with
+        another's rank.
 
-        Ordering is fully deterministic: recoverable seconds descending,
+        Ordering is fully deterministic: weighted seconds descending,
         ties broken by job id ascending (stable across dict insertion
         order and refresh timing).  Degraded (telemetry_limited) jobs
         never appear: quality labels must not trigger workload-touching
         actions.
         """
-        scored = sorted(
-            ((job.recoverable(), job) for job in self.registry.jobs()),
-            key=lambda t: (-t[0][0], t[1].job_id),
-        )
+        floor = self.PERSISTENCE_FLOOR
+        scored = []
+        for job in self.registry.jobs():
+            rec, si, ri = job.recoverable()
+            if rec <= 0.0:
+                continue
+            w = job.persistence(si, ri)
+            call = job.regime_call(si, ri)
+            score = rec if w is None else rec * (floor + (1.0 - floor) * w)
+            scored.append((score, rec, si, ri, w, call, job))
+        scored.sort(key=lambda t: (-t[0], t[6].job_id))
         out: list[RouteEntry] = []
-        for (rec, si, ri), job in scored:
-            if len(out) >= k or rec <= 0.0:
-                break
+        for score, rec, si, ri, w, call, job in scored[: max(0, k)]:
             pkt = job.last_packet
             stage = job.stages[si] if 0 <= si < len(job.stages) else ""
             out.append(
@@ -186,11 +215,14 @@ class FleetService:
                     job_id=job.job_id,
                     stage=stage,
                     rank=ri,
-                    score=rec,
+                    score=score,
                     window_index=pkt.window_index if pkt else -1,
                     labels=job.labels,
                     recoverable_s=rec,
                     urgency=job.urgency(),
+                    regime=call.name if call is not None else "",
+                    persistence=1.0 if w is None else w,
+                    onset_step=call.onset if call is not None else -1,
                 )
             )
         return out
@@ -199,10 +231,17 @@ class FleetService:
 
     def snapshot(self) -> dict:
         jobs = self.registry.jobs()
+        regimes: dict[str, int] = {}
+        for j in jobs:
+            for name, c in j.regime_counts().items():
+                if name != "none":
+                    regimes[name] = regimes.get(name, 0) + c
         return {
             "tick": self._tick,
             "jobs": len(jobs),
             "degraded_jobs": sum(1 for j in jobs if j.degraded),
+            # live fault candidates per temporal class, fleet-wide
+            "regimes": regimes,
             "evicted_total": self.evicted_total,
             "rejected_total": self.registry.rejected_total,
             "duplicate_total": self.registry.duplicate_total,

@@ -255,6 +255,128 @@ def _whatif_kernel(
         out_ref[0] += contrib
 
 
+# ---------------------------------------------------------------------------
+# Temporal regime statistics kernel
+# ---------------------------------------------------------------------------
+#
+# Per-(stage, rank) reductions of the thresholded exposed-increment
+# streams (core.regimes): active count, onset / last active step, burst
+# count, trailing streak, and the two sums the trend slope needs.  The
+# candidate axes ride the standard layout (ranks on lanes, stages on
+# sublanes); each grid step owns one (job, rank tile) pair, streams that
+# job's whole [N, S_pad, R_TILE] step block through VMEM, and folds the
+# steps in a fori_loop carry — every output block is written exactly
+# once (no cross-grid-step revisits, unlike the what-if fold: the regime
+# statistics need the previous step's activity, which lives naturally in
+# the loop carry).
+#
+# Integer statistics are exact whatever the fold order; the float sums
+# are accumulated with ADDS ONLY in step order (the t-weighted sum the
+# trend slope needs is recovered analytically from the running-prefix
+# sum, never multiplied in the fold — a multiply-accumulate would fuse
+# to an FMA and drift from the oracle by an ulp), so the route matches
+# `regime_segments_ref` exactly.
+
+
+def _regime_kernel(
+    e_ref,      # [N, S_pad, R_TILE] one job's excess block (stage-major)
+    thr_ref,    # [1, S_pad, R_TILE] the job's activity threshold tile
+    count_ref,  # out [1, S_pad, R_TILE] i32 active steps
+    onset_ref,  # out [1, S_pad, R_TILE] i32 first active step (BIG = never)
+    last_ref,   # out [1, S_pad, R_TILE] i32 last active step (-1 = never)
+    runs_ref,   # out [1, S_pad, R_TILE] i32 distinct bursts
+    streak_ref, # out [1, S_pad, R_TILE] i32 trailing active streak
+    sume_ref,   # out [1, S_pad, R_TILE] f32 sum_t e[t]
+    sumpfx_ref, # out [1, S_pad, R_TILE] f32 prefix-sum sum C = sum_t A_t
+    *,
+    n_steps: int,
+):
+    e_all = e_ref[...].astype(jnp.float32)       # [N, S_pad, R_TILE]
+    thr = thr_ref[0].astype(jnp.float32)
+    shape = thr.shape
+    zi = jnp.zeros(shape, jnp.int32)
+    zf = jnp.zeros(shape, jnp.float32)
+
+    def body(t, carry):
+        count, onset, last, runs, streak, prev, sume, sumpfx = carry
+        e = jax.lax.dynamic_index_in_dim(e_all, t, 0, keepdims=False)
+        act = e > thr
+        acti = act.astype(jnp.int32)
+        count = count + acti
+        onset = jnp.minimum(onset, jnp.where(act, t, _BIG_IDX))
+        last = jnp.maximum(last, jnp.where(act, t, -1))
+        runs = runs + acti * (1 - prev)
+        streak = jnp.where(act, streak + 1, 0)
+        # adds only (no multiply, so no FMA divergence from the oracle):
+        # sum_t t*e recovers analytically as n*A_{n-1} - C in the wrapper
+        sume = sume + e
+        sumpfx = sumpfx + sume
+        return (count, onset, last, runs, streak, acti, sume, sumpfx)
+
+    init = (zi, zi + _BIG_IDX, zi - 1, zi, zi, zi, zf, zf)
+    count, onset, last, runs, streak, _prev, sume, sumpfx = (
+        jax.lax.fori_loop(0, n_steps, body, init)
+    )
+    count_ref[0] = count
+    onset_ref[0] = onset
+    last_ref[0] = last
+    runs_ref[0] = runs
+    streak_ref[0] = streak
+    sume_ref[0] = sume
+    sumpfx_ref[0] = sumpfx
+
+
+@functools.partial(
+    jax.jit, static_argnames=("r_tile", "n_steps", "interpret")
+)
+def regime_stats_kernel(
+    e_srp: jax.Array,
+    thr_srp: jax.Array,
+    *,
+    r_tile: int = 512,
+    n_steps: int | None = None,
+    interpret: bool = True,
+) -> tuple[jax.Array, ...]:
+    """Batched regime statistics on stage-major excess streams.
+
+    Args:
+      e_srp: [NT, S_pad, R_pad] excess (NT = jobs * steps), stage-major,
+        rank lanes; R_pad a multiple of r_tile.  Padded cells must carry
+        e = thr = 0 so they are never active.
+      thr_srp: [NT // n_steps, S_pad, R_pad] per-job activity thresholds.
+      n_steps: steps per job (defaults to NT: one job).
+
+    Returns (count, onset, last, runs, streak, sum_e, sum_prefix), each
+    [NT // n_steps, S_pad, R_pad] — i32 for the first five, f32 for the
+    sums.  `sum_prefix` is C = sum_t A_t (A_t the running excess sum),
+    from which sum_t t*e = n*sum_e - C follows analytically —
+    accumulated with adds only so the fold is bit-reproducible.  `onset`
+    uses BIG (2^30) for never-active (the wrapper converts to -1).
+    """
+    nt, s_pad, r_pad = e_srp.shape
+    if r_pad % r_tile:
+        raise ValueError(f"R_pad={r_pad} not a multiple of r_tile={r_tile}")
+    n_steps = nt if n_steps is None else n_steps
+    if nt % n_steps:
+        raise ValueError(f"NT={nt} not a multiple of n_steps={n_steps}")
+    jobs = nt // n_steps
+    grid = (jobs, r_pad // r_tile)
+    kernel = functools.partial(_regime_kernel, n_steps=n_steps)
+    e_spec = pl.BlockSpec((n_steps, s_pad, r_tile), lambda job, j: (job, 0, j))
+    thr_spec = pl.BlockSpec((1, s_pad, r_tile), lambda job, j: (job, 0, j))
+    out_spec = pl.BlockSpec((1, s_pad, r_tile), lambda job, j: (job, 0, j))
+    i32 = jax.ShapeDtypeStruct((jobs, s_pad, r_pad), jnp.int32)
+    f32 = jax.ShapeDtypeStruct((jobs, s_pad, r_pad), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[e_spec, thr_spec],
+        out_specs=[out_spec] * 7,
+        out_shape=[i32, i32, i32, i32, i32, f32, f32],
+        interpret=interpret,
+    )(e_srp, thr_srp)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("segments", "r_total", "r_tile", "n_steps", "interpret"),

@@ -14,16 +14,27 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .frontier import frontier_window_kernel, whatif_matrix_kernel
+from .frontier import (
+    frontier_window_kernel,
+    regime_stats_kernel,
+    whatif_matrix_kernel,
+)
 from .ref import (
     FrontierWindow,
+    RegimeWindow,
     frontier_window_ref,
+    regime_segments_ref,
     sync_segments,
     whatif_matrix_ref,
 )
 
+from ...core.regimes import RegimeParams as _RegimeParams
+
 _SUBLANE = 8
 _LANE = 128
+#: regime-route threshold defaults come from the ONE definition in
+#: core.regimes — tuning RegimeParams retunes the kernel routes too.
+_REGIME_DEFAULTS = _RegimeParams()
 
 
 def _on_tpu() -> bool:
@@ -340,6 +351,168 @@ def fleet_whatif_matrix(
     # observed per-step makespans (fraction denominator): from d, not w.
     exposed = d.astype(jnp.float32).sum(axis=3).max(axis=2)
     return FleetWhatIfPacket(matrix=wk[:, :s, :r], exposed=exposed)
+
+
+class FleetRegimePacket(NamedTuple):
+    """Per-job regime statistics for a stacked fleet tensor d[J, N, R, S].
+
+    Integer stats mirror `core.regimes.RegimeStats` ([J, S, R] each);
+    `duty` and `slope` are the derived temporal evidence the routing
+    weight needs, computed in a tiny jnp epilog from the kernel sums.
+    """
+
+    count: jax.Array          # [J, S, R] i32 active steps
+    onset: jax.Array          # [J, S, R] i32 first active step, -1 = never
+    last: jax.Array           # [J, S, R] i32 last active step, -1 = never
+    runs: jax.Array           # [J, S, R] i32 distinct bursts
+    streak: jax.Array         # [J, S, R] i32 trailing active streak
+    sum_excess: jax.Array     # [J, S, R] f32 sum_t e[t]
+    sum_prefix: jax.Array     # [J, S, R] f32 C = sum_t A_t (running sums)
+    duty: jax.Array           # [J, S, R] f32 active fraction since onset
+    slope: jax.Array          # [J, S, R] f32 excess trend, seconds/step
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "sync_stages", "min_excess_s", "rel_excess", "r_tile", "interpret"
+    ),
+)
+def fleet_regime_stats(
+    d: jax.Array,
+    baseline: jax.Array | None = None,
+    *,
+    sync_stages: tuple[int, ...] | None = None,
+    min_excess_s: float = _REGIME_DEFAULTS.min_excess_s,
+    rel_excess: float = _REGIME_DEFAULTS.rel_excess,
+    r_tile: int | None = None,
+    interpret: bool | None = None,
+) -> FleetRegimePacket:
+    """Batched per-job regime statistics for a stacked tensor d[J, N, R, S].
+
+    One fused dispatch reduces every job's thresholded exposed-increment
+    streams (`core.regimes`) to per-candidate temporal statistics:
+    (job, step) pairs on the grid, candidates on the (sublane, lane) tile
+    axes, per-job accumulators VMEM-resident across the step fold.
+    `baseline` is the per-cell reference ([J, R, S], or broadcastable);
+    it defaults to each job's cohort median of the sync-imputed work and
+    must be constant across the window (the activity threshold is
+    per-cell).  Matches `regime_segments_ref` exactly per job.
+    """
+    jn, n, r, s = d.shape
+    w = _fleet_imputed_work(d.astype(jnp.float32), sync_stages)
+    if baseline is None:
+        b_jrs = _fleet_median_baseline(w)[:, 0]              # [J, R, S]
+    else:
+        b_jrs = jnp.broadcast_to(
+            baseline.astype(jnp.float32), (jn, r, s)
+        )
+    e = jnp.maximum(0.0, w - b_jrs[:, None])                 # [J, N, R, S]
+    thr = jnp.maximum(min_excess_s, rel_excess * b_jrs)      # [J, R, S]
+    if interpret is None:
+        interpret = not _on_tpu()
+    if r_tile is None:
+        r_tile = min(_pad_to(r, _LANE), 512)
+    s_pad = _pad_to(s, _SUBLANE)
+    r_pad = _pad_to(r, r_tile)
+    et = jnp.transpose(e, (0, 1, 3, 2)).reshape(jn * n, s, r)
+    et = jnp.pad(et, ((0, 0), (0, s_pad - s), (0, r_pad - r)))
+    tt = jnp.transpose(thr, (0, 2, 1))                       # [J, S, R]
+    # padded cells carry e = thr = 0, so they are never active
+    tt = jnp.pad(tt, ((0, 0), (0, s_pad - s), (0, r_pad - r)))
+    count, onset, last, runs, streak, sum_e, sum_pfx = regime_stats_kernel(
+        et, tt, r_tile=r_tile, n_steps=n, interpret=interpret
+    )
+    sl = (slice(None), slice(0, s), slice(0, r))
+    count, last = count[sl], last[sl]
+    runs, streak = runs[sl], streak[sl]
+    sum_e, sum_pfx = sum_e[sl], sum_pfx[sl]
+    onset = jnp.where(onset[sl] >= n, -1, onset[sl])         # BIG -> never
+    span = jnp.maximum(1, n - onset).astype(jnp.float32)
+    duty = jnp.where(onset >= 0, count.astype(jnp.float32) / span, 0.0)
+    if n >= 2:
+        # sum_t t*e = n*sum_e - C, so the least-squares numerator
+        # (sum_t (t - tbar) e) is (n - tbar)*sum_e - C
+        tbar = (n - 1) / 2.0
+        denom = n * (n * n - 1) / 12.0
+        slope = ((n - tbar) * sum_e - sum_pfx) / denom
+    else:
+        slope = jnp.zeros_like(sum_e)
+    return FleetRegimePacket(
+        count, onset, last, runs, streak, sum_e, sum_pfx, duty, slope
+    )
+
+
+class RegimePacket(NamedTuple):
+    """Single-job regime statistics (the J=1 squeeze), [S, R] each."""
+
+    count: jax.Array
+    onset: jax.Array
+    last: jax.Array
+    runs: jax.Array
+    streak: jax.Array
+    sum_excess: jax.Array
+    sum_prefix: jax.Array
+    duty: jax.Array
+    slope: jax.Array
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "sync_stages", "min_excess_s", "rel_excess", "r_tile", "interpret"
+    ),
+)
+def regime_stats_window(
+    d: jax.Array,
+    baseline: jax.Array | None = None,
+    *,
+    sync_stages: tuple[int, ...] | None = None,
+    min_excess_s: float = _REGIME_DEFAULTS.min_excess_s,
+    rel_excess: float = _REGIME_DEFAULTS.rel_excess,
+    r_tile: int | None = None,
+    interpret: bool | None = None,
+) -> RegimePacket:
+    """Regime statistics of one window d[N, R, S] — the J=1 squeeze of
+    `fleet_regime_stats` (one wrapper, one kernel)."""
+    p = fleet_regime_stats(
+        d[None],
+        None if baseline is None else baseline[None],
+        sync_stages=sync_stages,
+        min_excess_s=min_excess_s,
+        rel_excess=rel_excess,
+        r_tile=r_tile,
+        interpret=interpret,
+    )
+    return RegimePacket(*(f[0] for f in p))
+
+
+def regime_stats_loop(
+    d: jax.Array,
+    baseline: jax.Array | None = None,
+    *,
+    sync_stages: tuple[int, ...] | None = None,
+    min_excess_s: float = _REGIME_DEFAULTS.min_excess_s,
+    rel_excess: float = _REGIME_DEFAULTS.rel_excess,
+) -> FleetRegimePacket:
+    """Naive per-job loop over `regime_stats_window` — the fleet baseline.
+
+    Dispatches J separate kernels; exists so `benchmarks/regime_detection`
+    and tests can compare the one-pass batched route against it.
+    """
+    packets = [
+        regime_stats_window(
+            d[j],
+            None if baseline is None else baseline[j],
+            sync_stages=sync_stages,
+            min_excess_s=min_excess_s,
+            rel_excess=rel_excess,
+        )
+        for j in range(d.shape[0])
+    ]
+    return FleetRegimePacket(
+        *(jnp.stack(col) for col in zip(*packets))
+    )
 
 
 def _replay_exposed(

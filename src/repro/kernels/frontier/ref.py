@@ -25,6 +25,12 @@ import jax.numpy as jnp
 # NumPy engine and the Pallas wrapper/kernel unroll
 from ...core.whatif import sync_segments
 
+# regime-route threshold defaults come from the ONE definition in
+# core.regimes — tuning RegimeParams retunes this oracle too
+from ...core.regimes import RegimeParams as _RegimeParams
+
+_REGIME_DEFAULTS = _RegimeParams()
+
 
 class FrontierWindow(NamedTuple):
     frontier: jax.Array       # [N, S] f32
@@ -53,6 +59,83 @@ def frontier_window_ref(d: jax.Array, baseline: jax.Array) -> FrontierWindow:
     final = prefix[:, :, -1][:, :, None]                 # [N, R, 1]
     clipped = (final - excess).max(axis=1)               # [N, S]
     return FrontierWindow(frontier, advances, leader, second, clipped)
+
+
+class RegimeWindow(NamedTuple):
+    """Per-candidate temporal statistics of one window, [S, R] each."""
+
+    count: jax.Array          # i32 active steps
+    onset: jax.Array          # i32 first active step, -1 = never
+    last: jax.Array           # i32 last active step, -1 = never
+    runs: jax.Array           # i32 distinct active bursts
+    streak: jax.Array         # i32 trailing consecutive active steps
+    sum_excess: jax.Array     # f32 sum_t e[t]
+    sum_prefix: jax.Array     # f32 C = sum_t A_t, A_t = sum_{u<=t} e[u]
+
+
+def regime_segments_ref(
+    d: jax.Array,
+    baseline: jax.Array,
+    *,
+    min_excess_s: float = _REGIME_DEFAULTS.min_excess_s,
+    rel_excess: float = _REGIME_DEFAULTS.rel_excess,
+    sync_stages: tuple[int, ...] | None = None,
+) -> RegimeWindow:
+    """Oracle for the batched regime-statistics route.
+
+    Thresholds the per-(stage, rank) exposed-increment streams
+    ``e = max(0, w − b)`` (w the sync-imputed work, b the [R, S]
+    reference) into activity series and reduces each candidate's series
+    to the statistics `core.regimes.regime_stats` defines.  Integer
+    reductions are order-independent; the two float sums accumulate as
+    explicit step-ordered add chains with no multiplies — the kernel's
+    sequential VMEM fold — so the Pallas route must match this oracle
+    **exactly** on every shape group.  The t-weighted excess sum the
+    trend slope needs follows analytically: sum_t t*e = n*sum_excess −
+    sum_prefix.
+    """
+    d = d.astype(jnp.float32)
+    n, r, s = d.shape
+    syncs = tuple(sorted(set(int(i) for i in (sync_stages or ()))))
+    if syncs:
+        mask = jnp.zeros(s, bool).at[jnp.asarray(syncs)].set(True)
+        w = jnp.where(mask, d.min(axis=1, keepdims=True), d)
+    else:
+        w = d
+    b = jnp.broadcast_to(baseline.astype(jnp.float32), (r, s))
+    e = jnp.maximum(0.0, w - b[None])                    # [N, R, S]
+    thr = jnp.maximum(min_excess_s, rel_excess * b)      # [R, S]
+    act = e > thr[None]
+    acti = act.astype(jnp.int32)
+
+    count = acti.sum(axis=0)                             # [R, S]
+    any_ = count > 0
+    onset = jnp.where(any_, jnp.argmax(act, axis=0), -1).astype(jnp.int32)
+    last = jnp.where(
+        any_, n - 1 - jnp.argmax(act[::-1], axis=0), -1
+    ).astype(jnp.int32)
+    prev = jnp.concatenate(
+        [jnp.zeros((1, r, s), bool), act[:-1]], axis=0
+    )
+    runs = (act & ~prev).astype(jnp.int32).sum(axis=0)
+    streak = jnp.cumprod(acti[::-1], axis=0).sum(axis=0)
+    # explicit step-ordered add chains (no multiplies): exactly the
+    # kernel's VMEM fold.  A pairwise jnp.sum reassociates, and a
+    # multiply-accumulate would fuse to an FMA, either of which drifts
+    # from the fold by an ulp.
+    sum_e, sum_pfx = e[0], e[0]
+    for t in range(1, n):
+        sum_e = sum_e + e[t]
+        sum_pfx = sum_pfx + sum_e
+    return RegimeWindow(
+        count=count.T,
+        onset=onset.T,
+        last=last.T,
+        runs=runs.T,
+        streak=streak.T,
+        sum_excess=sum_e.T,
+        sum_prefix=sum_pfx.T,
+    )
 
 
 def whatif_matrix_ref(

@@ -99,7 +99,10 @@ def run(args) -> dict:
             monitor.end_of_step()
         elapsed = time.perf_counter() - t0
 
-    report = monitor.aggregator.flush()
+    # the final partial window stays buffered inside the Monitor (only
+    # full windows are gathered), so flush() alone would drop the labels
+    # of the last window that actually closed — fall back to it.
+    report = monitor.aggregator.flush() or monitor.aggregator.last_report()
     return {
         "arch": cfg.name,
         "batch": args.batch,

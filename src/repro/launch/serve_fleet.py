@@ -8,9 +8,11 @@ fault families on a subset of jobs, one job that dies, one whose gather
 degrades), runs each job's windows through the standard WindowAggregator,
 ships the resulting evidence packets over the int8 wire format, and drives
 a `FleetService`: ingest -> tick/evict -> batched kernel refresh (frontier
-+ counterfactual what-if) -> top-K recoverable-time routing.  Prints a
-JSON summary (the serving response shape): each routing entry carries the
-estimated recoverable seconds a fix at its (stage, rank) is worth.
++ counterfactual what-if) -> top-K persistence-weighted recoverable-time
+routing.  Prints a JSON summary (the serving response shape): each
+routing entry carries the estimated recoverable seconds a fix at its
+(stage, rank) is worth, plus the fault's temporal regime
+(transient/recurring/persistent), persistence weight and onset step.
 """
 from __future__ import annotations
 
@@ -120,6 +122,7 @@ def run(args) -> dict:
                 window=report.durations,
                 present_ranks=present,
                 sync_stages=job["scenario"].sync_stages,
+                first_step=w * args.window,
             )
             wire = encode_packet(pkt, compress=args.compress)
             service.submit(job["job_id"], wire)
@@ -144,6 +147,10 @@ def run(args) -> dict:
                 "stage": r.stage,
                 "rank": r.rank,
                 "recoverable_s": round(r.recoverable_s, 4),
+                "score": round(r.score, 4),
+                "regime": r.regime,
+                "persistence": round(r.persistence, 3),
+                "onset_step": r.onset_step,
                 "urgency": round(r.urgency, 3),
                 "labels": list(r.labels),
             }

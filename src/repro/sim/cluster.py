@@ -36,6 +36,11 @@ explicitly, each mode fixes what a perfect intervention could recover
                 together) — the correct what-if answer is ~0, flagged
                 `group_wide` / `sync_stage_ambiguous`, routing the
                 operator to the fabric rather than a rank.
+                `ramp_steps > 0` turns a host fault into a slow-drift
+                onset (thermal-throttle shape): the delay ramps linearly
+                from ~0 to `delay_s` over that many active steps, then
+                holds — the temporal regime engine (`core.regimes`) must
+                read it as persistent with a positive trend slope.
   spillover     device work launched in `stage` becomes host-visible in
                 `spill_to` (the paper's forward/device family): only
                 (1-spill_frac) of the delay lands in the seeded stage, the
@@ -72,10 +77,23 @@ class Fault:
     spill_frac: float = 0.8
     start_step: int = 0
     end_step: int | None = None      # exclusive; None = all steps
+    #: > 0 = slow-drift onset: the delay ramps linearly from ~0 to
+    #: `delay_s` over this many active steps (a thermal-throttle shape),
+    #: then holds.  0 = step-function onset (the classic fault families).
+    ramp_steps: int = 0
 
     def active(self, step: int) -> bool:
         hi = self.end_step if self.end_step is not None else 10**9
         return self.start_step <= step < hi
+
+    def delay_at(self, step: int) -> float:
+        """Injected delay at `step` (0 when inactive; ramped when drifting)."""
+        if not self.active(step):
+            return 0.0
+        if self.ramp_steps <= 0:
+            return self.delay_s
+        frac = min(1.0, (step - self.start_step + 1) / self.ramp_steps)
+        return self.delay_s * frac
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,15 +152,16 @@ def simulate(sc: Scenario) -> SimResult:
             for f in sc.faults:
                 if not f.active(t):
                     continue
+                amt = f.delay_at(t)
                 if f.mode == "comm" and f.stage == stage:
-                    comm_extra += f.delay_s     # slow collective: all wait
+                    comm_extra += amt           # slow collective: all wait
                 elif f.stage == stage and f.mode == "host":
-                    work[f.rank] += f.delay_s
+                    work[f.rank] += amt
                 elif f.mode == "spillover":
                     if f.stage == stage:
-                        work[f.rank] += f.delay_s * (1.0 - f.spill_frac)
+                        work[f.rank] += amt * (1.0 - f.spill_frac)
                     if f.spill_to == stage:
-                        work[f.rank] += f.delay_s * f.spill_frac
+                        work[f.rank] += amt * f.spill_frac
             arrival = clock + work
             if stage in sc.sync_stages:
                 for g in groups:

@@ -57,6 +57,8 @@ on the profile: exactly the candidates observed at non-sync stages.
 """
 from __future__ import annotations
 
+import numpy as np
+
 from ..core.contract import SEGMENTED_STAGES
 from .cluster import Fault, Scenario
 
@@ -109,14 +111,17 @@ def injected_recoverable(sc: Scenario) -> dict[tuple[str, int], float]:
 
     for f in sc.faults:
         hi = sc.steps if f.end_step is None else min(f.end_step, sc.steps)
-        active = max(0, hi - f.start_step)
-        if not active:
+        if hi <= f.start_step:
+            continue
+        # exact under ramped (drift) onsets too: sum the per-step delay
+        total = sum(f.delay_at(t) for t in range(f.start_step, hi))
+        if total <= 0.0:
             continue
         if f.mode == "host":
-            _add(f.stage, f.rank, f.delay_s * active)
+            _add(f.stage, f.rank, total)
         elif f.mode == "spillover":
-            _add(f.stage, f.rank, f.delay_s * (1.0 - f.spill_frac) * active)
-            _add(f.spill_to, f.rank, f.delay_s * f.spill_frac * active)
+            _add(f.stage, f.rank, total * (1.0 - f.spill_frac))
+            _add(f.spill_to, f.rank, total * f.spill_frac)
     return out
 
 
@@ -222,6 +227,113 @@ def callback_scenario(
         faults=(Fault(rank, "callbacks.cpu_wall", delay_ms / 1e3),),
         sync=sync,
     )
+
+
+# ---------------------------------------------------------------------------
+# Temporal regime fault families (ground truth for repro.core.regimes)
+# ---------------------------------------------------------------------------
+#
+# Each family injects a known *activity pattern* over time, so the regime
+# engine's transient/recurring/persistent classification can be scored
+# against a by-construction label.  All families seed a non-sync stage
+# (data.next_wait): delay inside a barrier stage is group-ambiguous from
+# coarse durations (see `attributable_recoverable`), so temporal
+# classification there would be classifying the imputation, not the fault.
+
+#: regime family -> ground-truth classification label name.
+REGIME_FAMILIES = {
+    "blip": "transient",          # one early burst, self-healing
+    "intermittent": "recurring",  # periodic short data stalls
+    "step": "persistent",         # step-function degradation, never heals
+    "drift": "persistent",        # slow thermal-throttle ramp, never heals
+}
+
+
+def regime_faults(
+    family: str, rank: int, delay_s: float, steps: int
+) -> tuple[Fault, ...]:
+    """Fault tuple realizing one temporal family over a `steps`-long run.
+
+    blip:         active [steps/6, steps/6 + max(3, steps/10)) then gone;
+    intermittent: 4-step bursts every 12 steps from steps/6 on (bursts are
+                  shorter than the default `persistent_streak`, so a live
+                  burst never promotes to persistent);
+    step:         active [steps/2, end);
+    drift:        active [steps/4, end) with the delay ramping linearly to
+                  `delay_s` over steps/2 active steps (positive trend
+                  slope by construction).
+    """
+    stage = "data.next_wait"
+    if family == "blip":
+        lo = steps // 6
+        return (Fault(rank, stage, delay_s, start_step=lo,
+                      end_step=lo + max(3, steps // 10)),)
+    if family == "intermittent":
+        return tuple(
+            Fault(rank, stage, delay_s, start_step=t0,
+                  end_step=min(t0 + 4, steps))
+            for t0 in range(steps // 6, steps, 12)
+        )
+    if family == "step":
+        return (Fault(rank, stage, delay_s, start_step=steps // 2),)
+    if family == "drift":
+        return (Fault(rank, stage, delay_s, start_step=steps // 4,
+                      ramp_steps=max(1, steps // 2)),)
+    raise ValueError(f"unknown regime family {family!r}")
+
+
+def regime_fault_rank(seed: int, world_size: int = 8) -> int:
+    """The seed-derived faulted rank of `regime_scenario` — the ONE
+    definition, so benchmarks/tests reading the ground-truth candidate
+    cannot drift from the injection."""
+    return (seed * 5 + 2) % world_size
+
+
+def regime_scenario(
+    family: str,
+    *,
+    world_size: int = 8,
+    steps: int = 60,
+    seed: int = 0,
+    delay_ms: float = 120.0,
+    sync=DDP_SYNC,
+) -> Scenario:
+    """One labelled temporal-regime row; the faulted rank is seed-derived
+    (`regime_fault_rank`).
+
+    Ground truth: the regime engine should classify the candidate
+    ``("data.next_wait", injected rank)`` as ``REGIME_FAMILIES[family]``
+    once the window covers the pattern (and as `none` on every healthy
+    control candidate)."""
+    rank = regime_fault_rank(seed, world_size)
+    return ddp_scenario(
+        world_size=world_size,
+        steps=steps,
+        seed=seed,
+        faults=regime_faults(family, rank, delay_ms / 1e3, steps),
+        sync=sync,
+    )
+
+
+def injected_activity(sc: Scenario, stage: str, rank: int) -> np.ndarray:
+    """Ground-truth per-step injected-delay series for one candidate. [N]
+
+    The regime engine's activity series should match this (thresholded)
+    wherever the injected delay clears the detection threshold."""
+    out = np.zeros(sc.steps)
+    for f in sc.faults:
+        if f.rank != rank:
+            continue
+        for t in range(sc.steps):
+            amt = f.delay_at(t)
+            if f.mode == "spillover":
+                if f.stage == stage:
+                    out[t] += amt * (1.0 - f.spill_frac)
+                if f.spill_to == stage:
+                    out[t] += amt * f.spill_frac
+            elif f.stage == stage:
+                out[t] += amt
+    return out
 
 
 def aba_windows(

@@ -1,4 +1,5 @@
 """Always-on telemetry runtime: recorder, device events, gather, packets."""
+from .collector import Monitor
 from .device_events import DeviceEventChannel
 from .gather import (
     GatherResult,
@@ -12,6 +13,7 @@ from .recorder import StageRecorder, StepRecord
 __all__ = [
     "DeviceEventChannel",
     "EvidencePacket",
+    "Monitor",
     "GatherResult",
     "InProcTransport",
     "JaxProcessTransport",

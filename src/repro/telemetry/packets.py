@@ -50,6 +50,12 @@ class EvidencePacket:
     #: fleet-side counterfactual replay (`core.whatif` sync model); () =
     #: undeclared, the what-if engine falls back to pure substitution.
     sync_stages: tuple[str, ...] = ()
+    #: job-global step index of the window's first step.  Lets the fleet
+    #: tier stitch windows into one continuous step history, so the
+    #: temporal regime engine (`core.regimes`) reports fault onsets in
+    #: the job's own step coordinates.  -1 = undeclared (pre-regime
+    #: emitters decode with this default).
+    first_step: int = -1
     #: full [N, R, S] matrix (None in compact mode)
     window: np.ndarray | None = None
 
@@ -67,6 +73,7 @@ def from_diagnosis(
     window: np.ndarray | None = None,
     present_ranks: tuple[int, ...] = (),
     sync_stages: tuple[str, ...] = (),
+    first_step: int = -1,
 ) -> EvidencePacket:
     return EvidencePacket(
         window_index=window_index,
@@ -85,6 +92,7 @@ def from_diagnosis(
         present_ranks=tuple(present_ranks),
         exposed_total=diag.exposed_makespan_total,
         sync_stages=tuple(sync_stages),
+        first_step=first_step,
         window=window,
     )
 
@@ -154,6 +162,7 @@ def decode_packet(data: bytes) -> EvidencePacket:
     header.setdefault("present_ranks", [])
     header.setdefault("exposed_total", -1.0)
     header.setdefault("sync_stages", [])
+    header.setdefault("first_step", -1)
     for key in (
         "stages",
         "labels",

@@ -1,0 +1,532 @@
+"""Temporal regime engine tests: batch classification, streaming
+equivalence, Pallas route exactness, persistence-weighted fleet routing."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    NONE,
+    PERSISTENT,
+    RECURRING,
+    TRANSIENT,
+    RegimeParams,
+    StreamingRegimes,
+    WindowAggregator,
+    make_sync_mask,
+    segment_regimes,
+)
+from repro.core.regimes import (
+    classify,
+    excess_stream,
+    persistence_weight,
+    regime_stats,
+    segment_stream,
+)
+from repro.fleet import FleetService
+from repro.kernels.frontier import (
+    fleet_regime_stats,
+    regime_segments_ref,
+    regime_stats_loop,
+    regime_stats_window,
+)
+from repro.kernels.frontier.ops import (
+    _fleet_imputed_work,
+    _fleet_median_baseline,
+)
+from repro.sim import simulate
+from repro.sim.scenarios import (
+    REGIME_FAMILIES,
+    injected_activity,
+    regime_fault_rank,
+    regime_scenario,
+)
+from repro.telemetry.packets import encode_packet, from_diagnosis
+
+_STAGE = "data.next_wait"
+
+
+def _series(activity, level=1.0):
+    """[N, 1, 1] excess tensor realizing a 0/1 activity pattern."""
+    return np.asarray(activity, float)[:, None, None] * level
+
+
+# ---------------------------------------------------------------------------
+# Batch statistics and classification
+# ---------------------------------------------------------------------------
+
+
+class TestRegimeStats:
+    def test_handcrafted_pattern(self):
+        # two bursts: [2,4) and [7,10); window of 10 steps
+        act = [0, 0, 1, 1, 0, 0, 0, 1, 1, 1]
+        st = regime_stats(_series(act), thresh=np.array([[0.5]]))
+        assert st.count[0, 0] == 5
+        assert st.onset[0, 0] == 2
+        assert st.last[0, 0] == 9
+        assert st.runs[0, 0] == 2
+        assert st.streak[0, 0] == 3
+        assert st.duty()[0, 0] == pytest.approx(5 / 8)
+        assert st.active_now()[0, 0]
+
+    def test_never_active(self):
+        st = regime_stats(_series([0, 0, 0]), thresh=np.array([[0.5]]))
+        assert st.count[0, 0] == 0
+        assert st.onset[0, 0] == -1 and st.last[0, 0] == -1
+        assert st.runs[0, 0] == 0 and st.streak[0, 0] == 0
+        assert st.duty()[0, 0] == 0.0
+
+    def test_empty_window(self):
+        st = regime_stats(np.zeros((0, 2, 3)), thresh=np.zeros((2, 3)))
+        assert st.num_steps == 0 and st.count.shape == (3, 2)
+        assert (st.onset == -1).all()
+        assert st.slope().shape == (3, 2)
+
+    def test_single_step_window(self):
+        st = regime_stats(_series([1]), thresh=np.array([[0.5]]))
+        assert st.count[0, 0] == 1 and st.streak[0, 0] == 1
+        assert st.runs[0, 0] == 1 and st.onset[0, 0] == 0
+        assert st.slope()[0, 0] == 0.0  # undefined on one step: safe 0
+
+    def test_slope_sign_tracks_trend(self):
+        up = regime_stats(
+            np.linspace(0, 1, 20)[:, None, None], np.array([[0.1]])
+        )
+        down = regime_stats(
+            np.linspace(1, 0, 20)[:, None, None], np.array([[0.1]])
+        )
+        assert up.slope()[0, 0] > 0 > down.slope()[0, 0]
+
+    def test_segment_stream_is_consistent_with_stats(self):
+        rng = np.random.default_rng(3)
+        e = rng.exponential(1.0, 50)
+        segs = segment_stream(e, 1.0)
+        st = regime_stats(e[:, None, None], np.array([[1.0]]))
+        active = [s for s in segs if s.active]
+        assert sum(s.length for s in active) == st.count[0, 0]
+        assert len(active) == st.runs[0, 0]
+        assert segs[0].start == 0 and segs[-1].end == 49
+        # segments tile the window with alternating activity
+        for a, b in zip(segs, segs[1:]):
+            assert b.start == a.end + 1 and b.active != a.active
+
+
+class TestClassification:
+    def test_codes(self):
+        def one(act, **kw):
+            st = regime_stats(_series(act), np.array([[0.5]]))
+            return classify(st, RegimeParams(**kw))[0, 0]
+
+        assert one([0, 0, 0, 0]) == NONE
+        assert one([0, 1, 1, 0, 0, 0]) == TRANSIENT
+        assert one([0, 1, 0, 0, 1, 0]) == RECURRING
+        # live since onset => persistent even before the streak threshold
+        assert one([0, 0, 0, 0, 1, 1]) == PERSISTENT
+        # recurring pattern whose trailing run reaches the streak
+        # threshold promotes to persistent (it is live now)
+        assert one([1, 0, 1, 1, 1], persistent_streak=3) == PERSISTENT
+        assert one([1, 0, 0, 1, 1], persistent_streak=3) == RECURRING
+
+    def test_weights(self):
+        p = RegimeParams(transient_cooldown=4)
+
+        def w(act):
+            st = regime_stats(_series(act), np.array([[0.5]]))
+            return persistence_weight(st, p)[0, 0]
+
+        assert w([0, 0, 1, 1, 1, 1]) == pytest.approx(1.0)   # live, duty 1
+        assert w([1, 0, 1, 0, 1, 0, 1, 0, 1]) == pytest.approx(5 / 9)
+        assert w([1, 1, 0, 0, 0, 0, 0, 0]) == 0.0            # healed long ago
+        # recency decays linearly over the cooldown
+        assert 0.0 < w([1, 1, 1, 1, 1, 1, 1, 0]) < 1.0
+        assert w([0, 0, 0]) == 0.0
+
+    @pytest.mark.parametrize("family", sorted(REGIME_FAMILIES))
+    @pytest.mark.parametrize("seed", [0, 3])
+    def test_injected_families_classify_correctly(self, family, seed):
+        sc = regime_scenario(family, steps=60, seed=seed)
+        res = simulate(sc)
+        rr = segment_regimes(
+            res.durations, sync_mask=make_sync_mask(sc.stages, sc.sync_stages)
+        )
+        rank = regime_fault_rank(seed, sc.world_size)
+        si = sc.stages.index(_STAGE)
+        assert rr.label_name(si, rank) == REGIME_FAMILIES[family]
+        strays = rr.labels.copy()
+        strays[si, rank] = NONE
+        assert not strays.any(), "healthy candidates must classify none"
+
+    def test_drift_has_positive_slope(self):
+        sc = regime_scenario("drift", steps=60, seed=1)
+        res = simulate(sc)
+        rr = segment_regimes(
+            res.durations, sync_mask=make_sync_mask(sc.stages, sc.sync_stages)
+        )
+        rank = regime_fault_rank(1, sc.world_size)
+        call = rr.call(sc.stages.index(_STAGE), rank)
+        assert call.slope > 0.0
+        assert call.weight == pytest.approx(1.0)
+
+    def test_onset_matches_injected_activity(self):
+        sc = regime_scenario("step", steps=60, seed=2)
+        res = simulate(sc)
+        rank = regime_fault_rank(2, sc.world_size)
+        rr = segment_regimes(
+            res.durations, sync_mask=make_sync_mask(sc.stages, sc.sync_stages)
+        )
+        inj = injected_activity(sc, _STAGE, rank)
+        call = rr.call(sc.stages.index(_STAGE), rank)
+        assert call.onset == int(np.flatnonzero(inj > 0)[0])
+
+    def test_sync_stage_faults_do_not_classify(self):
+        # a host fault inside the DDP barrier is group-ambiguous: the
+        # imputation erases it, so the regime engine must stay silent
+        # rather than classify a rank it cannot attribute.
+        from repro.sim.cluster import Fault
+
+        from repro.sim.scenarios import ddp_scenario
+
+        sc = ddp_scenario(
+            steps=40, seed=0,
+            faults=(Fault(3, "model.backward_cpu_wall", 0.2),),
+        )
+        res = simulate(sc)
+        rr = segment_regimes(
+            res.durations, sync_mask=make_sync_mask(sc.stages, sc.sync_stages)
+        )
+        assert not rr.labels.any()
+
+
+# ---------------------------------------------------------------------------
+# Streaming engine: bit-for-bit equivalence with the batch pass
+# ---------------------------------------------------------------------------
+
+
+class TestStreamingRegimes:
+    @pytest.mark.parametrize(
+        "shape", [(1, 1, 2), (7, 3, 6), (30, 8, 6), (5, 33, 4)]
+    )
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_bit_for_bit_equivalence(self, shape, seed):
+        n, r, s = shape
+        d = np.random.default_rng(seed).exponential(0.05, size=shape)
+        mask = np.zeros(s, bool)
+        mask[s // 2] = True
+        e, base = excess_stream(d, sync_mask=mask)
+        sr = StreamingRegimes(r, s, base, capacity=n, sync_mask=mask)
+        for t in range(n):
+            sr.push(d[t])
+        got, want = sr.result(), segment_regimes(d, base, sync_mask=mask)
+        st, ref = got.stats, want.stats
+        for f in ("count", "onset", "last", "runs", "streak",
+                  "sum_excess", "sum_t_excess"):
+            np.testing.assert_array_equal(getattr(st, f), getattr(ref, f))
+        np.testing.assert_array_equal(got.labels, want.labels)
+        np.testing.assert_array_equal(got.weights, want.weights)
+
+    def test_push_many_matches_sequential_push(self):
+        d = np.random.default_rng(4).exponential(0.05, size=(23, 6, 5))
+        _, base = excess_stream(d)
+        one = StreamingRegimes(6, 5, base, capacity=10)
+        for t in range(23):
+            one.push(d[t])
+        many = StreamingRegimes(6, 5, base, capacity=10)
+        many.push_many(d[:8])
+        many.push_many(d[8:20])
+        many.push_many(d[20:])
+        a, b = one.stats(), many.stats()
+        for f in ("count", "onset", "last", "runs", "streak",
+                  "sum_excess", "sum_t_excess"):
+            np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+        assert one.steps_seen == many.steps_seen == 23
+
+    def test_sliding_window_matches_batch_over_tail(self):
+        d = np.random.default_rng(2).exponential(0.05, size=(37, 5, 6))
+        _, base = excess_stream(d)
+        sr = StreamingRegimes(5, 6, base, capacity=10)
+        for t in range(37):
+            sr.push(d[t])
+        got = sr.result()
+        want = segment_regimes(d[-10:], base)
+        np.testing.assert_array_equal(got.labels, want.labels)
+        np.testing.assert_array_equal(got.stats.onset, want.stats.onset)
+        assert sr.steps_seen == 37 and sr.num_steps == 10
+
+    def test_rejects_bad_input_and_rebase_resets(self):
+        sr = StreamingRegimes(4, 6, np.full((4, 6), 0.05), capacity=8)
+        with pytest.raises(ValueError):
+            sr.push(np.zeros((3, 6)))
+        sr.push(np.full((4, 6), 0.2))
+        assert sr.num_steps == 1
+        sr.rebase(np.full((4, 6), 0.01))
+        assert sr.num_steps == 0 and sr.steps_seen == 0
+
+    def test_empty_stream_result(self):
+        sr = StreamingRegimes(2, 3, np.full((2, 3), 0.05), capacity=4)
+        res = sr.result()
+        assert res.stats.num_steps == 0
+        assert not res.labels.any() and not res.weights.any()
+
+
+# ---------------------------------------------------------------------------
+# Pallas route (acceptance: exact vs regime_segments_ref on all shape groups)
+# ---------------------------------------------------------------------------
+
+_SHAPE_GROUPS = [(2, 3, 6), (4, 8, 3), (1, 1, 4), (3, 16, 8)]
+_SLOW_SHAPE_GROUPS = [(3, 33, 6), (2, 129, 7), (6, 8, 8), (30, 8, 6)]
+
+_REF_FIELDS = (
+    "count", "onset", "last", "runs", "streak", "sum_excess", "sum_prefix"
+)
+
+
+class TestKernelRoute:
+    def _check_shape(self, shape, syncs_list):
+        n, r, s = shape
+        d = jnp.asarray(
+            np.random.default_rng(0).exponential(0.05, size=shape),
+            jnp.float32,
+        )
+        for syncs in syncs_list:
+            w = _fleet_imputed_work(d[None], syncs)
+            med = _fleet_median_baseline(w)[0, 0]
+            got = regime_stats_window(d, sync_stages=syncs)
+            ref = regime_segments_ref(d, med, sync_stages=syncs)
+            for f in _REF_FIELDS:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(got, f)), np.asarray(getattr(ref, f))
+                )
+
+    @pytest.mark.parametrize("shape", _SHAPE_GROUPS)
+    def test_matches_ref_exactly(self, shape):
+        s = shape[2]
+        self._check_shape(shape, [None, (s - 1,), (1,)])
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("shape", _SLOW_SHAPE_GROUPS)
+    def test_matches_ref_exactly_wide(self, shape):
+        s = shape[2]
+        self._check_shape(shape, [None, (1, s - 1)])
+
+    def test_fleet_batch_matches_per_job_loop(self):
+        d = jnp.asarray(
+            np.random.default_rng(2).exponential(0.05, size=(3, 4, 8, 6)),
+            jnp.float32,
+        )
+        fp = fleet_regime_stats(d, sync_stages=(2,))
+        lp = regime_stats_loop(d, sync_stages=(2,))
+        for f in fp._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(fp, f)), np.asarray(getattr(lp, f))
+            )
+
+    def test_matches_core_engine(self):
+        d64 = np.random.default_rng(4).exponential(0.05, size=(12, 8, 6))
+        mask = np.arange(6) == 2
+        core = segment_regimes(d64, sync_mask=mask)
+        kp = regime_stats_window(
+            jnp.asarray(d64, jnp.float32), sync_stages=(2,)
+        )
+        np.testing.assert_array_equal(np.asarray(kp.count), core.stats.count)
+        np.testing.assert_array_equal(np.asarray(kp.onset), core.stats.onset)
+        np.testing.assert_array_equal(np.asarray(kp.runs), core.stats.runs)
+        np.testing.assert_array_equal(
+            np.asarray(kp.streak), core.stats.streak
+        )
+        np.testing.assert_allclose(
+            np.asarray(kp.duty), core.stats.duty(), atol=1e-6
+        )
+        np.testing.assert_allclose(
+            np.asarray(kp.slope), core.stats.slope(), atol=1e-6
+        )
+
+
+# ---------------------------------------------------------------------------
+# Fleet plumbing: persistence-weighted routing
+# ---------------------------------------------------------------------------
+
+
+class TestFleetRegimeRouting:
+    def _wire(self, sc, *, window_steps=None, first_step=0):
+        res = simulate(sc)
+        steps = window_steps or sc.steps
+        agg = WindowAggregator(sc.schema(), window_steps=steps)
+        report = None
+        for t in range(sc.steps):
+            report = agg.add_step(
+                res.durations[t], res.durations[t].sum(-1)
+            ) or report
+        pkt = from_diagnosis(
+            report.diagnosis, sc.stages, report.steps, sc.world_size,
+            report.window_index, window=report.durations,
+            sync_stages=sc.sync_stages, first_step=first_step,
+        )
+        return encode_packet(pkt, compress="int8")
+
+    def test_persistent_fault_routes_at_full_price(self):
+        from repro.sim.cluster import Fault
+        from repro.sim.scenarios import ddp_scenario
+
+        sc = ddp_scenario(
+            steps=40, seed=0, faults=(Fault(3, _STAGE, 0.2),)
+        )
+        svc = FleetService(window_capacity=40)
+        svc.submit("hot", self._wire(sc))
+        svc.tick()
+        svc.refresh_batched()
+        (entry,) = svc.route(1)
+        assert entry.job_id == "hot"
+        assert entry.regime == "persistent"
+        assert entry.persistence == pytest.approx(1.0)
+        assert entry.onset_step == 0
+        assert entry.score == pytest.approx(entry.recoverable_s)
+
+    def test_healed_blip_ranks_below_smaller_live_fault(self):
+        from repro.sim.cluster import Fault
+        from repro.sim.scenarios import ddp_scenario
+
+        # blip: 300 ms x 10 early steps (3.0 s raw), healed 25 steps ago
+        blip = ddp_scenario(
+            steps=40, seed=1,
+            faults=(Fault(2, _STAGE, 0.3, start_step=5, end_step=15),),
+        )
+        # live: 60 ms persistent (2.4 s raw < 3.0 s raw)
+        live = ddp_scenario(
+            steps=40, seed=2, faults=(Fault(4, _STAGE, 0.06),)
+        )
+        svc = FleetService(window_capacity=40)
+        svc.submit("blip", self._wire(blip))
+        svc.submit("live", self._wire(live))
+        svc.tick()
+        svc.refresh_batched()
+        routes = svc.route(2)
+        assert [r.job_id for r in routes] == ["live", "blip"]
+        assert routes[0].regime == "persistent"
+        assert routes[1].regime == "transient"
+        assert routes[1].persistence == 0.0
+        # raw counterfactual price is preserved, only the ranking decays
+        assert routes[1].recoverable_s > routes[0].recoverable_s
+        assert routes[1].score == pytest.approx(
+            FleetService.PERSISTENCE_FLOOR * routes[1].recoverable_s
+        )
+
+    def test_onset_in_job_global_steps_across_windows(self):
+        from repro.sim.cluster import Fault
+        from repro.sim.scenarios import ddp_scenario
+
+        # fault turns on at global step 30: second of three 20-step windows
+        sc = ddp_scenario(
+            steps=60, seed=3, faults=(Fault(1, _STAGE, 0.2, start_step=30),)
+        )
+        res = simulate(sc)
+        agg = WindowAggregator(sc.schema(), window_steps=20)
+        svc = FleetService(window_capacity=20)
+        for w in range(3):
+            report = None
+            for t in range(w * 20, (w + 1) * 20):
+                report = agg.add_step(
+                    res.durations[t], res.durations[t].sum(-1)
+                ) or report
+            pkt = from_diagnosis(
+                report.diagnosis, sc.stages, report.steps, sc.world_size,
+                report.window_index, window=report.durations,
+                sync_stages=sc.sync_stages, first_step=w * 20,
+            )
+            svc.submit("j", encode_packet(pkt, compress="int8"))
+        svc.refresh_batched()
+        (entry,) = svc.route(1)
+        assert entry.job_id == "j" and entry.rank == 1
+        assert entry.regime == "persistent"
+        assert entry.onset_step == 30
+
+    def test_compact_packets_route_with_unknown_persistence(self):
+        from repro.telemetry.packets import EvidencePacket
+
+        pkt = EvidencePacket(
+            window_index=0, schema_hash="h", stages=("alpha", "beta"),
+            steps=5, world_size=2, gather_ok=True,
+            labels=("frontier_accounting",), routing_stages=("beta",),
+            shares=(0.4, 0.6), gains=(0.05, 0.3), co_critical_stages=(),
+            downgrade_reasons=(), leader_rank=1,
+        )
+        svc = FleetService()
+        svc.submit("legacy", pkt)
+        (entry,) = svc.route(1)
+        assert entry.persistence == 1.0 and entry.regime == ""
+        assert entry.score == pytest.approx(entry.recoverable_s)
+
+    def test_window_gap_restarts_regime_stream(self):
+        from repro.sim.cluster import Fault
+        from repro.sim.scenarios import ddp_scenario
+
+        # two contiguous-looking windows... but the declared coordinates
+        # jump from [0, 20) to [40, 60): a window was dropped in between,
+        # so stitching would misreport onsets and streaks.  The stream
+        # must restart at the new origin instead.
+        sc = ddp_scenario(
+            steps=60, seed=4, faults=(Fault(2, _STAGE, 0.2, start_step=50),)
+        )
+        res = simulate(sc)
+        svc = FleetService(window_capacity=20)
+        for widx, lo in enumerate((0, 40)):       # window [20, 40) dropped
+            agg = WindowAggregator(sc.schema(), window_steps=20)
+            report = None
+            for t in range(lo, lo + 20):
+                report = agg.add_step(
+                    res.durations[t], res.durations[t].sum(-1)
+                ) or report
+            pkt = from_diagnosis(
+                report.diagnosis, sc.stages, 20, sc.world_size, widx,
+                window=report.durations, sync_stages=sc.sync_stages,
+                first_step=lo,
+            )
+            svc.submit("gap", encode_packet(pkt, compress="int8"))
+        job = svc.registry.get("gap")
+        assert job.regimes.steps_seen == 20       # restarted, not stitched
+        assert job.step_origin == 40
+        call = job.regime_call(0, 2)
+        assert call.name == "persistent" and call.onset == 50
+
+    def test_late_sync_declaration_rebuilds_regime_stream(self):
+        from repro.sim.cluster import Fault
+        from repro.sim.scenarios import ddp_scenario
+
+        # a host fault INSIDE the barrier stage: with the sync profile
+        # declared, the imputation erases it (group-ambiguous) and the
+        # regime engine stays silent.  The first packet omits the
+        # profile; once a later packet declares it, the stream must be
+        # rebuilt under the new imputation — not keep classifying every
+        # rank from unimputed history.
+        sc = ddp_scenario(
+            steps=40, seed=5,
+            faults=(Fault(3, "model.backward_cpu_wall", 0.2),),
+        )
+        res = simulate(sc)
+        svc = FleetService(window_capacity=20)
+        for widx, declare in enumerate((False, True)):
+            agg = WindowAggregator(sc.schema(), window_steps=20)
+            report = None
+            for t in range(widx * 20, (widx + 1) * 20):
+                report = agg.add_step(
+                    res.durations[t], res.durations[t].sum(-1)
+                ) or report
+            pkt = from_diagnosis(
+                report.diagnosis, sc.stages, 20, sc.world_size, widx,
+                window=report.durations,
+                sync_stages=sc.sync_stages if declare else (),
+                first_step=widx * 20,
+            )
+            svc.submit("late", encode_packet(pkt, compress="int8"))
+        job = svc.registry.get("late")
+        assert job.regime_sync == sc.sync_stages
+        assert job.regimes.steps_seen == 20       # rebuilt at declaration
+        assert not job.regime_result().labels.any()
+
+    def test_snapshot_counts_live_regimes(self):
+        from repro.sim.cluster import Fault
+        from repro.sim.scenarios import ddp_scenario
+
+        sc = ddp_scenario(steps=40, seed=0, faults=(Fault(3, _STAGE, 0.2),))
+        svc = FleetService(window_capacity=40)
+        svc.submit("hot", self._wire(sc))
+        snap = svc.snapshot()
+        assert snap["regimes"].get("persistent", 0) >= 1

@@ -1,0 +1,131 @@
+"""WindowAggregator edge cases: empty windows, single-step windows, and
+windows that straddle a temporal regime boundary (fault onset mid-window).
+
+`core/windows.py` was previously only exercised through the integration
+paths; these tests pin its boundary behavior directly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    StreamingRegimes,
+    WindowAggregator,
+    segment_regimes,
+    segmented_schema,
+)
+from repro.core.regimes import excess_stream
+from repro.sim import simulate
+from repro.sim.cluster import Fault
+from repro.sim.scenarios import ddp_scenario
+
+
+def _schema(ranks=4):
+    return segmented_schema(world_size=ranks)
+
+
+def _step(schema, rng, scale=0.05):
+    d = rng.lognormal(0.0, 0.02, (schema.world_size, schema.num_stages))
+    return d * scale
+
+
+class TestEmptyWindow:
+    def test_flush_with_no_rows_returns_none(self):
+        agg = WindowAggregator(_schema(), window_steps=10)
+        assert agg.flush() is None
+        assert agg.reports == () and agg.last_report() is None
+
+    def test_double_flush_is_idempotent(self):
+        agg = WindowAggregator(_schema(), window_steps=10)
+        agg.add_step(np.full((4, 6), 0.05), 0.3)
+        first = agg.flush()
+        assert first is not None and first.steps == 1
+        assert agg.flush() is None  # nothing buffered after a close
+
+    def test_schema_break_with_empty_buffer_emits_nothing(self):
+        agg = WindowAggregator(_schema(), window_steps=10)
+        # wrong world size on the very first step: close_with_nothing
+        report = agg.add_step(np.full((3, 6), 0.05), 0.3)
+        assert report is None and agg.reports == ()
+
+    def test_window_indices_never_burn_on_empty_closes(self):
+        agg = WindowAggregator(_schema(), window_steps=2)
+        agg.flush()
+        for t in range(4):
+            agg.add_step(np.full((4, 6), 0.05), 0.3)
+        idx = [r.window_index for r in agg.reports]
+        assert idx == [0, 1]
+
+
+class TestSingleStepWindow:
+    def test_window_steps_one_closes_every_step(self):
+        agg = WindowAggregator(_schema(), window_steps=1)
+        rng = np.random.default_rng(0)
+        reports = [agg.add_step(_step(_schema(), rng), 0.3) for _ in range(5)]
+        assert all(r is not None for r in reports)
+        assert [r.window_index for r in reports] == list(range(5))
+        assert all(r.steps == 1 and r.closed_reason == "full"
+                   for r in reports)
+
+    def test_single_step_report_shapes_and_labels(self):
+        agg = WindowAggregator(_schema(), window_steps=1)
+        report = agg.add_step(np.full((4, 6), 0.05), 0.3)
+        assert report.durations.shape == (1, 4, 6)
+        assert report.step_wall.shape == (1, 4)
+        # a one-step window is far below any denominator floor: the
+        # labeler must still produce a diagnosis, never raise
+        assert report.diagnosis.labels
+
+    def test_rejects_nonpositive_window_steps(self):
+        with pytest.raises(ValueError):
+            WindowAggregator(_schema(), window_steps=0)
+
+
+class TestWindowSpanningRegimeBoundary:
+    """A fault onset in the middle of an aggregation window: the closed
+    window carries both regimes, and the regime engine localizes the
+    change point at the boundary the simulator injected."""
+
+    def _faulted(self, onset=25, steps=40, rank=2, delay=0.4):
+        sc = ddp_scenario(
+            steps=steps, seed=7,
+            faults=(Fault(rank, "data.next_wait", delay, start_step=onset),),
+        )
+        return sc, simulate(sc)
+
+    def test_closed_window_straddles_onset(self):
+        sc, res = self._faulted()
+        agg = WindowAggregator(sc.schema(), window_steps=40)
+        report = None
+        for t in range(40):
+            report = agg.add_step(
+                res.durations[t], res.durations[t].sum(-1)
+            ) or report
+        assert report is not None and report.steps == 40
+        # the straddling window still routes to the faulted stage
+        assert report.diagnosis.routing_stages
+        assert report.diagnosis.routing_stages[0] == "data.next_wait"
+
+    def test_regime_engine_finds_the_boundary_inside_the_window(self):
+        sc, res = self._faulted(onset=25)
+        rr = segment_regimes(res.durations)
+        call = rr.call(0, 2)
+        assert call.name == "persistent"
+        assert call.onset == 25  # the change point, step-exact
+
+    def test_streaming_across_two_windows_matches_one_batch(self):
+        # two 20-step aggregation windows, fault onset at 25 (inside the
+        # second): folding the closed windows into StreamingRegimes is
+        # bit-identical to the batch pass over the 40 steps
+        sc, res = self._faulted(onset=25)
+        agg = WindowAggregator(sc.schema(), window_steps=20)
+        _, base = excess_stream(res.durations)
+        sr = StreamingRegimes(sc.world_size, len(sc.stages), base,
+                              capacity=40)
+        for t in range(40):
+            report = agg.add_step(res.durations[t], res.durations[t].sum(-1))
+            if report is not None:
+                sr.push_many(report.durations)
+        want = segment_regimes(res.durations, base)
+        got = sr.result()
+        np.testing.assert_array_equal(got.labels, want.labels)
+        np.testing.assert_array_equal(got.stats.onset, want.stats.onset)

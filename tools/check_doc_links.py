@@ -1,0 +1,85 @@
+"""Markdown link checker for README + docs/ (no network, no deps).
+
+    python tools/check_doc_links.py README.md docs/*.md
+
+Verifies every inline markdown link ``[text](target)``:
+
+  * relative file targets must exist (resolved from the linking file's
+    directory), and a ``#fragment`` on a file target must match one of
+    that file's headings (GitHub slug rules: lowercase, punctuation
+    stripped, spaces to hyphens);
+  * bare ``#fragment`` targets must match a heading in the same file;
+  * ``http(s)://`` and ``mailto:`` targets are listed but not fetched
+    (CI runs offline) — they fail only if syntactically empty.
+
+Exit code 0 iff every link resolves; each broken link is printed with
+its source location.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug of one heading line."""
+    text = re.sub(r"[`*_]", "", heading.strip()).lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors(path: pathlib.Path) -> set[str]:
+    # strip code fences first: a '# comment' inside a ```bash block is
+    # not a heading and must not satisfy an anchor
+    text = CODE_FENCE_RE.sub("", path.read_text())
+    return {slugify(h) for h in HEADING_RE.findall(text)}
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errors = []
+    text = path.read_text()
+    stripped = CODE_FENCE_RE.sub("", text)  # links inside code are literal
+    for m in LINK_RE.finditer(stripped):
+        target = m.group(1)
+        lineno = text[: text.find(m.group(0))].count("\n") + 1
+        where = f"{path}:{lineno}"
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            if slugify(target[1:]) not in anchors(path) and target[1:] not in anchors(path):
+                errors.append(f"{where}: broken anchor {target!r}")
+            continue
+        file_part, _, frag = target.partition("#")
+        dest = (path.parent / file_part).resolve()
+        if not dest.exists():
+            errors.append(f"{where}: missing file {target!r}")
+            continue
+        if frag and dest.suffix == ".md":
+            if slugify(frag) not in anchors(dest) and frag not in anchors(dest):
+                errors.append(f"{where}: broken anchor {target!r}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    errors = []
+    checked = 0
+    for name in argv:
+        p = pathlib.Path(name)
+        checked += 1
+        errors.extend(check_file(p))
+    for e in errors:
+        print(f"BROKEN  {e}")
+    print(f"{checked} file(s) checked, {len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
