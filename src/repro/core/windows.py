@@ -37,6 +37,12 @@ class WindowReport:
     closure: ClosureReport
     window_index: int
     closed_reason: str           # "full" | "schema_change" | "flush" | ...
+    #: cumulative count of steps the aggregator has DISCARDED since
+    #: construction (schema/world-size breaks drop the mismatched step
+    #: that triggered the close).  Data loss is bounded but must be
+    #: observable: a growing value across reports tells the operator the
+    #: emitter's schema is flapping.
+    dropped_steps: int = 0
 
 
 class WindowAggregator:
@@ -67,6 +73,9 @@ class WindowAggregator:
         self._on_report = on_report
         self._model_fit: dict[str, int] = {}
         self._accum_collapsed = False
+        #: steps discarded on contract breaks (observable data loss; the
+        #: closing WindowReport snapshots it, see `add_step`).
+        self.dropped_steps = 0
 
     # -- feeding -------------------------------------------------------------
 
@@ -84,8 +93,12 @@ class WindowAggregator:
             d = d[None]
         report: WindowReport | None = None
         if d.shape != (self.schema.world_size, self.schema.num_stages):
-            # World-size / schema break: close what we have, drop this step
-            # into a fresh window only if it matches a resized schema.
+            # World-size / schema break: close what we have.  The
+            # mismatched step cannot be folded into any window under this
+            # schema, so it is discarded — but never silently: it counts
+            # into `dropped_steps` *before* the close so the triggering
+            # report (and every later one) carries the loss.
+            self.dropped_steps += 1
             report = self._close("schema_change")
         else:
             w = np.asarray(step_wall, dtype=np.float64)
@@ -167,6 +180,7 @@ class WindowAggregator:
             closure=closure,
             window_index=self._window_index,
             closed_reason=reason,
+            dropped_steps=self.dropped_steps,
         )
         self._reports.append(report)
         self._window_index += 1

@@ -6,9 +6,11 @@ frontier accounting incrementally up to date, and answers "which K jobs
 need a heavy profiler, and where" in one call.
 
 Layers:
-  ingest     failure-safe wire decoding (raw f64 or int8-compressed)
+  ingest     failure-safe wire decoding (SFP2 + legacy SFP1 framing;
+             raw f64, int8, and int8 delta+varint payload codecs)
   registry   bounded per-job streaming state + liveness/eviction
-  service    logical-clock service: submit / tick / refresh_batched / route
+  service    logical-clock service: submit / submit_many / tick /
+             refresh_batched / route
 """
 from .ingest import FleetIngest, IngestStats
 from .registry import FleetRegistry, JobState

@@ -239,6 +239,12 @@ class FleetRegistry:
         self.regime_windows = max(1, regime_windows)
         self.rejected_total = 0
         self.duplicate_total = 0
+        #: windows accepted over the registry's lifetime.  Monotonic by
+        #: construction — eviction and schema restarts never decrement it
+        #: (per-job `windows_seen` resets with the job; summing it across
+        #: live jobs made the fleet counter run *backwards* whenever a
+        #: job was evicted).
+        self.windows_total = 0
         self._jobs: dict[str, JobState] = {}
 
     # -- updates -----------------------------------------------------------
@@ -282,6 +288,7 @@ class FleetRegistry:
             return job
         job.last_tick = tick
         job.windows_seen += 1
+        self.windows_total += 1
         job.last_packet = pkt
         if pkt.sync_stages:
             job.sync_stages = tuple(pkt.sync_stages)

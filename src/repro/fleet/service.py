@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
+from typing import Iterable
 
 import numpy as np
 
@@ -104,6 +105,36 @@ class FleetService:
         if pkt is None:
             return None
         return self.registry.update(job_id, pkt, self._tick)
+
+    def submit_many(
+        self,
+        items: Iterable[tuple[str, bytes | EvidencePacket]],
+        *,
+        refresh: bool = False,
+    ) -> int:
+        """Ingest one tick's batch of `(job_id, wire)` pairs; returns how
+        many were accepted (decoded AND folded — a full registry refusing
+        a new job id does not count).
+
+        This is the amortized tick path: the whole batch decodes through
+        `FleetIngest.decode_many` before any registry fold, and with
+        `refresh=True` the accepted raw windows go straight into one
+        `refresh_batched()` kernel pass — wire bytes to fleet-wide
+        shares/what-if matrices with no intermediate window copies
+        (SFP2 float64 payloads stay zero-copy views until the registry's
+        single float32 cast).
+        """
+        pairs = list(items)
+        pkts = self.ingest.decode_many(data for _, data in pairs)
+        accepted = 0
+        for (job_id, _), pkt in zip(pairs, pkts):
+            if pkt is None:
+                continue
+            if self.registry.update(job_id, pkt, self._tick) is not None:
+                accepted += 1
+        if refresh:
+            self.refresh_batched()
+        return accepted
 
     def tick(self) -> list[str]:
         """Advance the logical clock; evicts and returns stale job ids."""
@@ -248,5 +279,9 @@ class FleetService:
             "packets": self.ingest.stats.packets,
             "bytes": self.ingest.stats.bytes,
             "decode_errors": self.ingest.stats.decode_errors,
-            "windows_seen": sum(j.windows_seen for j in jobs),
+            "predecoded": self.ingest.stats.predecoded,
+            "avg_wire_bytes": self.ingest.stats.avg_wire_bytes,
+            # lifetime counter (registry-owned): monotonic even across
+            # eviction — summing live jobs made this run backwards.
+            "windows_seen": self.registry.windows_total,
         }

@@ -50,7 +50,11 @@ def make_argparser() -> argparse.ArgumentParser:
     p.add_argument("--delay-ms", type=float, default=150.0)
     p.add_argument("--fault-every", type=int, default=3,
                    help="every K-th job gets an injected E3 fault")
-    p.add_argument("--compress", default="int8", choices=["none", "int8"])
+    p.add_argument("--compress", default="int8",
+                   choices=["none", "int8", "int8.delta"])
+    p.add_argument("--wire", default="sfp2", choices=["sfp1", "sfp2"],
+                   help="wire framing (sfp1 = legacy back-compat route; "
+                        "int8.delta requires sfp2)")
     return p
 
 
@@ -96,6 +100,7 @@ def run(args) -> dict:
     t0 = time.perf_counter()
     routes = []
     for w in range(args.rounds):
+        batch: list[tuple[str, bytes]] = []
         for job in jobs:
             if job["dies_after_round"] is not None and w > job["dies_after_round"]:
                 continue  # job stopped reporting: eviction path
@@ -124,18 +129,21 @@ def run(args) -> dict:
                 sync_stages=job["scenario"].sync_stages,
                 first_step=w * args.window,
             )
-            wire = encode_packet(pkt, compress=args.compress)
-            service.submit(job["job_id"], wire)
+            wire = encode_packet(pkt, compress=args.compress, wire=args.wire)
+            batch.append((job["job_id"], wire))
             packets_sent += 1
             bytes_sent += len(wire)
+        # one amortized decode+fold+kernel pass per aggregation round
+        service.submit_many(batch, refresh=True)
         service.tick()
-        service.refresh_batched()
         routes = service.route(args.top_k)
     elapsed = time.perf_counter() - t0
 
     return {
         "jobs": args.jobs,
         "rounds": args.rounds,
+        "wire": args.wire,
+        "compress": args.compress,
         "packets_sent": packets_sent,
         "wire_bytes": bytes_sent,
         "wire_bytes_per_packet": bytes_sent // max(packets_sent, 1),

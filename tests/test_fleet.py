@@ -357,3 +357,65 @@ class TestFleetService:
         assert svc.tick() == []
         assert svc.tick() == ["short-lived"]
         assert svc.snapshot()["jobs"] == 0
+
+    def test_windows_seen_monotonic_across_eviction(self):
+        """Regression: snapshot()["windows_seen"] summed only live jobs,
+        so evicting a job made the fleet-lifetime counter run backwards."""
+        svc = FleetService(evict_after=2)
+        wire, _ = self._wire(seed=0)
+        svc.submit("dies", wire)
+        assert svc.snapshot()["windows_seen"] == 1
+        seen = [svc.snapshot()["windows_seen"]]
+        for _ in range(3):  # job stops reporting -> evicted at tick 2
+            svc.tick()
+            seen.append(svc.snapshot()["windows_seen"])
+        assert svc.snapshot()["jobs"] == 0 and svc.evicted_total == 1
+        assert seen == sorted(seen), f"windows_seen went backwards: {seen}"
+        assert seen[-1] == 1
+        # a later job keeps counting up from the lifetime total
+        wire2, _ = self._wire(seed=1)
+        svc.submit("next", wire2)
+        assert svc.snapshot()["windows_seen"] == 2
+        # schema restarts reset the per-job stream, not the fleet counter
+        job = svc.registry.get("next")
+        assert job.windows_seen == 1
+        assert svc.registry.windows_total == 2
+
+    def test_submit_many_batched_path(self):
+        """submit_many = decode_many -> registry folds -> one batched
+        kernel refresh; counters and routing match the per-packet path."""
+        svc = FleetService()
+        batch = []
+        for j in range(3):
+            wire, _ = self._wire(seed=j)
+            batch.append((f"j{j}", wire))
+        batch.append(("bad", b"not a packet"))
+        accepted = svc.submit_many(batch, refresh=True)
+        assert accepted == 3
+        snap = svc.snapshot()
+        assert snap["packets"] == 3 and snap["decode_errors"] == 1
+        assert snap["windows_seen"] == 3
+        for j in range(3):
+            job = svc.registry.get(f"j{j}")
+            assert job.kernel_shares is not None  # refresh=True covered it
+        # parity with the one-at-a-time path
+        ref = FleetService()
+        for job_id, data in batch:
+            ref.submit(job_id, data)
+        ref.refresh_batched()
+        for j in range(3):
+            np.testing.assert_array_equal(
+                svc.registry.get(f"j{j}").kernel_shares,
+                ref.registry.get(f"j{j}").kernel_shares,
+            )
+
+    def test_submit_many_counts_full_registry_refusals(self):
+        svc = FleetService(max_jobs=1)
+        b = []
+        for j in range(2):
+            wire, _ = self._wire(seed=j)
+            b.append((f"j{j}", wire))
+        assert svc.submit_many(b) == 1   # second job refused (registry full)
+        assert svc.registry.rejected_total == 1
+        # refused packet still decoded fine: it is not a decode error
+        assert svc.snapshot()["decode_errors"] == 0

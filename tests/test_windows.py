@@ -56,6 +56,48 @@ class TestEmptyWindow:
         assert idx == [0, 1]
 
 
+class TestDroppedSteps:
+    """Schema/world-size breaks discard the mismatched step — that loss
+    must be observable (`dropped_steps` on the aggregator and on every
+    closing report), never silent."""
+
+    def test_schema_break_counts_dropped_step(self):
+        agg = WindowAggregator(_schema(), window_steps=10)
+        agg.add_step(np.full((4, 6), 0.05), 0.3)
+        agg.add_step(np.full((4, 6), 0.05), 0.3)
+        report = agg.add_step(np.full((3, 6), 0.05), 0.3)  # world-size break
+        assert report is not None and report.closed_reason == "schema_change"
+        assert report.steps == 2               # the two good steps closed
+        assert report.dropped_steps == 1       # ...and the bad one is counted
+        assert agg.dropped_steps == 1
+
+    def test_dropped_count_is_cumulative_across_windows(self):
+        agg = WindowAggregator(_schema(), window_steps=2)
+        for _ in range(3):
+            agg.add_step(np.full((4, 6), 0.05), 0.3)
+            agg.add_step(np.full((3, 6), 0.05), 0.3)   # break closes 1-step win
+        assert agg.dropped_steps == 3
+        assert [r.dropped_steps for r in agg.reports] == [1, 2, 3]
+        # later clean closes still carry the historical total
+        agg.add_step(np.full((4, 6), 0.05), 0.3)
+        report = agg.flush()
+        assert report.dropped_steps == 3
+
+    def test_break_with_empty_buffer_still_counts(self):
+        agg = WindowAggregator(_schema(), window_steps=10)
+        assert agg.add_step(np.full((3, 6), 0.05), 0.3) is None  # no report
+        assert agg.dropped_steps == 1          # observable on the aggregator
+        agg.add_step(np.full((4, 6), 0.05), 0.3)
+        assert agg.flush().dropped_steps == 1  # ...and on the next report
+
+    def test_clean_run_reports_zero(self):
+        agg = WindowAggregator(_schema(), window_steps=2)
+        agg.add_step(np.full((4, 6), 0.05), 0.3)
+        agg.add_step(np.full((4, 6), 0.05), 0.3)
+        assert agg.last_report().dropped_steps == 0
+        assert agg.dropped_steps == 0
+
+
 class TestSingleStepWindow:
     def test_window_steps_one_closes_every_step(self):
         agg = WindowAggregator(_schema(), window_steps=1)

@@ -1,0 +1,428 @@
+"""Wire-boundary tests: SFP2 format, strict SFP1 route, byte-level fuzz,
+golden fixtures, and the no-window-copy encode regression.
+
+Golden fixtures (`tests/golden/*.bin`) pin the SFP1 byte format: they are
+checked-in bytes from the legacy encoder, so the format can never drift
+silently.  Regenerate (only after a deliberate, versioned format change)
+with:
+
+    PYTHONPATH=src python tests/test_wire.py --regen
+"""
+import copy
+import dataclasses
+import pathlib
+import struct
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.distributed.compression import (
+    delta_varint_decode_i8,
+    delta_varint_encode_i8,
+    quantize_i8,
+)
+from repro.fleet import FleetIngest
+from repro.telemetry.packets import EvidencePacket, decode_packet, encode_packet
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+
+def golden_packet(*, window: bool = True, n: int = 6, r: int = 8, s: int = 4):
+    """Deterministic packet for golden fixtures — windows built from pure
+    integer arithmetic (no RNG), so regeneration is bit-stable across
+    numpy versions."""
+    w = None
+    if window:
+        cells = np.arange(n * r * s, dtype=np.float64).reshape(n, r, s)
+        w = (cells % 97.0) * 0.013 + (cells % 7.0) * 1e-4
+    return EvidencePacket(
+        window_index=11,
+        schema_hash="abcdef0123456789",
+        stages=tuple(f"stage.{i}" for i in range(s)),
+        steps=n,
+        world_size=r,
+        gather_ok=False,
+        labels=("frontier_accounting", "telemetry_limited"),
+        routing_stages=("stage.1", "stage.0"),
+        shares=(0.5, 0.25, 0.125, 0.125)[:s],
+        gains=(0.1, 0.05, 0.0, 0.0)[:s],
+        co_critical_stages=("stage.2",),
+        downgrade_reasons=("gather_partial",),
+        leader_rank=3,
+        present_ranks=tuple(i for i in range(r) if i != 2),
+        exposed_total=42.25,
+        sync_stages=("stage.1",),
+        first_step=660,
+        window=w,
+    )
+
+
+GOLDEN_CASES = {
+    "sfp1_f64.bin": dict(window=True, compress="none"),
+    "sfp1_int8.bin": dict(window=True, compress="int8"),
+    "sfp1_compact.bin": dict(window=False, compress="none"),
+}
+
+
+def assert_packets_equal(a: EvidencePacket, b: EvidencePacket) -> None:
+    for f in dataclasses.fields(EvidencePacket):
+        if f.name == "window":
+            continue
+        assert getattr(a, f.name) == getattr(b, f.name), f.name
+    if a.window is None:
+        assert b.window is None
+    else:
+        np.testing.assert_array_equal(np.asarray(a.window), np.asarray(b.window))
+
+
+# ---------------------------------------------------------------------------
+# SFP2 roundtrips
+# ---------------------------------------------------------------------------
+
+
+class TestSfp2Roundtrip:
+    @pytest.mark.parametrize("compress", ["none", "int8", "int8.delta"])
+    def test_roundtrip_header_fields(self, compress):
+        pkt = golden_packet()
+        out = decode_packet(encode_packet(pkt, compress=compress))
+        ref = decode_packet(encode_packet(pkt, compress=compress, wire="sfp1")) \
+            if compress != "int8.delta" else None
+        for f in dataclasses.fields(EvidencePacket):
+            if f.name == "window":
+                continue
+            assert getattr(out, f.name) == getattr(pkt, f.name), f.name
+        if ref is not None:
+            # int8/f64 payloads decode IDENTICALLY across framings
+            np.testing.assert_array_equal(out.window, ref.window)
+
+    def test_f64_roundtrip_exact(self):
+        pkt = golden_packet()
+        out = decode_packet(encode_packet(pkt))
+        np.testing.assert_array_equal(out.window, pkt.window)
+
+    def test_f64_decode_is_readonly_zero_copy(self):
+        wire = encode_packet(golden_packet())
+        out = decode_packet(wire)
+        assert out.window.flags.writeable is False
+        # zero-copy: the array's backing buffer is the wire buffer itself
+        assert out.window.base is not None
+        with pytest.raises((ValueError, RuntimeError)):
+            out.window[0, 0, 0] = 1.0
+
+    def test_int8_error_bounded_and_delta_identical(self):
+        pkt = golden_packet()
+        raw = decode_packet(encode_packet(pkt, compress="int8")).window
+        delta = decode_packet(encode_packet(pkt, compress="int8.delta")).window
+        np.testing.assert_array_equal(raw, delta)
+        err = np.abs(raw - pkt.window).max(axis=(0, 1))
+        amax = np.abs(pkt.window).max(axis=(0, 1))
+        assert (err <= amax / 127 + 1e-12).all()
+
+    def test_compact_roundtrip(self):
+        pkt = golden_packet(window=False)
+        wire = encode_packet(pkt)
+        assert len(wire) < 1024
+        assert decode_packet(wire).window is None
+
+    def test_empty_present_ranks(self):
+        pkt = dataclasses.replace(golden_packet(window=False), present_ranks=())
+        assert decode_packet(encode_packet(pkt)).present_ranks == ()
+
+    def test_unknown_compress_and_wire_rejected(self):
+        pkt = golden_packet(window=False)
+        with pytest.raises(ValueError, match="compression"):
+            encode_packet(pkt, compress="zstd")
+        with pytest.raises(ValueError, match="wire"):
+            encode_packet(pkt, wire="sfp9")
+        with pytest.raises(ValueError, match="SFP2"):
+            encode_packet(pkt, compress="int8.delta", wire="sfp1")
+
+
+class TestEncodeNoWindowCopy:
+    def test_encode_never_deepcopies(self, monkeypatch):
+        """Regression: the SFP1-era encoder built its header with
+        `dataclasses.asdict`, deep-copying the full float64 window per
+        encode.  No encode route may call copy.deepcopy at all now."""
+
+        def boom(*a, **k):
+            raise AssertionError("encode_packet must not deep-copy")
+
+        monkeypatch.setattr(copy, "deepcopy", boom)
+        pkt = golden_packet()
+        for wire in ("sfp1", "sfp2"):
+            for compress in ("none", "int8"):
+                assert decode_packet(
+                    encode_packet(pkt, compress=compress, wire=wire)
+                ).steps == pkt.steps
+
+    def test_f64_payload_not_duplicated(self):
+        """The window enters the output through a memoryview of the
+        original buffer — encoding must not even transiently hold a
+        second float64 copy (`np.ascontiguousarray` on an aligned
+        window is a view)."""
+        pkt = golden_packet()
+        w = pkt.window
+        assert np.ascontiguousarray(w, np.float64) is w  # precondition
+        wire = encode_packet(pkt)
+        # the payload tail of the wire is byte-identical to the buffer
+        assert wire.endswith(memoryview(w).cast("B").tobytes())
+
+
+# ---------------------------------------------------------------------------
+# strict-bounds decoding (both framings)
+# ---------------------------------------------------------------------------
+
+
+class TestStrictBounds:
+    @pytest.mark.parametrize("wire_fmt", ["sfp1", "sfp2"])
+    def test_trailing_garbage_rejected_compact(self, wire_fmt):
+        wire = encode_packet(golden_packet(window=False), wire=wire_fmt)
+        with pytest.raises(ValueError):
+            decode_packet(wire + b"\x00")
+
+    def test_trailing_garbage_rejected_sfp2_window(self):
+        wire = encode_packet(golden_packet(), compress="int8")
+        with pytest.raises(ValueError, match="trailing"):
+            decode_packet(wire + b"junk")
+
+    @pytest.mark.parametrize("wire_fmt", ["sfp1", "sfp2"])
+    def test_flipped_magic(self, wire_fmt):
+        wire = bytearray(encode_packet(golden_packet(), wire=wire_fmt))
+        wire[0] ^= 0xFF
+        with pytest.raises(ValueError, match="not a StageFrontier packet"):
+            decode_packet(bytes(wire))
+
+    def test_unsupported_sfp2_version(self):
+        wire = bytearray(encode_packet(golden_packet(window=False)))
+        wire[4] = 0x7F
+        with pytest.raises(ValueError, match="version"):
+            decode_packet(bytes(wire))
+
+    @pytest.mark.parametrize("wire_fmt", ["sfp1", "sfp2"])
+    @pytest.mark.parametrize("compress", ["none", "int8"])
+    def test_payload_corruption_detected(self, wire_fmt, compress):
+        wire = bytearray(encode_packet(golden_packet(), compress=compress,
+                                       wire=wire_fmt))
+        wire[-3] ^= 0xFF
+        with pytest.raises(ValueError, match="hash"):
+            decode_packet(bytes(wire))
+
+    def test_oversized_shape_meta_rejected_before_allocation(self):
+        """A corrupt/hostile shape declaring ~10^18 cells must be
+        rejected by validation, not by an allocation attempt."""
+        pkt = golden_packet()
+        wire = bytearray(encode_packet(pkt, compress="int8"))
+        big = [10 ** 6, 10 ** 6, 10 ** 6]
+        # splice a huge shape into the header JSON and fix the length field
+        head_len = struct.unpack_from("<I", wire, 6)[0]
+        head = bytes(wire[10:10 + head_len]).replace(
+            b'"shape": [6, 8, 4]', b'"shape": [%d, %d, %d]' % tuple(big)
+        )
+        struct.pack_into("<I", wire, 6, len(head))
+        doctored = bytes(wire[:10]) + head + bytes(wire[10 + head_len:])
+        with pytest.raises(ValueError):
+            decode_packet(doctored)
+
+    def test_sfp1_declared_length_overruns_rejected(self):
+        wire = bytearray(encode_packet(golden_packet(window=False),
+                                       wire="sfp1"))
+        struct.pack_into("<I", wire, 4, 10 ** 6)  # header len >> buffer
+        with pytest.raises(ValueError, match="truncated"):
+            decode_packet(bytes(wire))
+
+    @pytest.mark.parametrize("head", [
+        b"{}",                     # missing required fields -> KeyError path
+        b'{"stages": 5}',          # non-iterable field -> TypeError path
+        b'{"window_index": 1}',    # partial header
+        b"[1, 2]",                 # not an object
+        b"null",
+    ])
+    def test_malformed_sfp2_header_raises_valueerror_only(self, head):
+        """The decode contract is ValueError on ANY malformed input —
+        KeyError/TypeError from header normalization must not leak."""
+        wire = struct.pack("<4sBBI", b"SFP2", 1, 0, len(head)) + head \
+            + struct.pack("<I", 0)
+        with pytest.raises(ValueError):
+            decode_packet(wire)
+
+    def test_sfp2_duplicate_present_ranks_rejected(self):
+        """present_ranks lives in the binary section; a header JSON that
+        smuggles a second copy is malformed."""
+        pkt = golden_packet(window=False)
+        wire = bytearray(encode_packet(pkt))
+        head_len = struct.unpack_from("<I", wire, 6)[0]
+        head = bytes(wire[10:10 + head_len]).replace(
+            b'"leader_rank": 3', b'"leader_rank": 3, "present_ranks": [0]'
+        )
+        struct.pack_into("<I", wire, 6, len(head))
+        doctored = bytes(wire[:10]) + head + bytes(wire[10 + head_len:])
+        with pytest.raises(ValueError):
+            decode_packet(doctored)
+
+
+# ---------------------------------------------------------------------------
+# byte-level fuzz through the ingest tier (count-and-drop, never raise)
+# ---------------------------------------------------------------------------
+
+
+class TestIngestFuzz:
+    @pytest.mark.parametrize("wire_fmt,compress", [
+        ("sfp2", "none"), ("sfp2", "int8"), ("sfp2", "int8.delta"),
+        ("sfp1", "none"), ("sfp1", "int8"),
+    ])
+    def test_every_offset_truncation_counted_never_raised(
+        self, wire_fmt, compress
+    ):
+        wire = encode_packet(golden_packet(), compress=compress,
+                             wire=wire_fmt)
+        ing = FleetIngest()
+        for off in range(len(wire) + 1):
+            out = ing.decode(wire[:off])
+            if off < len(wire):
+                assert out is None, f"prefix {off}/{len(wire)} decoded"
+        assert ing.stats.decode_errors == len(wire)
+        assert ing.stats.packets == 1 and ing.stats.wire_packets == 1
+
+    def test_every_offset_single_byteflip_never_raises(self):
+        """Flip one byte at every offset: ingest must either drop (count)
+        or decode; what it must never do is raise or crash.  (A header
+        byte-flip that still parses may legitimately decode.)"""
+        wire = bytearray(encode_packet(golden_packet(n=3, r=4, s=3),
+                                       compress="int8.delta"))
+        ing = FleetIngest()
+        for off in range(len(wire)):
+            wire[off] ^= 0xA5
+            ing.decode(bytes(wire))
+            wire[off] ^= 0xA5
+        assert ing.stats.packets + ing.stats.decode_errors == len(wire)
+
+    def test_garbage_and_empty(self):
+        ing = FleetIngest()
+        assert ing.decode(b"") is None
+        assert ing.decode(b"garbage") is None
+        assert ing.decode(b"SFP1\xff\xff\xff\xff") is None
+        assert ing.decode(b"SFP2\xff\xff\xff\xff\xff\xff\xff") is None
+        assert ing.stats.decode_errors == 4 and ing.stats.packets == 0
+
+
+# ---------------------------------------------------------------------------
+# ingest stats semantics (pre-decoded submissions must not skew ratios)
+# ---------------------------------------------------------------------------
+
+
+class TestIngestStats:
+    def test_predecoded_does_not_skew_wire_ratio(self):
+        ing = FleetIngest()
+        wire = encode_packet(golden_packet(), compress="int8")
+        assert ing.decode(wire) is not None
+        assert ing.decode(golden_packet()) is not None  # in-process packet
+        assert ing.stats.packets == 2
+        assert ing.stats.predecoded == 1
+        assert ing.stats.wire_packets == 1
+        assert ing.stats.bytes == len(wire)
+        # the wire-size ratio reflects only wire traffic
+        assert ing.stats.avg_wire_bytes == len(wire)
+        assert ing.stats.error_ratio == 0.0
+        # ...and so does the error ratio: one bad blob out of two wire
+        # submissions is 50%, no matter how many in-process packets
+        # arrived (they never touch the decoder)
+        assert ing.decode(b"junk") is None
+        assert ing.stats.error_ratio == pytest.approx(0.5)
+
+    def test_decode_many_counts_like_decode(self):
+        ing = FleetIngest()
+        wire = encode_packet(golden_packet(window=False))
+        out = ing.decode_many([wire, b"junk", golden_packet(window=False)])
+        assert [o is not None for o in out] == [True, False, True]
+        assert ing.stats.packets == 2
+        assert ing.stats.decode_errors == 1
+        assert ing.stats.predecoded == 1
+
+
+# ---------------------------------------------------------------------------
+# golden SFP1 fixtures: the legacy byte format can never drift silently
+# ---------------------------------------------------------------------------
+
+
+class TestGoldenSfp1:
+    @pytest.mark.parametrize("name", sorted(GOLDEN_CASES))
+    def test_golden_bytes_decode_and_reencode(self, name):
+        blob = (GOLDEN_DIR / name).read_bytes()
+        case = GOLDEN_CASES[name]
+        expect = golden_packet(window=case["window"])
+        got = decode_packet(blob)
+        if case["compress"] == "int8":
+            # int8 goldens decode to the dequantized window; reconstruct
+            # the exact expectation through the shared quantizer
+            q, s = quantize_i8(np.asarray(expect.window, np.float64), axis=-1)
+            expect = dataclasses.replace(
+                expect, window=q.astype(np.float64) * np.asarray(s)
+            )
+        assert_packets_equal(expect, got)
+        # re-encoding through the back-compat route reproduces the exact
+        # checked-in bytes: encoder and decoder are both pinned
+        assert encode_packet(
+            got, compress=case["compress"], wire="sfp1"
+        ) == blob
+
+    def test_goldens_exist(self):
+        for name in GOLDEN_CASES:
+            assert (GOLDEN_DIR / name).is_file(), (
+                f"missing fixture {name}; regenerate with "
+                f"PYTHONPATH=src python tests/test_wire.py --regen"
+            )
+
+
+# ---------------------------------------------------------------------------
+# varint/delta codec unit coverage
+# ---------------------------------------------------------------------------
+
+
+class TestDeltaVarintCodec:
+    @pytest.mark.parametrize("shape", [(1, 1, 1), (7, 3, 2), (30, 8, 6)])
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_lossless_roundtrip(self, shape, seed):
+        rng = np.random.default_rng(seed)
+        q = rng.integers(-127, 128, size=shape).astype(np.int8)
+        buf = delta_varint_encode_i8(q)
+        np.testing.assert_array_equal(
+            delta_varint_decode_i8(buf, shape), q
+        )
+
+    def test_truncation_and_trailing_rejected(self):
+        q = np.arange(24, dtype=np.int8).reshape(4, 3, 2)
+        buf = delta_varint_encode_i8(q)
+        for i in range(len(buf)):
+            with pytest.raises(ValueError):
+                delta_varint_decode_i8(buf[:i], q.shape)
+        with pytest.raises(ValueError):
+            delta_varint_decode_i8(buf + b"\x01", q.shape)
+
+    def test_overlong_varint_rejected(self):
+        with pytest.raises(ValueError, match="2 bytes"):
+            delta_varint_decode_i8(b"\xff\xff\x01", (1, 1, 1))
+
+
+# ---------------------------------------------------------------------------
+# fixture regeneration
+# ---------------------------------------------------------------------------
+
+
+def _regen() -> None:
+    GOLDEN_DIR.mkdir(exist_ok=True)
+    for name, case in GOLDEN_CASES.items():
+        pkt = golden_packet(window=case["window"])
+        blob = encode_packet(pkt, compress=case["compress"], wire="sfp1")
+        (GOLDEN_DIR / name).write_bytes(blob)
+        print(f"wrote {GOLDEN_DIR / name} ({len(blob)} bytes, "
+              f"adler32={zlib.adler32(blob):08x})")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        sys.exit("usage: python tests/test_wire.py --regen")
