@@ -3,25 +3,61 @@
 The dense root-visible payload is B_root = R*N*K*b bytes (§5).  A packet
 carries the window's rank-stage matrix (or only its summary, in `compact`
 mode), the diagnosis, and provenance (schema hash, window index, gather
-status), as line-delimited JSON + a raw float64 buffer.  The router-vs-trace
-benchmark (paper Table 6) measures these against a full per-step trace.
+status).  Two wire framings are supported:
+
+* **SFP2** (default) — the zero-copy format.  Every section is length-
+  prefixed and bounds-checked against the buffer before it is sliced;
+  trailing bytes are rejected; the float64 window payload decodes as a
+  read-only zero-copy view into the wire buffer (`memoryview`-based, no
+  payload copy).  The int8 window payload ships either raw (`int8`, the
+  fleet default) or step-delta'd + zigzag-varint'd (`int8.delta`, for
+  transports that want byte-stream smoothness); both dequantize to the
+  exact same float64 window.  The header is built field-by-field — no
+  `dataclasses.asdict`, which deep-copied the full window on SFP1 —
+  present ranks travel as a binary u32 section, and the payload is
+  guarded by an adler32 checksum (corruption detection on a monitoring
+  wire, not an authentication boundary; ~2x cheaper than SFP1's
+  truncated sha256 at the 0.1 MB scale).
+* **SFP1** — the legacy framing kept for back-compat: every packet
+  produced by older emitters still decodes bit-for-bit (golden fixtures
+  in `tests/golden/` pin the byte format).  Its decoder now applies the
+  same strict bounds (declared lengths validated, trailing garbage after
+  a compact packet rejected) without changing what valid packets decode
+  to.
+
+Byte layouts are documented in docs/architecture.md; the encode/decode
+throughput gates live in `benchmarks/wire_path.py` (paper Table 6
+measures the artifact against a full per-step trace).
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-import io
 import json
+import struct
+import zlib
 from typing import Any
 
 import numpy as np
 
 from ..core.labeler import Diagnosis
-from ..distributed.compression import dequantize_i8, quantize_i8
+from ..distributed.compression import (
+    delta_varint_decode_i8,
+    delta_varint_encode_i8,
+    quantize_i8,
+)
 
 __all__ = ["EvidencePacket", "encode_packet", "decode_packet"]
 
 _MAGIC = b"SFP1"
+_MAGIC2 = b"SFP2"
+_SFP2_VERSION = 1
+_FLAG_WINDOW = 0x01
+#: compress= -> (meta dtype tag, optional payload codec tag)
+_COMPRESSIONS = ("none", "int8", "int8.delta")
+#: hard cap on any declared window: 2^31 cells (~16 GiB f64) — a corrupt
+#: shape must fail the bounds check, never reach an allocation.
+_MAX_CELLS = 1 << 31
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,82 +133,306 @@ def from_diagnosis(
     )
 
 
-def encode_packet(p: EvidencePacket, *, compress: str = "none") -> bytes:
-    """Serialize a packet.  `compress="int8"` ships the window matrix as
-    per-stage symmetric int8 (the fleet wire format: 8x smaller payloads,
-    same codec as the gradient path in repro.distributed.compression)."""
-    if compress not in ("none", "int8"):
-        raise ValueError(f"unknown compression {compress!r}")
-    header: dict[str, Any] = {
-        k: v
-        for k, v in dataclasses.asdict(p).items()
-        if k != "window"
+# ---------------------------------------------------------------------------
+# header (shared): built field-by-field — never dataclasses.asdict, which
+# deep-copies every field (including the full [N, R, S] float64 window)
+# only for the window to be filtered back out.
+# ---------------------------------------------------------------------------
+
+
+def _header_dict(p: EvidencePacket, *, present_ranks: bool) -> dict[str, Any]:
+    """Wire header in dataclass field order (SFP1 byte compatibility);
+    SFP2 carries present_ranks in a binary section instead."""
+    h: dict[str, Any] = {
+        "window_index": p.window_index,
+        "schema_hash": p.schema_hash,
+        "stages": p.stages,
+        "steps": p.steps,
+        "world_size": p.world_size,
+        "gather_ok": p.gather_ok,
+        "labels": p.labels,
+        "routing_stages": p.routing_stages,
+        "shares": p.shares,
+        "gains": p.gains,
+        "co_critical_stages": p.co_critical_stages,
+        "downgrade_reasons": p.downgrade_reasons,
+        "leader_rank": p.leader_rank,
     }
-    head = json.dumps(header, default=list).encode()
-    buf = io.BytesIO()
-    buf.write(_MAGIC)
-    buf.write(len(head).to_bytes(4, "little"))
-    buf.write(head)
-    if p.window is not None:
-        w = np.ascontiguousarray(p.window, np.float64)
-        if compress == "int8":
-            q, scale = quantize_i8(w, axis=-1)
-            meta_d: dict[str, Any] = {
-                "shape": w.shape,
-                "dtype": "int8",
-                "scales": [float(v) for v in np.atleast_1d(scale)],
-            }
-            raw = np.ascontiguousarray(q).tobytes()
-        else:
-            meta_d = {"shape": w.shape, "dtype": "float64"}
-            raw = w.tobytes()
-        meta = json.dumps(meta_d).encode()
-        buf.write(len(meta).to_bytes(4, "little"))
-        buf.write(meta)
-        buf.write(hashlib.sha256(raw).digest()[:8])  # provenance hash
-        buf.write(raw)
+    if present_ranks:
+        h["present_ranks"] = p.present_ranks
+    h["exposed_total"] = p.exposed_total
+    h["sync_stages"] = p.sync_stages
+    h["first_step"] = p.first_step
+    return h
+
+
+def _window_payload(
+    p: EvidencePacket, compress: str
+) -> tuple[dict[str, Any], Any]:
+    """(meta dict, payload buffer) for the window section."""
+    w = np.ascontiguousarray(p.window, np.dtype("<f8"))
+    if compress == "none":
+        return {"shape": w.shape, "dtype": "float64"}, memoryview(w).cast("B")
+    q, scale = quantize_i8(w, axis=-1)
+    meta: dict[str, Any] = {
+        "shape": w.shape,
+        "dtype": "int8",
+        "scales": [float(v) for v in np.atleast_1d(scale)],
+    }
+    if compress == "int8.delta":
+        meta["codec"] = "delta"
+        return meta, delta_varint_encode_i8(q)
+    return meta, memoryview(np.ascontiguousarray(q)).cast("B")
+
+
+def _validate_meta(meta: Any) -> tuple[tuple[int, ...], str, str, int]:
+    """Strict window-meta validation shared by both decode routes.
+
+    Returns (shape, dtype, codec, expected_cells); raises ValueError on
+    anything malformed — in particular an oversized / non-integer shape
+    is rejected *before* any allocation or slicing happens.
+    """
+    if not isinstance(meta, dict):
+        raise ValueError("window meta is not an object")
+    shape_raw = meta.get("shape")
+    if (
+        not isinstance(shape_raw, list)
+        or not shape_raw
+        or len(shape_raw) > 8
+        or not all(isinstance(v, int) and 0 <= v <= _MAX_CELLS for v in shape_raw)
+    ):
+        raise ValueError("invalid window shape meta")
+    shape = tuple(shape_raw)
+    cells = 1
+    for v in shape:
+        cells *= v
+    if cells > _MAX_CELLS:
+        raise ValueError("window shape meta exceeds size cap")
+    dtype = meta.get("dtype", "float64")
+    if dtype not in ("float64", "int8"):
+        raise ValueError(f"unknown window dtype {dtype!r}")
+    codec = meta.get("codec", "raw")
+    if codec not in ("raw", "delta") or (codec == "delta" and dtype != "int8"):
+        raise ValueError(f"unknown window codec {codec!r}")
+    if dtype == "int8":
+        scales = meta.get("scales")
+        if not isinstance(scales, list) or len(scales) not in (1, shape[-1]):
+            raise ValueError("int8 window meta missing per-stage scales")
+    return shape, dtype, codec, cells
+
+
+def _decode_window(
+    payload: memoryview, meta: dict[str, Any]
+) -> np.ndarray:
+    """Materialize the window from a validated payload slice.  float64
+    payloads come back as a read-only zero-copy view into the wire
+    buffer; int8 payloads dequantize into a fresh float64 array identical
+    across the raw and delta codecs (and identical to SFP1's
+    `dequantize_i8` route)."""
+    shape, dtype, codec, cells = _validate_meta(meta)
+    if dtype == "float64":
+        if len(payload) != cells * 8:
+            raise ValueError("window payload length does not match shape")
+        return np.frombuffer(payload, np.dtype("<f8")).reshape(shape)
+    if codec == "delta":
+        q = delta_varint_decode_i8(payload, shape)
     else:
-        buf.write((0).to_bytes(4, "little"))
-    return buf.getvalue()
+        if len(payload) != cells:
+            raise ValueError("window payload length does not match shape")
+        q = np.frombuffer(payload, np.int8).reshape(shape)
+    # equivalent to dequantize_i8(q, scales, axis=-1): int8 -> f64 is
+    # exact and the in-place multiply rounds identically; two passes, no
+    # third temporary.
+    out = q.astype(np.float64)
+    np.multiply(out, np.asarray(meta["scales"], np.float64), out=out)
+    return out
 
 
-def decode_packet(data: bytes) -> EvidencePacket:
-    if data[:4] != _MAGIC:
-        raise ValueError("not a StageFrontier packet")
-    off = 4
-    hlen = int.from_bytes(data[off : off + 4], "little")
-    off += 4
-    header = json.loads(data[off : off + hlen])
-    off += hlen
-    mlen = int.from_bytes(data[off : off + 4], "little")
-    off += 4
-    window = None
-    if mlen:
-        meta = json.loads(data[off : off + mlen])
-        off += mlen
-        digest, off = data[off : off + 8], off + 8
-        raw = data[off:]
-        if hashlib.sha256(raw).digest()[:8] != digest:
-            raise ValueError("packet payload hash mismatch")
-        if meta.get("dtype") == "int8":
-            q = np.frombuffer(raw, np.int8).reshape(meta["shape"])
-            window = dequantize_i8(q, np.asarray(meta["scales"]), axis=-1)
-        else:
-            window = np.frombuffer(raw, np.float64).reshape(meta["shape"])
+# ---------------------------------------------------------------------------
+# encode
+# ---------------------------------------------------------------------------
+
+
+def encode_packet(
+    p: EvidencePacket, *, compress: str = "none", wire: str = "sfp2"
+) -> bytes:
+    """Serialize a packet.
+
+    `compress="int8"` ships the window matrix as per-stage symmetric int8
+    (8x smaller payloads, codec shared with the gradient path in
+    `repro.distributed.compression`); `"int8.delta"` additionally
+    step-deltas and zigzag-varints the quantized stream.  `wire="sfp1"`
+    emits the legacy framing (back-compat emitters; no `"int8.delta"`).
+    """
+    if compress not in _COMPRESSIONS:
+        raise ValueError(f"unknown compression {compress!r}")
+    if wire == "sfp1":
+        return _encode_sfp1(p, compress)
+    if wire != "sfp2":
+        raise ValueError(f"unknown wire format {wire!r}")
+
+    header = _header_dict(p, present_ranks=False)
+    payload = None
+    if p.window is not None:
+        meta_d, payload = _window_payload(p, compress)
+        header["window"] = meta_d
+    head = json.dumps(header, default=list).encode()
+    ranks = np.asarray(p.present_ranks, np.dtype("<u4"))
+    flags = _FLAG_WINDOW if payload is not None else 0
+    parts: list[Any] = [
+        struct.pack("<4sBBI", _MAGIC2, _SFP2_VERSION, flags, len(head)),
+        head,
+        struct.pack("<I", ranks.size),
+        ranks.tobytes(),
+    ]
+    if payload is not None:
+        parts.append(struct.pack("<II", len(payload), zlib.adler32(payload)))
+        parts.append(payload)
+    return b"".join(parts)
+
+
+def _encode_sfp1(p: EvidencePacket, compress: str) -> bytes:
+    """Legacy SFP1 framing, byte-identical to the pre-SFP2 encoder (the
+    golden fixtures assert this) — minus its `dataclasses.asdict` window
+    deep-copy."""
+    if compress == "int8.delta":
+        raise ValueError("int8.delta requires the SFP2 wire format")
+    head = json.dumps(_header_dict(p, present_ranks=True), default=list).encode()
+    parts: list[Any] = [_MAGIC, len(head).to_bytes(4, "little"), head]
+    if p.window is not None:
+        meta_d, payload = _window_payload(p, compress)
+        meta = json.dumps(meta_d, default=list).encode()
+        parts.append(len(meta).to_bytes(4, "little"))
+        parts.append(meta)
+        parts.append(hashlib.sha256(payload).digest()[:8])
+        parts.append(payload)
+    else:
+        parts.append((0).to_bytes(4, "little"))
+    return b"".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def _need(data, off: int, n: int, what: str) -> int:
+    """Strict-bounds guard: the next `n` bytes must exist."""
+    end = off + n
+    if n < 0 or end > len(data):
+        raise ValueError(f"truncated packet: {what}")
+    return end
+
+
+def _finish_header(header: Any, window: np.ndarray | None) -> EvidencePacket:
+    if not isinstance(header, dict):
+        raise ValueError("packet header is not an object")
     header.setdefault("present_ranks", [])
     header.setdefault("exposed_total", -1.0)
     header.setdefault("sync_stages", [])
     header.setdefault("first_step", -1)
-    for key in (
-        "stages",
-        "labels",
-        "routing_stages",
-        "shares",
-        "gains",
-        "co_critical_stages",
-        "downgrade_reasons",
-        "present_ranks",
-        "sync_stages",
-    ):
-        header[key] = tuple(header[key])
-    return EvidencePacket(window=window, **header)
+    try:
+        for key in (
+            "stages",
+            "labels",
+            "routing_stages",
+            "shares",
+            "gains",
+            "co_critical_stages",
+            "downgrade_reasons",
+            "present_ranks",
+            "sync_stages",
+        ):
+            header[key] = tuple(header[key])
+        return EvidencePacket(window=window, **header)
+    except (KeyError, TypeError) as e:
+        # missing / extra / non-iterable header fields: the decode
+        # contract is ValueError on ANY malformed input, never a leaked
+        # KeyError/TypeError
+        raise ValueError(f"invalid packet header: {e!r}") from e
+
+
+def decode_packet(data: bytes) -> EvidencePacket:
+    """Decode either wire framing (dispatch on magic).  Every declared
+    length is validated against the buffer before slicing and trailing
+    bytes are rejected; malformed input raises ValueError (the fleet
+    ingest counts-and-drops, never raises)."""
+    if len(data) < 4:
+        raise ValueError("not a StageFrontier packet")
+    magic = bytes(data[:4])
+    if magic == _MAGIC2:
+        return _decode_sfp2(data)
+    if magic == _MAGIC:
+        return _decode_sfp1(data)
+    raise ValueError("not a StageFrontier packet")
+
+
+def _decode_sfp2(data: bytes) -> EvidencePacket:
+    mv = memoryview(data)
+    off = _need(mv, 0, 10, "fixed header")
+    _, version, flags, hlen = struct.unpack_from("<4sBBI", mv, 0)
+    if version != _SFP2_VERSION:
+        raise ValueError(f"unsupported SFP2 wire version {version}")
+    end = _need(mv, off, hlen, "header")
+    header = json.loads(str(mv[off:end], "utf-8"))
+    off = end
+
+    end = _need(mv, off, 4, "present-rank count")
+    (nranks,) = struct.unpack_from("<I", mv, off)
+    off = _need(mv, end, 4 * nranks, "present ranks")
+    if not isinstance(header, dict) or "present_ranks" in header:
+        raise ValueError("invalid packet header")
+    header["present_ranks"] = (
+        np.frombuffer(mv[end:off], np.dtype("<u4")).tolist() if nranks else []
+    )
+
+    window = None
+    meta = header.pop("window", None)
+    if flags & _FLAG_WINDOW:
+        if meta is None:
+            raise ValueError("window flag set but header carries no meta")
+        end = _need(mv, off, 8, "window section lengths")
+        plen, checksum = struct.unpack_from("<II", mv, off)
+        off = end
+        end = _need(mv, off, plen, "window payload")
+        payload = mv[off:end]
+        off = end
+        if zlib.adler32(payload) != checksum:
+            raise ValueError("packet payload hash mismatch")
+        window = _decode_window(payload, meta)
+    elif meta is not None:
+        raise ValueError("header carries window meta but no payload")
+    if off != len(mv):
+        raise ValueError("trailing bytes after packet")
+    return _finish_header(header, window)
+
+
+def _decode_sfp1(data: bytes) -> EvidencePacket:
+    """Legacy route: identical results for every valid SFP1 packet, but
+    with the same strict bounds as SFP2 (declared lengths checked before
+    slicing; a compact packet followed by trailing garbage is rejected —
+    the old decoder silently accepted both)."""
+    mv = memoryview(data)
+    off = _need(mv, 4, 4, "header length")
+    hlen = int.from_bytes(mv[4:off], "little")
+    end = _need(mv, off, hlen, "header")
+    header = json.loads(bytes(mv[off:end]))
+    off = end
+    end = _need(mv, off, 4, "meta length")
+    mlen = int.from_bytes(mv[off:end], "little")
+    off = end
+    window = None
+    if mlen:
+        end = _need(mv, off, mlen, "window meta")
+        meta = json.loads(bytes(mv[off:end]))
+        off = _need(mv, end, 8, "payload hash")
+        digest = mv[end:off]
+        # SFP1 carries no payload length: the payload is the buffer tail,
+        # so its size is validated against the declared shape instead.
+        payload = mv[off:]
+        if hashlib.sha256(payload).digest()[:8] != digest:
+            raise ValueError("packet payload hash mismatch")
+        window = _decode_window(payload, meta)
+    elif off != len(mv):
+        raise ValueError("trailing bytes after packet")
+    return _finish_header(header, window)
