@@ -26,6 +26,7 @@ MODULES = [
     ("wire_path", "SFP2 vs legacy SFP1 encode/decode + truncation fuzz"),
     ("whatif_matrix", "counterfactual what-if matrix vs per-candidate loop"),
     ("regime_detection", "temporal regime classification + batched route"),
+    ("incident_engine", "common-cause attribution + escalation budget law"),
 ]
 
 

@@ -67,7 +67,13 @@ def _legacy_dequantize_i8(q, scale, axis=None):
 
 
 def legacy_encode_sfp1(p: EvidencePacket, *, compress: str = "none") -> bytes:
-    header = {k: v for k, v in dataclasses.asdict(p).items() if k != "window"}
+    # the PR-3-era dataclass had no `hosts` field; exclude it so the
+    # frozen baseline keeps emitting the exact bytes that era shipped
+    header = {
+        k: v
+        for k, v in dataclasses.asdict(p).items()
+        if k not in ("window", "hosts")
+    }
     head = json.dumps(header, default=list).encode()
     buf = io.BytesIO()
     buf.write(b"SFP1")

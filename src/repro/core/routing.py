@@ -32,7 +32,13 @@ class RoutingSet:
         return self.stages[0]
 
     def topk(self, k: int) -> tuple[int, ...]:
-        order = tuple(int(i) for i in np.argsort(self.scores)[::-1])
+        # descending score, LOWEST index first on ties — the same tie
+        # convention as every other routing surface (frontier leaders,
+        # fleet route entries); reversing a stable ascending sort would
+        # silently prefer the highest tied index instead.
+        order = tuple(
+            int(i) for i in np.argsort(-np.asarray(self.scores), kind="stable")
+        )
         return order[:k]
 
     def hit(self, stage: int) -> bool:
@@ -55,7 +61,8 @@ def candidate_set(scores: np.ndarray, tau: float = 0.80) -> RoutingSet:
     if tot <= 0:
         return RoutingSet(stages=(), scores=tuple(v), tau=tau)
     p = v / tot
-    order = np.argsort(p, kind="stable")[::-1]
+    # descending score, lowest stage index first on ties (see topk)
+    order = np.argsort(-p, kind="stable")
     cum = 0.0
     chosen: list[int] = []
     for idx in order:

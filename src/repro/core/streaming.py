@@ -484,6 +484,15 @@ class StreamingRegimes:
     def reset(self) -> None:
         self._ring.reset()
 
+    def activity(self) -> np.ndarray:
+        """[N, R, S] bool — the thresholded activity series over the
+        retained steps (chronological).  This is the exact series the
+        window statistics reduce, exposed raw because the incident
+        tier's cross-job co-activation (`repro.incidents`) correlates
+        the *series*, not the per-job reductions."""
+        o = self._ring.order()
+        return self._excess[o] > self._thresh[None]
+
     def stats(self):
         """Window `RegimeStats` ([S, R]-oriented, window-relative steps)."""
         from .regimes import regime_stats

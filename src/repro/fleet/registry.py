@@ -46,6 +46,9 @@ class JobState:
     #: declared sync profile (stage names ending in a group barrier) — set
     #: from the job's packets; drives the counterfactual replay model.
     sync_stages: tuple[str, ...] = ()
+    #: declared per-rank host placement (SFP2-v2 host section); feeds the
+    #: incident tier's `Topology`.  () = the job never declared one.
+    hosts: tuple[str, ...] = ()
     #: last full [N, R, S] window (f32, only when packets ship windows);
     #: feeds the batched fleet-kernel refresh, which releases it — raw
     #: windows are consumed, never accumulated.
@@ -292,6 +295,8 @@ class FleetRegistry:
         job.last_packet = pkt
         if pkt.sync_stages:
             job.sync_stages = tuple(pkt.sync_stages)
+        if pkt.hosts:
+            job.hosts = tuple(pkt.hosts)
         # Any accepted packet is fresher evidence than a kernel refresh
         # computed from an older window: invalidate the refreshed state so
         # `recoverable()`/`shares()` fall to the packet (or the next

@@ -25,13 +25,16 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Iterable
+from typing import TYPE_CHECKING, Iterable
 
 import numpy as np
 
 from ..telemetry.packets import EvidencePacket
 from .ingest import FleetIngest
 from .registry import FleetRegistry, JobState
+
+if TYPE_CHECKING:  # pragma: no cover
+    from ..incidents import IncidentEngine
 
 __all__ = ["FleetService", "RouteEntry"]
 
@@ -78,6 +81,7 @@ class FleetService:
         degrade_after: int = 3,
         max_jobs: int = 100_000,
         regime_windows: int = 4,
+        incidents: "IncidentEngine | None" = None,
     ):
         self.ingest = FleetIngest()
         self.registry = FleetRegistry(
@@ -87,6 +91,12 @@ class FleetService:
             max_jobs=max_jobs,
             regime_windows=regime_windows,
         )
+        #: optional incident tier (`repro.incidents.IncidentEngine`):
+        #: when attached, every `tick()` feeds it this round's route
+        #: entries, evictions, and per-job activity series, and packets'
+        #: declared host placements flow into its `Topology` — route
+        #: answers gain identity, lifecycle, and common-cause grouping.
+        self.incidents = incidents
         self._tick = 0
         self.evicted_total = 0
 
@@ -104,7 +114,10 @@ class FleetService:
         pkt = self.ingest.decode(data)
         if pkt is None:
             return None
-        return self.registry.update(job_id, pkt, self._tick)
+        job = self.registry.update(job_id, pkt, self._tick)
+        if job is not None and self.incidents is not None and pkt.hosts:
+            self.incidents.topology.declare(job_id, pkt.hosts)
+        return job
 
     def submit_many(
         self,
@@ -132,15 +145,35 @@ class FleetService:
                 continue
             if self.registry.update(job_id, pkt, self._tick) is not None:
                 accepted += 1
+                if self.incidents is not None and pkt.hosts:
+                    self.incidents.topology.declare(job_id, pkt.hosts)
         if refresh:
             self.refresh_batched()
         return accepted
 
     def tick(self) -> list[str]:
-        """Advance the logical clock; evicts and returns stale job ids."""
+        """Advance the logical clock; evicts and returns stale job ids.
+
+        With an incident engine attached, the tick also folds this
+        round's full route answer (every routable job), the evictions,
+        and the per-job regime activity series into the engine — the
+        stateless per-window answer becomes durable incidents.
+        """
         self._tick += 1
         evicted = self.registry.evict_stale(self._tick)
         self.evicted_total += len(evicted)
+        if self.incidents is not None:
+            activity = {
+                job.job_id: (job.regimes.activity(), job.stages)
+                for job in self.registry.jobs()
+                if job.regimes is not None and job.regimes.num_steps
+            }
+            self.incidents.observe(
+                self._tick,
+                self.route(len(self.registry)),
+                evicted=evicted,
+                activity=activity,
+            )
         return evicted
 
     # -- batched kernel refresh --------------------------------------------
@@ -221,10 +254,13 @@ class FleetService:
         another's rank.
 
         Ordering is fully deterministic: weighted seconds descending,
-        ties broken by job id ascending (stable across dict insertion
-        order and refresh timing).  Degraded (telemetry_limited) jobs
-        never appear: quality labels must not trigger workload-touching
-        actions.
+        ties broken by job id ascending, then by rank index ascending
+        (stable across dict insertion order and refresh timing; the
+        third key guards the day an answer carries several rank
+        candidates per job — two entries tying on (score, job_id) must
+        still order identically on every run).  Degraded
+        (telemetry_limited) jobs never appear: quality labels must not
+        trigger workload-touching actions.
         """
         floor = self.PERSISTENCE_FLOOR
         scored = []
@@ -236,7 +272,7 @@ class FleetService:
             call = job.regime_call(si, ri)
             score = rec if w is None else rec * (floor + (1.0 - floor) * w)
             scored.append((score, rec, si, ri, w, call, job))
-        scored.sort(key=lambda t: (-t[0], t[6].job_id))
+        scored.sort(key=lambda t: (-t[0], t[6].job_id, t[3]))
         out: list[RouteEntry] = []
         for score, rec, si, ri, w, call, job in scored[: max(0, k)]:
             pkt = job.last_packet
@@ -267,7 +303,7 @@ class FleetService:
             for name, c in j.regime_counts().items():
                 if name != "none":
                     regimes[name] = regimes.get(name, 0) + c
-        return {
+        out = {
             "tick": self._tick,
             "jobs": len(jobs),
             "degraded_jobs": sum(1 for j in jobs if j.degraded),
@@ -285,3 +321,7 @@ class FleetService:
             # eviction — summing live jobs made this run backwards.
             "windows_seen": self.registry.windows_total,
         }
+        if self.incidents is not None:
+            # live incidents per lifecycle state (+ lifetime resolved)
+            out["incidents"] = self.incidents.counts()
+        return out

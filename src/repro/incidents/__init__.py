@@ -1,0 +1,47 @@
+"""repro.incidents — persistent cross-job fault tracking (the incident tier).
+
+The fleet service re-derives "where to aim the profiler" from scratch
+every window; this tier gives that answer *identity, lifecycle, and a
+budget*.  Route entries become durable `Incident` objects
+(open -> active -> merged -> cooling -> resolved), the same fault
+re-surfacing across windows dedups onto one incident, faults appearing
+in >= 2 jobs on one host promote to a fleet-level common-cause incident
+(`Topology` join + the batched co-activation kernel), and a token-bucket
+`EscalationController` turns the ranked incidents into at most B
+profiler attachments per tick, with hysteresis.
+
+Layers:
+  topology    the (job, rank) -> host map (static or learned from
+              SFP2-v2 packets' host-id section)
+  engine      incident identity, lifecycle, exposure accumulation,
+              cross-job common-cause promotion
+  escalation  budgeted, hysteretic profiler-attachment planning
+"""
+from .engine import (
+    ACTIVE,
+    COOLING,
+    Incident,
+    IncidentEngine,
+    IncidentParams,
+    LIVE_STATES,
+    MERGED,
+    OPEN,
+    RESOLVED,
+)
+from .escalation import EscalationController, ProfilerAction
+from .topology import Topology
+
+__all__ = [
+    "ACTIVE",
+    "COOLING",
+    "EscalationController",
+    "Incident",
+    "IncidentEngine",
+    "IncidentParams",
+    "LIVE_STATES",
+    "MERGED",
+    "OPEN",
+    "ProfilerAction",
+    "RESOLVED",
+    "Topology",
+]

@@ -1,0 +1,577 @@
+"""Incident engine: durable fault identity across windows, jobs, ticks.
+
+The fleet service's `route(k)` is stateless — every window it re-derives
+"where to aim the profiler" from scratch, so a persistent drift on one
+host shared by three jobs surfaces as three unrelated, flickering route
+entries, and nothing says *this is the same fault we flagged 40 windows
+ago*.  This module is the missing layer between per-window evidence and
+an operator console: it consumes route entries (recoverable seconds from
+`core.whatif`, persistence/regime labels from `core.regimes`) and
+maintains durable `Incident` objects with a full lifecycle:
+
+    open -> active -> (merged) -> cooling -> resolved
+
+  open      first sighting of a (job, stage, rank-set) candidate;
+  active    the same candidate re-surfaced in a later tick or window —
+            the fault has identity across windows now;
+  merged    absorbed into a fleet-level common-cause incident (the
+            member keeps accumulating exposure; the fleet incident
+            represents it to the escalation tier);
+  cooling   unseen for `cooling_after` ticks — maybe healed, kept warm
+            so a flap re-attaches to the SAME incident instead of
+            opening a duplicate;
+  resolved  unseen through the cooling period ("healed"), or the job
+            was evicted while the incident was live ("evicted"), or a
+            fleet incident lost its quorum ("members_resolved").
+
+Identity and dedup are deterministic: entries are folded in sorted
+(job, stage, rank) order, an entry re-matching a live incident's
+rank-set (or, with a declared `Topology`, a sibling rank on the same
+host) folds into it, and exposure accumulates at most once per window
+index — re-routing the same window every tick never double-counts.
+Incident ids are derived from the matched key and opening tick, so any
+permutation of one tick's submissions yields the identical incident set
+(property-tested in ``tests/test_incident_properties.py``).
+
+Cross-job correlation: given per-job activity series and a `Topology`,
+the engine scores hosts whose faults appear in >= `min_jobs` jobs'
+incident streams (`co_activation_ref`, or the batched Pallas route
+`kernels.frontier.co_activation` — one dispatch over host x stage tiles
+folding every job's series) and promotes the matching single-job
+incidents into one fleet-level incident that outranks any single-job
+entry in escalation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable, Mapping, Sequence
+
+import numpy as np
+
+from .topology import Topology
+
+__all__ = [
+    "ACTIVE",
+    "COOLING",
+    "Incident",
+    "IncidentEngine",
+    "IncidentParams",
+    "LIVE_STATES",
+    "MERGED",
+    "OPEN",
+    "RESOLVED",
+]
+
+#: lifecycle states
+OPEN = "open"
+ACTIVE = "active"
+MERGED = "merged"
+COOLING = "cooling"
+RESOLVED = "resolved"
+LIVE_STATES = frozenset({OPEN, ACTIVE, MERGED, COOLING})
+
+
+@dataclasses.dataclass(frozen=True)
+class IncidentParams:
+    """Thresholds of the incident lifecycle (all deterministic).
+
+    min_recoverable_s: route entries priced at or below this never open
+                       an incident (0.0 = any positive price does).
+    cooling_after:     ticks unseen before a live incident cools.
+    resolve_after:     further unseen ticks before a cooling incident
+                       resolves as "healed".
+    min_jobs:          distinct jobs required on one (host, stage) for
+                       common-cause promotion.
+    min_coactive_steps: steps with >= 2 jobs simultaneously active
+                       required for promotion (separates a shared live
+                       fault from disjoint coincidences).
+    retention:         resolved incidents kept for operators (bounded
+                       history; oldest pruned first).
+    persistence_floor: score floor mirroring `FleetService` routing —
+                       a healed incident keeps this fraction of its
+                       exposure score.
+    """
+
+    min_recoverable_s: float = 0.0
+    cooling_after: int = 2
+    resolve_after: int = 4
+    min_jobs: int = 2
+    min_coactive_steps: int = 1
+    retention: int = 256
+    persistence_floor: float = 0.05
+
+
+@dataclasses.dataclass
+class Incident:
+    """One durable fault, job-scoped or fleet-scoped."""
+
+    incident_id: str
+    scope: str                    # "job" | "fleet"
+    job_id: str                   # "" for fleet scope
+    stage: str
+    ranks: tuple[int, ...]        # sorted rank-set (job scope; () fleet)
+    host: str                     # common-cause host; "" when undeclared
+    state: str
+    opened_tick: int
+    last_seen_tick: int
+    onset_step: int = -1          # job-global onset from the first entry
+    last_window_index: int = -1
+    windows_seen: int = 0
+    exposure_s: float = 0.0       # accumulated recoverable seconds
+    recoverable_s: float = 0.0    # latest per-window estimate
+    regime: str = ""
+    persistence: float = 1.0
+    resolve_reason: str = ""
+    merged_into: str = ""         # job scope: owning fleet incident id
+    members: tuple[str, ...] = () # fleet scope: member incident ids
+    member_jobs: tuple[str, ...] = ()  # fleet scope: member job ids
+    escalations: int = 0
+    last_escalated_tick: int = -(10 ** 9)
+
+    @property
+    def live(self) -> bool:
+        return self.state in LIVE_STATES
+
+    def score(self, floor: float = 0.05) -> float:
+        """Escalation score: accumulated exposure x persistence (floored,
+        mirroring the fleet routing weight)."""
+        return self.exposure_s * (floor + (1.0 - floor) * self.persistence)
+
+    def as_row(self) -> dict:
+        """Flat summary row for consoles / serving output."""
+        return {
+            "id": self.incident_id,
+            "scope": self.scope,
+            "job": self.job_id,
+            "stage": self.stage,
+            "ranks": list(self.ranks),
+            "host": self.host,
+            "state": self.state,
+            "exposure_s": round(self.exposure_s, 4),
+            "regime": self.regime,
+            "persistence": round(self.persistence, 3),
+            "onset_step": self.onset_step,
+            "opened_tick": self.opened_tick,
+            "windows": self.windows_seen,
+            "escalations": self.escalations,
+            "resolve_reason": self.resolve_reason,
+            "member_jobs": list(self.member_jobs),
+        }
+
+
+class IncidentEngine:
+    """Durable cross-window, cross-job fault tracker.
+
+    Feed it once per fleet tick (`observe`) with the tick's route
+    entries, the evicted job ids, and (optionally) per-job activity
+    series for common-cause correlation.  All state is bounded: live
+    incidents are bounded by the fleet's candidate count, resolved
+    history by `params.retention`.
+    """
+
+    def __init__(
+        self,
+        *,
+        topology: Topology | None = None,
+        params: IncidentParams | None = None,
+        use_kernel: bool = False,
+    ):
+        self.topology = topology if topology is not None else Topology()
+        self.params = params or IncidentParams()
+        #: co-activation route: the NumPy ref per tick by default (the
+        #: per-tick tensors are tiny); True dispatches the batched
+        #: Pallas kernel instead (bit-identical — integer statistics).
+        self.use_kernel = use_kernel
+        self._job_incidents: dict[tuple[str, str], list[Incident]] = {}
+        self._fleet_incidents: dict[tuple[str, str], Incident] = {}
+        self._resolved: list[Incident] = []
+        self.opened_total = 0
+        self.merged_total = 0
+        self.resolved_total = 0
+
+    # -- reads -------------------------------------------------------------
+
+    def incidents(self, *, live_only: bool = True) -> list[Incident]:
+        """All incidents, fleet scope first, then deterministic order."""
+        out = [i for i in self._iter_live()]
+        if not live_only:
+            out.extend(self._resolved)
+        out.sort(
+            key=lambda i: (
+                i.scope != "fleet",
+                -i.score(self.params.persistence_floor),
+                i.incident_id,
+            )
+        )
+        return out
+
+    def get(self, incident_id: str) -> Incident | None:
+        for inc in self._iter_live():
+            if inc.incident_id == incident_id:
+                return inc
+        for inc in self._resolved:
+            if inc.incident_id == incident_id:
+                return inc
+        return None
+
+    def counts(self) -> dict[str, int]:
+        """Live incidents per state (+ lifetime resolved)."""
+        out = {OPEN: 0, ACTIVE: 0, MERGED: 0, COOLING: 0, RESOLVED: 0}
+        for inc in self._iter_live():
+            out[inc.state] += 1
+        out[RESOLVED] = self.resolved_total
+        return out
+
+    def table(self, *, live_only: bool = True) -> list[dict]:
+        return [i.as_row() for i in self.incidents(live_only=live_only)]
+
+    def _iter_live(self) -> Iterable[Incident]:
+        for incs in self._job_incidents.values():
+            yield from incs
+        yield from self._fleet_incidents.values()
+
+    # -- the per-tick fold -------------------------------------------------
+
+    def observe(
+        self,
+        tick: int,
+        entries: Sequence[Any],
+        *,
+        evicted: Sequence[str] = (),
+        activity: Mapping[str, tuple[np.ndarray, tuple[str, ...]]]
+        | None = None,
+    ) -> list[Incident]:
+        """Fold one fleet tick; returns the live incidents (sorted).
+
+        `entries` are route-entry-shaped records (``job_id``, ``stage``,
+        ``rank``, ``recoverable_s``, ``persistence``, ``regime``,
+        ``onset_step``, ``window_index`` — `fleet.service.RouteEntry`
+        satisfies this); `activity` maps job_id to its
+        ``(act[N, R, S] bool, stage names)`` thresholded activity series
+        (see `core.streaming.StreamingRegimes.activity`), the substrate
+        of cross-job correlation.
+        """
+        for job_id in sorted(set(evicted)):
+            self._resolve_job(job_id, tick, reason="evicted")
+            self.topology.forget(job_id)
+        # deterministic fold order: a TOTAL key over every field the
+        # fold reads, so any permutation of this tick's submissions —
+        # including duplicate candidates differing only in window or
+        # price — yields the identical incident set and ids.
+        for e in sorted(
+            entries,
+            key=lambda e: (
+                e.job_id,
+                e.stage,
+                e.rank,
+                e.window_index,
+                e.recoverable_s,
+                e.persistence,
+                e.onset_step,
+                e.regime,
+            ),
+        ):
+            self._fold_entry(tick, e)
+        self._sweep(tick)
+        if activity:
+            self._correlate(tick, activity)
+        self._refresh_fleet(tick)
+        self._prune()
+        return self.incidents()
+
+    # -- single-job identity -----------------------------------------------
+
+    def _fold_entry(self, tick: int, e: Any) -> None:
+        if e.recoverable_s <= self.params.min_recoverable_s:
+            return
+        key = (e.job_id, e.stage)
+        incs = self._job_incidents.setdefault(key, [])
+        inc = self._match(incs, e)
+        if inc is None:
+            inc = Incident(
+                incident_id=(
+                    f"ij:{e.job_id}:{e.stage}:r{max(e.rank, -1)}:t{tick}"
+                ),
+                scope="job",
+                job_id=e.job_id,
+                stage=e.stage,
+                ranks=(e.rank,) if e.rank >= 0 else (),
+                host=self.topology.host_of(e.job_id, e.rank),
+                state=OPEN,
+                opened_tick=tick,
+                last_seen_tick=tick,
+            )
+            incs.append(inc)
+            self.opened_total += 1
+        else:
+            if e.rank >= 0 and e.rank not in inc.ranks:
+                inc.ranks = tuple(sorted((*inc.ranks, e.rank)))
+            if inc.state in (OPEN, COOLING) and tick > inc.last_seen_tick:
+                # re-surfaced in a later tick: confirmed identity (a
+                # cooling incident flaps back instead of duplicating)
+                inc.state = ACTIVE
+            inc.last_seen_tick = tick
+        if not inc.host and e.rank >= 0:
+            inc.host = self.topology.host_of(e.job_id, e.rank)
+        # exposure accumulates once per window, MONOTONICALLY — the same
+        # window re-routed on later ticks never double-counts, and
+        # neither does a transport re-delivering an older window after a
+        # newer one.  Entries that cannot declare a window coordinate
+        # (window_index < 0, pre-whatif emitters) count exactly once.
+        new_window = (
+            e.window_index > inc.last_window_index
+            if e.window_index >= 0
+            else inc.windows_seen == 0
+        )
+        if new_window:
+            inc.exposure_s += e.recoverable_s
+            inc.windows_seen += 1
+            inc.last_window_index = max(
+                inc.last_window_index, e.window_index
+            )
+            if inc.windows_seen >= 2 and inc.state == OPEN:
+                inc.state = ACTIVE
+        inc.recoverable_s = e.recoverable_s
+        inc.regime = e.regime
+        inc.persistence = e.persistence
+        if inc.onset_step < 0 and e.onset_step >= 0:
+            inc.onset_step = e.onset_step
+
+    def _match(self, incs: list[Incident], e: Any) -> Incident | None:
+        """Window-to-window identity: exact rank membership first, then
+        same-host siblings (two ranks of one host are one fault)."""
+        live = [i for i in incs if i.live]
+        for inc in live:
+            if e.rank in inc.ranks:
+                return inc
+        host = self.topology.host_of(e.job_id, e.rank)
+        if host:
+            for inc in live:
+                if inc.host == host:
+                    return inc
+        return None
+
+    # -- lifecycle sweep ---------------------------------------------------
+
+    def _sweep(self, tick: int) -> None:
+        p = self.params
+        for incs in self._job_incidents.values():
+            for inc in incs:
+                if not inc.live:
+                    continue
+                unseen = tick - inc.last_seen_tick
+                if inc.state in (OPEN, ACTIVE, MERGED):
+                    if unseen >= p.cooling_after:
+                        inc.state = COOLING
+                        if inc.merged_into:
+                            inc.merged_into = ""
+                elif inc.state == COOLING:
+                    if unseen >= p.cooling_after + p.resolve_after:
+                        self._resolve(inc, tick, reason="healed")
+
+    def _resolve(self, inc: Incident, tick: int, *, reason: str) -> None:
+        inc.state = RESOLVED
+        inc.resolve_reason = reason
+        inc.merged_into = ""
+        self.resolved_total += 1
+        self._resolved.append(inc)
+
+    def _resolve_job(self, job_id: str, tick: int, *, reason: str) -> None:
+        """A job left the fleet: every live incident of it resolves NOW —
+        an evicted job's incident must never linger as live."""
+        for (jid, _), incs in self._job_incidents.items():
+            if jid != job_id:
+                continue
+            for inc in incs:
+                if inc.live:
+                    self._resolve(inc, tick, reason=reason)
+
+    # -- cross-job common cause --------------------------------------------
+
+    def _correlate(
+        self,
+        tick: int,
+        activity: Mapping[str, tuple[np.ndarray, tuple[str, ...]]],
+    ) -> None:
+        """Score hosts whose faults appear in >= min_jobs jobs' streams
+        and promote the matching incidents to one fleet incident.
+
+        Jobs group by stage vocabulary; within a group they align on
+        their most recent COMMON history (regime rings may hold
+        different depths — a job that joined the fleet a window late
+        must still co-activate with its host peers), and the dense host
+        axis holds only the hosts that >= min_jobs of the group's jobs
+        can touch — the only promotable ones, so per-tick cost scales
+        with *shared* hosts, never the fleet's full host count.
+        """
+        p = self.params
+        if not len(self.topology):
+            return
+        groups: dict[tuple[str, ...], list[tuple[str, np.ndarray]]] = {}
+        for job_id in sorted(activity):
+            if job_id not in self.topology:
+                continue
+            act, stages = activity[job_id]
+            act = np.asarray(act).astype(bool)
+            if act.ndim != 3 or act.shape[0] == 0:
+                continue
+            if act.shape[2] != len(stages):
+                continue
+            groups.setdefault(tuple(stages), []).append((job_id, act))
+        for stages, members in sorted(groups.items()):
+            if len(members) < p.min_jobs:
+                continue
+            counts: dict[str, int] = {}
+            for job_id, _ in members:
+                for h in set(self.topology.hosts_for(job_id)):
+                    counts[h] = counts.get(h, 0) + 1
+            cand_hosts = sorted(
+                h for h, c in counts.items() if c >= p.min_jobs
+            )
+            if not cand_hosts:
+                continue
+            hcol = {h: i for i, h in enumerate(cand_hosts)}
+            n_min = min(act.shape[0] for _, act in members)
+            series = []
+            for job_id, act in members:
+                job_hosts = self.topology.hosts_for(job_id)
+                a_host = np.zeros(
+                    (n_min, len(cand_hosts), len(stages)), bool
+                )
+                tail = act[-n_min:]
+                for rank in range(min(act.shape[1], len(job_hosts))):
+                    col = hcol.get(job_hosts[rank])
+                    if col is not None:
+                        a_host[:, col, :] |= tail[:, rank, :]
+                series.append(a_host)
+            stats = self._co_activation(np.stack(series))
+            jobs = np.asarray(stats.jobs)          # [S, H_cand]
+            coact = np.asarray(stats.coact)        # [S, H_cand]
+            cand = np.argwhere(
+                (jobs >= p.min_jobs) & (coact >= p.min_coactive_steps)
+            )
+            for si, hi in cand:
+                self._promote(tick, stages[si], cand_hosts[hi])
+
+    def _co_activation(self, act: np.ndarray):
+        if self.use_kernel:
+            from ..kernels.frontier import co_activation
+
+            return co_activation(act)
+        from ..kernels.frontier import co_activation_ref
+
+        return co_activation_ref(act)
+
+    def _promote(self, tick: int, stage: str, host: str) -> None:
+        """Merge the live single-job incidents on (host, stage) into one
+        fleet-level incident (>= min_jobs distinct jobs required)."""
+        members: list[Incident] = []
+        for (job_id, inc_stage), incs in sorted(
+            self._job_incidents.items()
+        ):
+            if inc_stage != stage:
+                continue
+            on_host = set(self.topology.ranks_on(job_id, host))
+            for inc in incs:
+                if inc.live and (
+                    set(inc.ranks) & on_host or inc.host == host
+                ):
+                    members.append(inc)
+        if len({m.job_id for m in members}) < self.params.min_jobs:
+            return
+        key = (host, stage)
+        fleet = self._fleet_incidents.get(key)
+        if fleet is None or not fleet.live:
+            fleet = Incident(
+                incident_id=f"if:{host}:{stage}:t{tick}",
+                scope="fleet",
+                job_id="",
+                stage=stage,
+                ranks=(),
+                host=host,
+                state=OPEN,
+                opened_tick=tick,
+                last_seen_tick=tick,
+            )
+            self._fleet_incidents[key] = fleet
+            self.merged_total += 1
+        for m in members:
+            if m.merged_into != fleet.incident_id:
+                m.merged_into = fleet.incident_id
+            m.state = MERGED
+        fleet.members = tuple(sorted(m.incident_id for m in members))
+        fleet.member_jobs = tuple(sorted({m.job_id for m in members}))
+        fleet.last_seen_tick = tick
+        if fleet.state == COOLING or (
+            fleet.state == OPEN and tick > fleet.opened_tick
+        ):
+            fleet.state = ACTIVE
+
+    def _refresh_fleet(self, tick: int) -> None:
+        """Derive each fleet incident from its members; demote on lost
+        quorum, cool/resolve on silence, release members on resolve."""
+        p = self.params
+        for key, fleet in sorted(self._fleet_incidents.items()):
+            if not fleet.live:
+                continue
+            members = [
+                inc
+                for inc in self._iter_live()
+                if inc.scope == "job"
+                and inc.merged_into == fleet.incident_id
+                and inc.state == MERGED
+            ]
+            if members:
+                fleet.members = tuple(
+                    sorted(m.incident_id for m in members)
+                )
+                fleet.member_jobs = tuple(
+                    sorted({m.job_id for m in members})
+                )
+                fleet.exposure_s = sum(m.exposure_s for m in members)
+                fleet.recoverable_s = sum(m.recoverable_s for m in members)
+                fleet.persistence = max(m.persistence for m in members)
+                best = max(members, key=lambda m: m.exposure_s)
+                fleet.regime = best.regime
+                onsets = [m.onset_step for m in members if m.onset_step >= 0]
+                fleet.onset_step = min(onsets) if onsets else -1
+            quorum = len({m.job_id for m in members}) >= p.min_jobs
+            unseen = tick - fleet.last_seen_tick
+            if not quorum and fleet.state in (OPEN, ACTIVE):
+                # lost its members (healed / evicted / cooled): the
+                # common cause is gone — release survivors to their own
+                # lifecycle and resolve the fleet view.
+                for m in members:
+                    m.state = ACTIVE
+                    m.merged_into = ""
+                self._resolve(fleet, tick, reason="members_resolved")
+            elif fleet.state in (OPEN, ACTIVE) and unseen >= p.cooling_after:
+                fleet.state = COOLING
+            elif (
+                fleet.state == COOLING
+                and unseen >= p.cooling_after + p.resolve_after
+            ):
+                for m in members:
+                    m.state = ACTIVE
+                    m.merged_into = ""
+                self._resolve(fleet, tick, reason="healed")
+
+    # -- bounded history ---------------------------------------------------
+
+    def _prune(self) -> None:
+        keep = self.params.retention
+        if len(self._resolved) > keep:
+            del self._resolved[: len(self._resolved) - keep]
+        # resolved incidents leave the live maps entirely
+        for key in [
+            k
+            for k, incs in self._job_incidents.items()
+            if not any(i.live for i in incs)
+        ]:
+            del self._job_incidents[key]
+        for key, incs in self._job_incidents.items():
+            incs[:] = [i for i in incs if i.live]
+        for key in [
+            k for k, f in self._fleet_incidents.items() if not f.live
+        ]:
+            del self._fleet_incidents[key]

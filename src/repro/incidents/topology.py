@@ -1,0 +1,102 @@
+"""Fleet topology: the (job, rank) -> host map the incident tier joins on.
+
+Per-job evidence is rank-indexed; physical faults are host-indexed.  The
+`Topology` holds the declared placement of every job's ranks so the
+incident engine can (a) merge two rank-candidates of one job that share
+a host into one rank-set incident, and (b) correlate incidents ACROSS
+jobs that share a host — the common-cause promotion.
+
+Placements arrive two ways, both landing here:
+
+  * statically, from a `sim.ClusterSpec` / an operator-provided map
+    (`Topology.from_jobs`);
+  * dynamically, from the wire: SFP2-v2 evidence packets carry an
+    optional per-rank host-id section, and `FleetService` declares each
+    job's placement as its packets arrive.
+
+A job with no declared placement simply cannot be host-correlated — the
+engine keeps its incidents job-scoped rather than guessing.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Mapping, Sequence
+
+__all__ = ["Topology"]
+
+
+class Topology:
+    """Mutable fleet placement map with deterministic host indexing."""
+
+    def __init__(self):
+        self._jobs: dict[str, tuple[str, ...]] = {}
+
+    @classmethod
+    def from_jobs(
+        cls, placements: Mapping[str, Sequence[str]]
+    ) -> "Topology":
+        """Build from `{job_id: per-rank host names}`."""
+        t = cls()
+        for job_id, hosts in placements.items():
+            t.declare(job_id, hosts)
+        return t
+
+    # -- writes ------------------------------------------------------------
+
+    def declare(self, job_id: str, hosts: Sequence[str]) -> None:
+        """Declare (or replace) one job's per-rank host names.
+
+        An empty `hosts` is a no-op: packets without the host section
+        must never erase a previously declared placement.
+        """
+        hosts = tuple(str(h) for h in hosts)
+        if hosts:
+            self._jobs[job_id] = hosts
+
+    def forget(self, job_id: str) -> None:
+        """Drop a job's placement (eviction path — bounded state)."""
+        self._jobs.pop(job_id, None)
+
+    # -- reads -------------------------------------------------------------
+
+    def host_of(self, job_id: str, rank: int) -> str:
+        """Host of one rank ("" when the job or rank is undeclared)."""
+        hosts = self._jobs.get(job_id, ())
+        return hosts[rank] if 0 <= rank < len(hosts) else ""
+
+    def hosts_for(self, job_id: str) -> tuple[str, ...]:
+        return self._jobs.get(job_id, ())
+
+    def jobs(self) -> tuple[str, ...]:
+        """Declared job ids, sorted (deterministic iteration order)."""
+        return tuple(sorted(self._jobs))
+
+    def hosts(self) -> tuple[str, ...]:
+        """Every distinct host name, sorted — the canonical host axis."""
+        seen: set[str] = set()
+        for hs in self._jobs.values():
+            seen.update(hs)
+        return tuple(sorted(seen))
+
+    def host_index(self) -> dict[str, int]:
+        """host name -> dense index over `hosts()` (the kernel's H axis)."""
+        return {h: i for i, h in enumerate(self.hosts())}
+
+    def jobs_on(self, host: str) -> tuple[str, ...]:
+        """Jobs with at least one rank on `host`, sorted."""
+        return tuple(
+            sorted(j for j, hs in self._jobs.items() if host in hs)
+        )
+
+    def ranks_on(self, job_id: str, host: str) -> tuple[int, ...]:
+        """Ranks of `job_id` served by `host`."""
+        return tuple(
+            r
+            for r, h in enumerate(self._jobs.get(job_id, ()))
+            if h == host
+        )
+
+    def __contains__(self, job_id: str) -> bool:
+        return job_id in self._jobs
+
+    def __len__(self) -> int:
+        return len(self._jobs)

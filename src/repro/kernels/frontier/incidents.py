@@ -1,0 +1,216 @@
+"""Pallas TPU kernel: batched cross-job co-activation by host.
+
+The incident tier's common-cause question — *which hosts carry a fault
+that shows up in more than one job?* — reduces to integer statistics of
+per-job host-level activity series.  For a fleet activity tensor
+``act[J, N, H, S]`` (job j has an above-threshold candidate on host h in
+stage s at step t — the thresholded exposed-increment streams of
+`core.regimes`, collapsed over each host's ranks), the per-(stage, host)
+evidence is:
+
+  ``jobs[s, h]``    distinct jobs with ANY activation in the window —
+                    the promotion predicate (>= 2 jobs = common-cause
+                    candidate);
+  ``coact[s, h]``   steps where >= 2 jobs are active simultaneously —
+                    separates a genuinely shared live fault from two
+                    jobs that happened to blip in disjoint step ranges;
+  ``active[s, h]``  total active job-steps (the exposure mass).
+
+Layout follows the house rules (hosts ride the rank slot): **hosts on
+lanes**, **stages on sublanes**, and the grid sweeps (host tiles, jobs)
+with jobs fastest — each grid step streams one job's whole
+[N, S_pad, H_TILE] activity block through VMEM, reduces it to its
+any-mask, and folds block + mask into accumulators that stay
+VMEM-resident across the job fold (the output block index depends only
+on the host tile).  One dispatch covers every job; all statistics are
+integer reductions, so the route matches `co_activation_ref` EXACTLY
+(asserted per shape group in `benchmarks/incident_engine.py`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "CoActivationPacket",
+    "co_activation",
+    "co_activation_loop",
+    "co_activation_ref",
+]
+
+_SUBLANE = 8
+_LANE = 128
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+class CoActivationPacket(NamedTuple):
+    """Cross-job co-activation statistics, [S, H]-oriented (i32 each)."""
+
+    jobs: jax.Array      # [S, H] distinct jobs with any activation
+    coact: jax.Array     # [S, H] steps with >= 2 jobs active at once
+    active: jax.Array    # [S, H] total active job-steps
+
+
+def co_activation_ref(act: np.ndarray) -> CoActivationPacket:
+    """NumPy oracle of the kernel route on ``act[J, N, H, S]`` (bool).
+
+    This is the ONE definition of the statistics — the Pallas route must
+    match it exactly (integer counts, no float accumulation anywhere).
+    """
+    a = np.asarray(act).astype(bool)
+    if a.ndim != 4:
+        raise ValueError(f"expected act [J,N,H,S], got {a.shape}")
+    stepsum = a.sum(axis=0, dtype=np.int64)          # [N, H, S]
+    jobs = a.any(axis=1).sum(axis=0, dtype=np.int64)  # [H, S]
+    coact = (stepsum >= 2).sum(axis=0, dtype=np.int64)
+    active = stepsum.sum(axis=0, dtype=np.int64)
+    return CoActivationPacket(
+        jobs=jobs.T.astype(np.int32),
+        coact=coact.T.astype(np.int32),
+        active=active.T.astype(np.int32),
+    )
+
+
+def _coactivation_kernel(
+    a_ref,        # [N, S_pad, H_TILE] one job's activity block (i32 0/1)
+    jobs_ref,     # out [1, S_pad, H_TILE] i32 distinct-job count
+    stepsum_ref,  # out [N, S_pad, H_TILE] i32 per-step cross-job sums
+):
+    j = pl.program_id(1)
+    a = a_ref[...]
+    any_j = a.max(axis=0)[None]                      # [1, S_pad, H_TILE]
+
+    @pl.when(j == 0)
+    def _init():
+        jobs_ref[...] = any_j
+        stepsum_ref[...] = a
+
+    @pl.when(j != 0)
+    def _fold():
+        jobs_ref[...] += any_j
+        stepsum_ref[...] += a
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_steps", "h_tile", "interpret")
+)
+def _coactivation_dispatch(
+    a_flat: jax.Array,
+    *,
+    n_steps: int,
+    h_tile: int,
+    interpret: bool,
+) -> tuple[jax.Array, jax.Array]:
+    """Run the kernel on padded stage-major input [J*N, S_pad, H_pad]."""
+    jn_n, s_pad, h_pad = a_flat.shape
+    jobs = jn_n // n_steps
+    grid = (h_pad // h_tile, jobs)                   # jobs fastest: VMEM fold
+    a_spec = pl.BlockSpec(
+        (n_steps, s_pad, h_tile), lambda h, j: (j, 0, h)
+    )
+    jobs_spec = pl.BlockSpec((1, s_pad, h_tile), lambda h, j: (0, 0, h))
+    step_spec = pl.BlockSpec(
+        (n_steps, s_pad, h_tile), lambda h, j: (0, 0, h)
+    )
+    return pl.pallas_call(
+        _coactivation_kernel,
+        grid=grid,
+        in_specs=[a_spec],
+        out_specs=[jobs_spec, step_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, s_pad, h_pad), jnp.int32),
+            jax.ShapeDtypeStruct((n_steps, s_pad, h_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a_flat)
+
+
+def _prep_activity(
+    act: jax.Array, h_tile: int | None, interpret: bool | None
+) -> tuple[jax.Array, int, bool]:
+    """Shared front half: bool -> i32, host-major transpose + pad to
+    [J*N, S_pad, H_pad].  Padded cells carry 0 — never active."""
+    jn, n, h, s = act.shape
+    a = jnp.asarray(act).astype(jnp.int32)
+    if interpret is None:
+        interpret = not _on_tpu()
+    if h_tile is None:
+        h_tile = min(_pad_to(h, _LANE), 512)
+    s_pad = _pad_to(s, _SUBLANE)
+    h_pad = _pad_to(h, h_tile)
+    at = jnp.transpose(a, (0, 1, 3, 2)).reshape(jn * n, s, h)
+    at = jnp.pad(at, ((0, 0), (0, s_pad - s), (0, h_pad - h)))
+    return at, h_tile, interpret
+
+
+def co_activation(
+    act: jax.Array,
+    *,
+    h_tile: int | None = None,
+    interpret: bool | None = None,
+) -> CoActivationPacket:
+    """Fused co-activation statistics of a fleet activity tensor
+    ``act[J, N, H, S]`` (bool / 0-1): one dispatch folds every job.
+
+    Returns [S, H]-oriented integer counts equal to `co_activation_ref`
+    exactly.
+    """
+    jn, n, h, s = act.shape
+    at, h_tile, interpret = _prep_activity(act, h_tile, interpret)
+    jobs_p, stepsum = _coactivation_dispatch(
+        at, n_steps=n, h_tile=h_tile, interpret=interpret
+    )
+    sl = (slice(0, s), slice(0, h))
+    return CoActivationPacket(
+        jobs=jobs_p[0][sl],
+        coact=(stepsum >= 2).sum(axis=0, dtype=jnp.int32)[sl],
+        active=stepsum.sum(axis=0, dtype=jnp.int32)[sl],
+    )
+
+
+def co_activation_loop(
+    act: jax.Array,
+    *,
+    h_tile: int | None = None,
+    interpret: bool | None = None,
+) -> CoActivationPacket:
+    """Naive per-job loop — the baseline the batched route is gated
+    against in `benchmarks/incident_engine.py`.
+
+    Dispatches one kernel per job (grid (host tiles, 1) each) and folds
+    the per-job outputs in jnp; identical statistics, J dispatches.
+    """
+    jn, n, h, s = act.shape
+    at, h_tile, interpret = _prep_activity(act, h_tile, interpret)
+    jobs_acc = None
+    step_acc = None
+    for j in range(jn):
+        jobs_p, stepsum = _coactivation_dispatch(
+            at[j * n:(j + 1) * n],
+            n_steps=n,
+            h_tile=h_tile,
+            interpret=interpret,
+        )
+        jobs_acc = jobs_p if jobs_acc is None else jobs_acc + jobs_p
+        step_acc = stepsum if step_acc is None else step_acc + stepsum
+    sl = (slice(0, s), slice(0, h))
+    return CoActivationPacket(
+        jobs=jobs_acc[0][sl],
+        coact=(step_acc >= 2).sum(axis=0, dtype=jnp.int32)[sl],
+        active=step_acc.sum(axis=0, dtype=jnp.int32)[sl],
+    )

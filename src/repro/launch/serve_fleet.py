@@ -13,22 +13,33 @@ routing.  Prints a JSON summary (the serving response shape): each
 routing entry carries the estimated recoverable seconds a fix at its
 (stage, rank) is worth, plus the fault's temporal regime
 (transient/recurring/persistent), persistence weight and onset step.
+
+With `--topology private|shared` the packets additionally declare each
+job's rank->host placement (SFP2-v2 host section) and the incident tier
+runs on top: the summary gains a durable `incidents` table (lifecycle,
+exposure since onset, fleet-level common-cause incidents on shared
+hosts) and an `escalations` list (the budgeted profiler-attachment
+plan; at most `--budget` per tick).  `--max-windows` bounds each job's
+retained temporal history (memory knob for very long runs).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
 from ..core import WindowAggregator
 from ..fleet import FleetService
-from ..sim import simulate
+from ..incidents import EscalationController, IncidentEngine
+from ..sim import ClusterSpec, simulate
 from ..sim.scenarios import (
     DDP_SYNC,
     E3_FAMILIES,
     FSDP_SYNC,
     ZERO1_SYNC,
     ddp_scenario,
+    hidden_fault_rank,
     hidden_rank_scenario,
 )
 from ..telemetry.packets import encode_packet, from_diagnosis
@@ -38,6 +49,10 @@ SYNC_PROFILES = {
     "fsdp": FSDP_SYNC,
     "zero1": ZERO1_SYNC,
 }
+
+#: host name shared by every faulted job's faulted rank under
+#: --topology shared (the injected common cause).
+SHARED_HOST = "shared-0"
 
 
 def make_argparser() -> argparse.ArgumentParser:
@@ -55,7 +70,40 @@ def make_argparser() -> argparse.ArgumentParser:
     p.add_argument("--wire", default="sfp2", choices=["sfp1", "sfp2"],
                    help="wire framing (sfp1 = legacy back-compat route; "
                         "int8.delta requires sfp2)")
+    p.add_argument("--topology", default="none",
+                   choices=["none", "private", "shared"],
+                   help="declare per-job host placement in the packets "
+                        "(SFP2-v2 host section) and run the incident "
+                        "tier: 'private' packs 2 ranks/host per job; "
+                        "'shared' additionally re-homes every faulted "
+                        "job's faulted rank onto one fleet-shared host "
+                        "(and pins faulted jobs to the 'data' family, "
+                        "so the common cause is a single host+stage "
+                        "the incident engine must promote)")
+    p.add_argument("--budget", type=int, default=2,
+                   help="profiler escalations per tick "
+                        "(EscalationController token budget)")
+    p.add_argument("--max-windows", type=int, default=None,
+                   help="bound per-job temporal history: the registry "
+                        "retains at most this many windows of regime "
+                        "state per job (pass-through to FleetRegistry "
+                        "regime_windows; default 4).  The knob that "
+                        "bounds memory on very long runs")
     return p
+
+
+def _cluster_for(args, j: int, faulted: bool) -> ClusterSpec | None:
+    """Per-job placement under --topology (None when undeclared)."""
+    if args.topology == "none":
+        return None
+    hosts = list(
+        ClusterSpec.uniform(args.ranks, 2, prefix=f"h{j}").hosts
+    )
+    if args.topology == "shared" and faulted:
+        # the faulted rank of every faulted job sits on ONE shared host:
+        # the injected common cause the incident tier must promote
+        hosts[hidden_fault_rank(j, args.ranks)] = SHARED_HOST
+    return ClusterSpec(world_size=args.ranks, hosts=tuple(hosts))
 
 
 def _build_jobs(args) -> list[dict]:
@@ -67,6 +115,12 @@ def _build_jobs(args) -> list[dict]:
         profile_name, sync = profiles[j % len(profiles)]
         faulted = args.fault_every > 0 and j % args.fault_every == 0
         family = E3_FAMILIES[j % len(E3_FAMILIES)]
+        if args.topology == "shared" and faulted:
+            # a shared HOST fault surfaces in the same stage in every
+            # sharing job: pin the family (data.next_wait, non-sync in
+            # every profile) so the common cause is promotable
+            family = "data"
+        cluster = _cluster_for(args, j, faulted)
         if faulted:
             sc = hidden_rank_scenario(
                 family, world_size=args.ranks, steps=steps, seed=j,
@@ -76,6 +130,8 @@ def _build_jobs(args) -> list[dict]:
             sc = ddp_scenario(
                 world_size=args.ranks, steps=steps, seed=j, sync=sync
             )
+        if cluster is not None:
+            sc = dataclasses.replace(sc, cluster=cluster)
         jobs.append({
             "job_id": f"job-{j:03d}-{profile_name}",
             "scenario": sc,
@@ -91,14 +147,25 @@ def _build_jobs(args) -> list[dict]:
 
 
 def run(args) -> dict:
+    engine = (
+        IncidentEngine() if args.topology != "none" else None
+    )
+    controller = (
+        EscalationController(budget_per_tick=args.budget)
+        if engine is not None
+        else None
+    )
     service = FleetService(
-        window_capacity=args.window, evict_after=2, degrade_after=2
+        window_capacity=args.window, evict_after=2, degrade_after=2,
+        regime_windows=args.max_windows or 4,
+        incidents=engine,
     )
     jobs = _build_jobs(args)
     packets_sent = 0
     bytes_sent = 0
     t0 = time.perf_counter()
     routes = []
+    actions = []
     for w in range(args.rounds):
         batch: list[tuple[str, bytes]] = []
         for job in jobs:
@@ -128,6 +195,7 @@ def run(args) -> dict:
                 present_ranks=present,
                 sync_stages=job["scenario"].sync_stages,
                 first_step=w * args.window,
+                hosts=job["scenario"].hosts,
             )
             wire = encode_packet(pkt, compress=args.compress, wire=args.wire)
             batch.append((job["job_id"], wire))
@@ -137,9 +205,13 @@ def run(args) -> dict:
         service.submit_many(batch, refresh=True)
         service.tick()
         routes = service.route(args.top_k)
+        if controller is not None:
+            actions.extend(
+                controller.plan(service.current_tick, engine.incidents())
+            )
     elapsed = time.perf_counter() - t0
 
-    return {
+    out = {
         "jobs": args.jobs,
         "rounds": args.rounds,
         "wire": args.wire,
@@ -165,6 +237,22 @@ def run(args) -> dict:
             for r in routes
         ],
     }
+    if engine is not None:
+        # durable incident view: identity + lifecycle over the same
+        # evidence the stateless routing table above re-derives per tick
+        out["incidents"] = engine.table()
+        out["escalations"] = [
+            {
+                "tick": a.tick,
+                "incident": a.incident_id,
+                "jobs": list(a.jobs),
+                "host": a.host,
+                "stage": a.stage,
+                "score": round(a.score, 4),
+            }
+            for a in actions
+        ]
+    return out
 
 
 def main() -> None:

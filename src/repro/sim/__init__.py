@@ -1,5 +1,12 @@
 """Synchronization-displacement simulator (hidden-rank evaluation substrate)."""
-from .cluster import Fault, Scenario, SimResult, simulate
+from .cluster import ClusterSpec, Fault, Scenario, SimResult, simulate
 from . import scenarios
 
-__all__ = ["Fault", "Scenario", "SimResult", "simulate", "scenarios"]
+__all__ = [
+    "ClusterSpec",
+    "Fault",
+    "Scenario",
+    "SimResult",
+    "simulate",
+    "scenarios",
+]

@@ -64,7 +64,57 @@ import numpy as np
 
 from ..core.contract import StageSchema
 
-__all__ = ["Fault", "Scenario", "SimResult", "simulate"]
+__all__ = ["ClusterSpec", "Fault", "Scenario", "SimResult", "simulate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Physical placement of a job's ranks: which host serves each rank.
+
+    The simulator itself is placement-blind (delay is injected per rank),
+    but the incident tier (`repro.incidents`) correlates faults ACROSS
+    jobs by host, so scenarios must state their topology explicitly
+    instead of implying it in scenario code.  `hosts[r]` is the host name
+    of rank r; several ranks on the same name share that host (and a
+    host-level fault hits all of them).
+    """
+
+    world_size: int
+    hosts: tuple[str, ...]           # per-rank host name, len == world_size
+
+    def __post_init__(self):
+        if len(self.hosts) != self.world_size:
+            raise ValueError(
+                f"hosts must name every rank: expected {self.world_size}, "
+                f"got {len(self.hosts)}"
+            )
+
+    @staticmethod
+    def uniform(
+        world_size: int, ranks_per_host: int, *, prefix: str = "host"
+    ) -> "ClusterSpec":
+        """Contiguous packing: ranks [k*P, (k+1)*P) live on `prefix-k`."""
+        if ranks_per_host < 1:
+            raise ValueError("ranks_per_host must be >= 1")
+        return ClusterSpec(
+            world_size=world_size,
+            hosts=tuple(
+                f"{prefix}-{r // ranks_per_host}" for r in range(world_size)
+            ),
+        )
+
+    def host_of(self, rank: int) -> str:
+        return self.hosts[rank]
+
+    def host_ranks(self) -> dict[str, tuple[int, ...]]:
+        """host name -> ranks it serves (insertion-ordered, deterministic)."""
+        out: dict[str, list[int]] = {}
+        for r, h in enumerate(self.hosts):
+            out.setdefault(h, []).append(r)
+        return {h: tuple(rs) for h, rs in out.items()}
+
+    def ranks_on(self, host: str) -> tuple[int, ...]:
+        return tuple(r for r, h in enumerate(self.hosts) if h == host)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,11 +158,29 @@ class Scenario:
     faults: tuple[Fault, ...] = ()
     #: rank roles ("" = homogeneous); role groups sync independently.
     roles: tuple[str, ...] = ()
+    #: physical placement (None = topology undeclared; the incident tier
+    #: cannot correlate such a job's faults across the fleet by host).
+    cluster: ClusterSpec | None = None
+
+    def __post_init__(self):
+        if (
+            self.cluster is not None
+            and self.cluster.world_size != self.world_size
+        ):
+            raise ValueError(
+                f"cluster places {self.cluster.world_size} ranks but the "
+                f"scenario runs {self.world_size}"
+            )
 
     def schema(self) -> StageSchema:
         return StageSchema(
             stages=self.stages, world_size=self.world_size, roles=self.roles
         )
+
+    @property
+    def hosts(self) -> tuple[str, ...]:
+        """Per-rank host names (() when the topology is undeclared)."""
+        return self.cluster.hosts if self.cluster is not None else ()
 
 
 @dataclasses.dataclass(frozen=True)

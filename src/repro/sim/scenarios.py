@@ -57,10 +57,12 @@ on the profile: exactly the candidates observed at non-sync stages.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from ..core.contract import SEGMENTED_STAGES
-from .cluster import Fault, Scenario
+from .cluster import ClusterSpec, Fault, Scenario
 
 #: base per-stage means (seconds) — ~208 ms step like the paper's E6 runs.
 DDP_BASE = {
@@ -174,6 +176,7 @@ def ddp_scenario(
     sync=DDP_SYNC,
     roles: tuple[str, ...] = (),
     base: dict | None = None,
+    cluster: ClusterSpec | None = None,
 ) -> Scenario:
     return Scenario(
         stages=SEGMENTED_STAGES,
@@ -184,7 +187,16 @@ def ddp_scenario(
         seed=seed,
         faults=faults,
         roles=roles,
+        cluster=cluster,
     )
+
+
+def hidden_fault_rank(seed: int, world_size: int = 8) -> int:
+    """The seed-derived faulted rank of `hidden_rank_scenario` /
+    `callback_scenario` — the ONE definition (like `regime_fault_rank`),
+    so drivers placing that rank on a topology (serve_fleet
+    ``--topology shared``) cannot drift from the injection."""
+    return (seed * 7 + 3) % world_size
 
 
 def hidden_rank_scenario(
@@ -197,7 +209,7 @@ def hidden_rank_scenario(
     sync=DDP_SYNC,
 ) -> Scenario:
     """One E3 row: the faulted rank is derived from the seed (hidden)."""
-    rank = (seed * 7 + 3) % world_size
+    rank = hidden_fault_rank(seed, world_size)
     return ddp_scenario(
         world_size=world_size,
         steps=steps,
@@ -218,7 +230,7 @@ def callback_scenario(
     """Callback study: sync-bearing rows barrier at the callback boundary;
     the host-only control has no adjacent barrier (the cost displaces into
     the next step's backward sync and must stay unrouted)."""
-    rank = (seed * 7 + 3) % world_size
+    rank = hidden_fault_rank(seed, world_size)
     sync = DDP_SYNC + (("callbacks.cpu_wall",) if sync_bearing else ())
     return ddp_scenario(
         world_size=world_size,
@@ -297,6 +309,7 @@ def regime_scenario(
     seed: int = 0,
     delay_ms: float = 120.0,
     sync=DDP_SYNC,
+    cluster: ClusterSpec | None = None,
 ) -> Scenario:
     """One labelled temporal-regime row; the faulted rank is seed-derived
     (`regime_fault_rank`).
@@ -304,7 +317,9 @@ def regime_scenario(
     Ground truth: the regime engine should classify the candidate
     ``("data.next_wait", injected rank)`` as ``REGIME_FAMILIES[family]``
     once the window covers the pattern (and as `none` on every healthy
-    control candidate)."""
+    control candidate).  `cluster` declares the physical placement
+    explicitly (the incident tier correlates by host; topology must never
+    be implied by scenario code)."""
     rank = regime_fault_rank(seed, world_size)
     return ddp_scenario(
         world_size=world_size,
@@ -312,6 +327,7 @@ def regime_scenario(
         seed=seed,
         faults=regime_faults(family, rank, delay_ms / 1e3, steps),
         sync=sync,
+        cluster=cluster,
     )
 
 
@@ -334,6 +350,104 @@ def injected_activity(sc: Scenario, stage: str, rank: int) -> np.ndarray:
             elif f.stage == stage:
                 out[t] += amt
     return out
+
+
+# ---------------------------------------------------------------------------
+# Multi-job shared-host fault families (ground truth for repro.incidents)
+# ---------------------------------------------------------------------------
+#
+# The incident tier's common-cause question — "is this the SAME fault,
+# seen through several jobs?" — needs fleets where a physical host is
+# shared across jobs and a host-level fault surfaces in each of them.
+# `shared_host_fleet` builds such a fleet with the topology declared
+# explicitly (`ClusterSpec`) and the common cause known by construction.
+
+@dataclasses.dataclass(frozen=True)
+class SharedHostFleet:
+    """One labelled multi-job common-cause row.
+
+    `scenarios` maps job id -> Scenario (each carrying its own
+    `ClusterSpec`); ground truth: every job in `shared_job_ids` hosts one
+    rank on `shared_host`, and that host's fault (temporal family
+    `family`) is the one common cause the incident engine must promote —
+    exactly one fleet-level incident, on `shared_host`, merging the
+    sharing jobs' single-job incidents.  Distractor jobs carry an
+    unrelated self-healing blip on a private host (never shared, so
+    correlation must NOT promote it).
+    """
+
+    scenarios: dict[str, Scenario]
+    shared_host: str
+    shared_job_ids: tuple[str, ...]
+    family: str
+    #: job id -> the rank that sits on the faulted/distractor host
+    fault_ranks: dict[str, int]
+
+
+def shared_host_fleet(
+    *,
+    jobs: int = 6,
+    shared_jobs: int = 3,
+    world_size: int = 8,
+    ranks_per_host: int = 2,
+    steps: int = 60,
+    seed: int = 0,
+    delay_ms: float = 150.0,
+    family: str = "step",
+    distractor_family: str | None = "blip",
+    sync=DDP_SYNC,
+) -> SharedHostFleet:
+    """Simulated fleet where `shared_jobs` of `jobs` share one faulted host.
+
+    Each job packs `ranks_per_host` ranks per private host
+    (`ClusterSpec.uniform`), except that in the first `shared_jobs` jobs a
+    seed-derived rank is re-homed onto the fleet-shared host
+    ``shared-{seed}`` — and that rank carries the injected temporal fault
+    (`REGIME_FAMILIES[family]`; the default ``step`` stays live, so the
+    incident must be active, not healed).  Non-sharing jobs optionally
+    carry a `distractor_family` blip on a private host: a correlator that
+    merely clusters "any fault anywhere" would wrongly promote it.
+    """
+    if not 0 <= shared_jobs <= jobs:
+        raise ValueError(f"shared_jobs={shared_jobs} outside [0, {jobs}]")
+    shared_host = f"shared-{seed}"
+    scenarios: dict[str, Scenario] = {}
+    shared_ids: list[str] = []
+    fault_ranks: dict[str, int] = {}
+    for j in range(jobs):
+        job_id = f"job-{j:03d}"
+        rank = regime_fault_rank(seed + j, world_size)
+        hosts = list(
+            ClusterSpec.uniform(
+                world_size, ranks_per_host, prefix=f"h{j}"
+            ).hosts
+        )
+        faults: tuple[Fault, ...] = ()
+        if j < shared_jobs:
+            hosts[rank] = shared_host
+            faults = regime_faults(family, rank, delay_ms / 1e3, steps)
+            shared_ids.append(job_id)
+            fault_ranks[job_id] = rank
+        elif distractor_family is not None:
+            faults = regime_faults(
+                distractor_family, rank, delay_ms / 1e3, steps
+            )
+            fault_ranks[job_id] = rank
+        scenarios[job_id] = ddp_scenario(
+            world_size=world_size,
+            steps=steps,
+            seed=seed * 1000 + j,
+            faults=faults,
+            sync=sync,
+            cluster=ClusterSpec(world_size=world_size, hosts=tuple(hosts)),
+        )
+    return SharedHostFleet(
+        scenarios=scenarios,
+        shared_host=shared_host,
+        shared_job_ids=tuple(shared_ids),
+        family=family,
+        fault_ranks=fault_ranks,
+    )
 
 
 def aba_windows(

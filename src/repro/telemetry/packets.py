@@ -51,7 +51,13 @@ __all__ = ["EvidencePacket", "encode_packet", "decode_packet"]
 
 _MAGIC = b"SFP1"
 _MAGIC2 = b"SFP2"
+#: SFP2 wire versions this decoder accepts.  v1 is the base framing; v2
+#: appends an optional binary host-id section (per-rank host names, the
+#: incident tier's topology source) between the present-ranks section
+#: and the window payload.  The encoder emits v1 — byte-identical to
+#: every pre-hosts emitter — unless the packet actually declares hosts.
 _SFP2_VERSION = 1
+_SFP2_VERSION_HOSTS = 2
 _FLAG_WINDOW = 0x01
 #: compress= -> (meta dtype tag, optional payload codec tag)
 _COMPRESSIONS = ("none", "int8", "int8.delta")
@@ -92,6 +98,12 @@ class EvidencePacket:
     #: the job's own step coordinates.  -1 = undeclared (pre-regime
     #: emitters decode with this default).
     first_step: int = -1
+    #: per-rank host names (the job's physical placement).  Feeds the
+    #: incident tier's `Topology` so faults correlate across jobs by
+    #: host.  Ships as a binary SFP2-v2 section; () = undeclared
+    #: (pre-incident emitters decode with this default, and packets
+    #: without hosts still encode as byte-identical SFP2 v1).
+    hosts: tuple[str, ...] = ()
     #: full [N, R, S] matrix (None in compact mode)
     window: np.ndarray | None = None
 
@@ -110,6 +122,7 @@ def from_diagnosis(
     present_ranks: tuple[int, ...] = (),
     sync_stages: tuple[str, ...] = (),
     first_step: int = -1,
+    hosts: tuple[str, ...] = (),
 ) -> EvidencePacket:
     return EvidencePacket(
         window_index=window_index,
@@ -129,6 +142,7 @@ def from_diagnosis(
         exposed_total=diag.exposed_makespan_total,
         sync_stages=tuple(sync_stages),
         first_step=first_step,
+        hosts=tuple(hosts),
         window=window,
     )
 
@@ -262,7 +276,9 @@ def encode_packet(
     (8x smaller payloads, codec shared with the gradient path in
     `repro.distributed.compression`); `"int8.delta"` additionally
     step-deltas and zigzag-varints the quantized stream.  `wire="sfp1"`
-    emits the legacy framing (back-compat emitters; no `"int8.delta"`).
+    emits the legacy framing (back-compat emitters; no `"int8.delta"`,
+    and no host-id section — a packet's declared `hosts` only travel on
+    SFP2, where they promote the frame to version 2).
     """
     if compress not in _COMPRESSIONS:
         raise ValueError(f"unknown compression {compress!r}")
@@ -279,12 +295,23 @@ def encode_packet(
     head = json.dumps(header, default=list).encode()
     ranks = np.asarray(p.present_ranks, np.dtype("<u4"))
     flags = _FLAG_WINDOW if payload is not None else 0
+    # hosts promote the frame to v2; hostless packets stay byte-identical
+    # v1 (pre-incident decoders keep accepting them unchanged).
+    version = _SFP2_VERSION_HOSTS if p.hosts else _SFP2_VERSION
     parts: list[Any] = [
-        struct.pack("<4sBBI", _MAGIC2, _SFP2_VERSION, flags, len(head)),
+        struct.pack("<4sBBI", _MAGIC2, version, flags, len(head)),
         head,
         struct.pack("<I", ranks.size),
         ranks.tobytes(),
     ]
+    if p.hosts:
+        parts.append(struct.pack("<I", len(p.hosts)))
+        for h in p.hosts:
+            hb = str(h).encode()
+            if len(hb) > 0xFFFF:
+                raise ValueError("host name exceeds 65535 bytes")
+            parts.append(struct.pack("<H", len(hb)))
+            parts.append(hb)
     if payload is not None:
         parts.append(struct.pack("<II", len(payload), zlib.adler32(payload)))
         parts.append(payload)
@@ -331,6 +358,7 @@ def _finish_header(header: Any, window: np.ndarray | None) -> EvidencePacket:
     header.setdefault("exposed_total", -1.0)
     header.setdefault("sync_stages", [])
     header.setdefault("first_step", -1)
+    header.setdefault("hosts", [])
     try:
         for key in (
             "stages",
@@ -342,6 +370,7 @@ def _finish_header(header: Any, window: np.ndarray | None) -> EvidencePacket:
             "downgrade_reasons",
             "present_ranks",
             "sync_stages",
+            "hosts",
         ):
             header[key] = tuple(header[key])
         return EvidencePacket(window=window, **header)
@@ -371,7 +400,7 @@ def _decode_sfp2(data: bytes) -> EvidencePacket:
     mv = memoryview(data)
     off = _need(mv, 0, 10, "fixed header")
     _, version, flags, hlen = struct.unpack_from("<4sBBI", mv, 0)
-    if version != _SFP2_VERSION:
+    if version not in (_SFP2_VERSION, _SFP2_VERSION_HOSTS):
         raise ValueError(f"unsupported SFP2 wire version {version}")
     end = _need(mv, off, hlen, "header")
     header = json.loads(str(mv[off:end], "utf-8"))
@@ -385,6 +414,25 @@ def _decode_sfp2(data: bytes) -> EvidencePacket:
     header["present_ranks"] = (
         np.frombuffer(mv[end:off], np.dtype("<u4")).tolist() if nranks else []
     )
+
+    # the binary v2 section is the ONLY source of host ids: a JSON
+    # header claiming the key is malformed on EVERY route (a v1 frame
+    # must not smuggle a placement past the v2 section's rules).
+    if isinstance(header, dict) and "hosts" in header:
+        raise ValueError("invalid packet header")
+    if version >= _SFP2_VERSION_HOSTS:
+        end = _need(mv, off, 4, "host count")
+        (nhosts,) = struct.unpack_from("<I", mv, off)
+        off = end
+        if nhosts > 1 << 24:
+            raise ValueError("host count exceeds size cap")
+        hosts = []
+        for _ in range(nhosts):
+            end = _need(mv, off, 2, "host-name length")
+            (hl,) = struct.unpack_from("<H", mv, off)
+            off = _need(mv, end, hl, "host name")
+            hosts.append(str(mv[end:off], "utf-8"))
+        header["hosts"] = hosts
 
     window = None
     meta = header.pop("window", None)
@@ -418,6 +466,10 @@ def _decode_sfp1(data: bytes) -> EvidencePacket:
     end = _need(mv, off, hlen, "header")
     header = json.loads(bytes(mv[off:end]))
     off = end
+    if isinstance(header, dict) and "hosts" in header:
+        # SFP1 never carried hosts; only the SFP2-v2 binary section may
+        # declare a placement (see _decode_sfp2)
+        raise ValueError("invalid packet header")
     end = _need(mv, off, 4, "meta length")
     mlen = int.from_bytes(mv[off:end], "little")
     off = end

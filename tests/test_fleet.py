@@ -409,6 +409,23 @@ class TestFleetService:
                 ref.registry.get(f"j{j}").kernel_shares,
             )
 
+    def test_route_tie_order_fully_deterministic(self):
+        """Two jobs with byte-identical windows tie exactly on score;
+        the order must be job-id ascending regardless of submission
+        order, and the sort key carries a third component (rank index)
+        so entries tying on (score, job_id) — possible once an answer
+        carries several rank candidates per job — stay deterministic."""
+        wire, _ = self._wire(seed=5, faulted=True)
+        for submit_order in (("a-job", "b-job"), ("b-job", "a-job")):
+            svc = FleetService()
+            for jid in submit_order:
+                svc.submit(jid, wire)
+            svc.refresh_batched()
+            routes = svc.route(2)
+            assert [r.job_id for r in routes] == ["a-job", "b-job"]
+            assert routes[0].score == routes[1].score
+            assert routes[0].rank == routes[1].rank
+
     def test_submit_many_counts_full_registry_refusals(self):
         svc = FleetService(max_jobs=1)
         b = []

@@ -1,0 +1,516 @@
+"""Incident tier tests: topology, lifecycle edges, common-cause merge,
+budgeted escalation, co-activation kernel parity, cluster specs."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import WindowAggregator
+from repro.fleet import FleetService
+from repro.incidents import (
+    EscalationController,
+    Incident,
+    IncidentEngine,
+    IncidentParams,
+    Topology,
+)
+from repro.kernels.frontier import (
+    co_activation,
+    co_activation_loop,
+    co_activation_ref,
+)
+from repro.sim import ClusterSpec, simulate
+from repro.sim.scenarios import (
+    ddp_scenario,
+    regime_scenario,
+    shared_host_fleet,
+)
+from repro.telemetry.packets import encode_packet, from_diagnosis
+
+
+@dataclasses.dataclass(frozen=True)
+class E:
+    """Route-entry-shaped test record (duck-types fleet RouteEntry)."""
+
+    job_id: str
+    stage: str
+    rank: int
+    recoverable_s: float
+    persistence: float = 1.0
+    regime: str = "persistent"
+    onset_step: int = 0
+    window_index: int = 0
+
+
+def shared_activity(rank, *, n=6, r=4, s=2):
+    a = np.zeros((n, r, s), bool)
+    a[:, rank, 0] = True
+    return a
+
+
+STAGES = ("s0", "s1")
+
+
+def two_job_topology():
+    return Topology.from_jobs(
+        {"a": ("h0", "h0", "shared", "h1"), "b": ("g0", "shared", "g1", "g1")}
+    )
+
+
+# ---------------------------------------------------------------------------
+# ClusterSpec / scenarios
+# ---------------------------------------------------------------------------
+
+
+class TestClusterSpec:
+    def test_uniform_packing(self):
+        cs = ClusterSpec.uniform(8, 2, prefix="n")
+        assert cs.hosts == (
+            "n-0", "n-0", "n-1", "n-1", "n-2", "n-2", "n-3", "n-3"
+        )
+        assert cs.host_of(5) == "n-2"
+        assert cs.host_ranks()["n-1"] == (2, 3)
+        assert cs.ranks_on("n-3") == (6, 7)
+
+    def test_rejects_wrong_length(self):
+        with pytest.raises(ValueError, match="every rank"):
+            ClusterSpec(world_size=4, hosts=("a", "b"))
+
+    def test_scenario_validates_cluster(self):
+        cs = ClusterSpec.uniform(4, 2)
+        with pytest.raises(ValueError, match="places 4"):
+            ddp_scenario(world_size=8, cluster=cs)
+        sc = ddp_scenario(world_size=4, cluster=cs)
+        assert sc.hosts == cs.hosts
+        assert ddp_scenario(world_size=4).hosts == ()
+
+    def test_regime_scenario_threads_cluster(self):
+        cs = ClusterSpec.uniform(8, 2)
+        sc = regime_scenario("step", cluster=cs)
+        assert sc.cluster is cs and sc.hosts == cs.hosts
+
+    def test_shared_host_fleet_ground_truth(self):
+        fl = shared_host_fleet(jobs=5, shared_jobs=2, seed=3)
+        assert len(fl.scenarios) == 5
+        assert fl.shared_job_ids == ("job-000", "job-001")
+        for jid in fl.shared_job_ids:
+            sc = fl.scenarios[jid]
+            rank = fl.fault_ranks[jid]
+            assert sc.hosts[rank] == fl.shared_host
+            assert sc.faults and sc.faults[0].rank == rank
+        # distractor jobs never touch the shared host
+        for jid, sc in fl.scenarios.items():
+            if jid not in fl.shared_job_ids:
+                assert fl.shared_host not in sc.hosts
+
+
+# ---------------------------------------------------------------------------
+# Topology
+# ---------------------------------------------------------------------------
+
+
+class TestTopology:
+    def test_declare_read_forget(self):
+        t = two_job_topology()
+        assert t.host_of("a", 2) == "shared" and t.host_of("b", 1) == "shared"
+        assert t.host_of("a", 99) == "" and t.host_of("zz", 0) == ""
+        assert t.jobs_on("shared") == ("a", "b")
+        assert t.ranks_on("a", "h0") == (0, 1)
+        assert "shared" in t.hosts() and t.host_index()["g0"] >= 0
+        t.forget("a")
+        assert "a" not in t and len(t) == 1
+
+    def test_empty_declare_is_noop(self):
+        t = Topology()
+        t.declare("a", ("h0",))
+        t.declare("a", ())          # hostless packet must not erase
+        assert t.hosts_for("a") == ("h0",)
+
+
+# ---------------------------------------------------------------------------
+# Incident lifecycle
+# ---------------------------------------------------------------------------
+
+
+class TestLifecycle:
+    def test_open_then_active_then_healed(self):
+        eng = IncidentEngine()
+        eng.observe(1, [E("a", "s0", 1, 1.0, window_index=1)])
+        (inc,) = eng.incidents()
+        assert inc.state == "open" and inc.exposure_s == 1.0
+        eng.observe(2, [E("a", "s0", 1, 2.0, window_index=2)])
+        assert inc.state == "active" and inc.exposure_s == 3.0
+        # silence: cooling after cooling_after ticks, healed after more
+        p = eng.params
+        for t in range(3, 3 + p.cooling_after):
+            eng.observe(t, [])
+        assert inc.state == "cooling"
+        for t in range(3 + p.cooling_after, 3 + p.cooling_after + p.resolve_after):
+            eng.observe(t, [])
+        assert inc.state == "resolved" and inc.resolve_reason == "healed"
+        assert eng.incidents() == []
+        assert eng.get(inc.incident_id) is inc     # history retains it
+
+    def test_same_window_never_double_counts(self):
+        """The route re-reports the same window every tick until a new
+        one arrives; exposure must accumulate once per window."""
+        eng = IncidentEngine()
+        for t in range(1, 5):
+            eng.observe(t, [E("a", "s0", 1, 1.5, window_index=7)])
+        (inc,) = eng.incidents()
+        assert inc.exposure_s == 1.5 and inc.windows_seen == 1
+        eng.observe(5, [E("a", "s0", 1, 0.5, window_index=8)])
+        assert inc.exposure_s == 2.0 and inc.windows_seen == 2
+
+    def test_window_gap_straddles_open_incident(self):
+        """A gap shorter than the cooling+resolve horizon re-attaches to
+        the SAME incident — no duplicate, exposure keeps accumulating."""
+        eng = IncidentEngine()
+        eng.observe(1, [E("a", "s0", 1, 1.0, window_index=1)])
+        (inc,) = eng.incidents()
+        # gap long enough to cool but not to resolve
+        for t in range(2, 2 + eng.params.cooling_after):
+            eng.observe(t, [])
+        assert inc.state == "cooling"
+        eng.observe(6, [E("a", "s0", 1, 1.0, window_index=4)])
+        live = eng.incidents()
+        assert live == [inc]                      # same object, no dup
+        assert inc.state == "active" and inc.exposure_s == 2.0
+        assert eng.opened_total == 1
+
+    def test_eviction_resolves_live_incident(self):
+        """A job evicted while its incident is active must resolve it
+        with reason "evicted" — never linger as live."""
+        eng = IncidentEngine()
+        for t in (1, 2):
+            eng.observe(t, [E("a", "s0", 1, 1.0, window_index=t)])
+        (inc,) = eng.incidents()
+        assert inc.state == "active"
+        eng.observe(3, [], evicted=["a"])
+        assert inc.state == "resolved" and inc.resolve_reason == "evicted"
+        assert eng.incidents() == []
+
+    def test_eviction_resolves_merged_member_and_demotes_fleet(self):
+        eng = IncidentEngine(topology=two_job_topology())
+        act = {"a": (shared_activity(2), STAGES),
+               "b": (shared_activity(1), STAGES)}
+        eng.observe(1, [E("a", "s0", 2, 1.0, window_index=1),
+                        E("b", "s0", 1, 1.0, window_index=1)],
+                    activity=act)
+        fleet = [i for i in eng.incidents() if i.scope == "fleet"]
+        assert len(fleet) == 1
+        eng.observe(
+            2, [E("a", "s0", 2, 1.0, window_index=2)], evicted=["b"],
+            activity={"a": (shared_activity(2), STAGES)},
+        )
+        by_state = {i.incident_id: i for i in eng.incidents(live_only=False)}
+        b_inc = next(i for i in by_state.values() if i.job_id == "b")
+        assert b_inc.state == "resolved" and b_inc.resolve_reason == "evicted"
+        # quorum lost: the fleet incident resolves, the survivor unmerges
+        assert fleet[0].state == "resolved"
+        assert fleet[0].resolve_reason == "members_resolved"
+        a_inc = next(i for i in by_state.values() if i.job_id == "a")
+        assert a_inc.state == "active" and a_inc.merged_into == ""
+
+    def test_rank_set_absorbs_same_host_sibling(self):
+        """Two rank candidates of one job on ONE host are one fault —
+        the incident's rank-set grows instead of duplicating."""
+        topo = Topology.from_jobs({"a": ("h0", "h0", "h1", "h1")})
+        eng = IncidentEngine(topology=topo)
+        eng.observe(1, [E("a", "s0", 0, 1.0, window_index=1)])
+        eng.observe(2, [E("a", "s0", 1, 2.0, window_index=2)])
+        (inc,) = eng.incidents()
+        assert inc.ranks == (0, 1) and inc.host == "h0"
+        assert eng.opened_total == 1
+        # a rank on a DIFFERENT host opens a second incident
+        eng.observe(3, [E("a", "s0", 3, 1.0, window_index=3)])
+        assert eng.opened_total == 2
+
+    def test_min_recoverable_floor(self):
+        eng = IncidentEngine(
+            params=IncidentParams(min_recoverable_s=0.1)
+        )
+        eng.observe(1, [E("a", "s0", 1, 0.05, window_index=1)])
+        assert eng.incidents() == [] and eng.opened_total == 0
+
+
+# ---------------------------------------------------------------------------
+# Common-cause merge
+# ---------------------------------------------------------------------------
+
+
+class TestCommonCause:
+    def test_two_single_job_incidents_merge(self):
+        """The satellite case: two jobs' single-job incidents on the
+        shared host become ONE fleet-level incident that carries their
+        summed exposure and outranks them."""
+        eng = IncidentEngine(topology=two_job_topology())
+        act = {"a": (shared_activity(2), STAGES),
+               "b": (shared_activity(1), STAGES)}
+        live = eng.observe(
+            1,
+            [E("a", "s0", 2, 1.5, window_index=1),
+             E("b", "s0", 1, 2.5, window_index=1)],
+            activity=act,
+        )
+        fleet = [i for i in live if i.scope == "fleet"]
+        assert len(fleet) == 1
+        f = fleet[0]
+        assert f.host == "shared" and f.stage == "s0"
+        assert f.member_jobs == ("a", "b")
+        assert f.exposure_s == pytest.approx(4.0)
+        members = [i for i in live if i.scope == "job"]
+        assert all(m.state == "merged" for m in members)
+        assert all(m.merged_into == f.incident_id for m in members)
+        # fleet scope leads the deterministic ordering
+        assert live[0] is f
+        assert eng.merged_total == 1
+
+    def test_disjoint_activity_does_not_merge(self):
+        """Two jobs active on the shared host in DISJOINT step ranges
+        never co-activate: no common cause."""
+        eng = IncidentEngine(topology=two_job_topology())
+        a = np.zeros((6, 4, 2), bool)
+        a[:3, 2, 0] = True
+        b = np.zeros((6, 4, 2), bool)
+        b[3:, 1, 0] = True
+        live = eng.observe(
+            1,
+            [E("a", "s0", 2, 1.0, window_index=1),
+             E("b", "s0", 1, 1.0, window_index=1)],
+            activity={"a": (a, STAGES), "b": (b, STAGES)},
+        )
+        assert [i for i in live if i.scope == "fleet"] == []
+
+    def test_unequal_history_depths_still_merge(self):
+        """A job whose regime ring holds fewer steps (it joined a window
+        late) must still co-activate with its host peer: correlation
+        aligns on the most recent common history, never on equal ring
+        depths."""
+        eng = IncidentEngine(topology=two_job_topology())
+        live = eng.observe(
+            1,
+            [E("a", "s0", 2, 1.0, window_index=1),
+             E("b", "s0", 1, 1.0, window_index=1)],
+            activity={"a": (shared_activity(2, n=12), STAGES),
+                      "b": (shared_activity(1, n=5), STAGES)},
+        )
+        fleet = [i for i in live if i.scope == "fleet"]
+        assert len(fleet) == 1 and fleet[0].host == "shared"
+
+    def test_single_job_never_promotes(self):
+        eng = IncidentEngine(topology=two_job_topology())
+        live = eng.observe(
+            1, [E("a", "s0", 2, 1.0, window_index=1)],
+            activity={"a": (shared_activity(2), STAGES)},
+        )
+        assert [i for i in live if i.scope == "fleet"] == []
+
+    def test_end_to_end_through_fleet_service(self):
+        """Full stack: simulator -> aggregator -> SFP2-v2 wire (hosts) ->
+        FleetService -> incident engine promotes the injected host."""
+        fl = shared_host_fleet(jobs=4, shared_jobs=2, steps=40, seed=1)
+        eng = IncidentEngine()
+        svc = FleetService(window_capacity=20, incidents=eng)
+        sims = {j: simulate(sc) for j, sc in fl.scenarios.items()}
+        aggs = {
+            j: WindowAggregator(sc.schema(), window_steps=20)
+            for j, sc in fl.scenarios.items()
+        }
+        for w in range(2):
+            batch = []
+            for jid, sc in fl.scenarios.items():
+                block = sims[jid].durations[w * 20:(w + 1) * 20]
+                report = None
+                for t in range(20):
+                    report = aggs[jid].add_step(
+                        block[t], block[t].sum(-1)
+                    ) or report
+                pkt = from_diagnosis(
+                    report.diagnosis, sc.stages, report.steps,
+                    sc.world_size, report.window_index,
+                    window=report.durations, sync_stages=sc.sync_stages,
+                    first_step=w * 20, hosts=sc.hosts,
+                )
+                batch.append((jid, encode_packet(pkt, compress="int8")))
+            svc.submit_many(batch, refresh=True)
+            svc.tick()
+        fleet = [i for i in eng.incidents() if i.scope == "fleet"]
+        assert len(fleet) == 1
+        assert fleet[0].host == fl.shared_host
+        assert fleet[0].member_jobs == fl.shared_job_ids
+        assert svc.snapshot()["incidents"]["merged"] == 2
+
+    def test_kernel_route_agrees_with_ref_route(self):
+        """IncidentEngine(use_kernel=True) promotes identically."""
+        results = []
+        for use_kernel in (False, True):
+            eng = IncidentEngine(
+                topology=two_job_topology(), use_kernel=use_kernel
+            )
+            live = eng.observe(
+                1,
+                [E("a", "s0", 2, 1.5, window_index=1),
+                 E("b", "s0", 1, 2.5, window_index=1)],
+                activity={"a": (shared_activity(2), STAGES),
+                          "b": (shared_activity(1), STAGES)},
+            )
+            results.append(
+                sorted((i.incident_id, i.state) for i in live)
+            )
+        assert results[0] == results[1]
+
+
+# ---------------------------------------------------------------------------
+# Escalation controller
+# ---------------------------------------------------------------------------
+
+
+def _mk_inc(i, *, scope="job", exposure=1.0, state="active"):
+    return Incident(
+        incident_id=f"inc-{i:02d}",
+        scope=scope,
+        job_id=f"job-{i:02d}" if scope == "job" else "",
+        stage="s0",
+        ranks=(0,),
+        host="h0",
+        state=state,
+        opened_tick=0,
+        last_seen_tick=0,
+        exposure_s=exposure,
+        member_jobs=("x", "y") if scope == "fleet" else (),
+    )
+
+
+class TestEscalation:
+    def test_budget_never_exceeded(self):
+        ctl = EscalationController(budget_per_tick=2)
+        incs = [_mk_inc(i, exposure=10.0 - i) for i in range(6)]
+        acts = ctl.plan(1, incs)
+        assert len(acts) == 2
+        assert [a.incident_id for a in acts] == ["inc-00", "inc-01"]
+
+    def test_hysteresis_blocks_reescalation(self):
+        ctl = EscalationController(budget_per_tick=2, hysteresis_ticks=3)
+        incs = [_mk_inc(0)]
+        assert len(ctl.plan(1, incs)) == 1
+        assert ctl.plan(2, incs) == []            # too soon
+        assert ctl.plan(3, incs) == []
+        assert len(ctl.plan(4, incs)) == 1        # horizon passed
+
+    def test_flapping_cannot_drain_budget(self):
+        """An incident flapping open/cooling every tick is throttled by
+        hysteresis; a steady incident still gets its attachments."""
+        ctl = EscalationController(budget_per_tick=1, hysteresis_ticks=4)
+        flappy = _mk_inc(0, exposure=100.0)
+        steady = _mk_inc(1, exposure=1.0)
+        got_steady = 0
+        for t in range(1, 9):
+            flappy.state = "active" if t % 2 else "cooling"
+            acts = ctl.plan(t, [flappy, steady])
+            assert len(acts) <= 1
+            got_steady += sum(a.incident_id == "inc-01" for a in acts)
+        assert got_steady >= 2
+
+    def test_fleet_outranks_job(self):
+        ctl = EscalationController(budget_per_tick=1)
+        job = _mk_inc(0, exposure=100.0)
+        fleet = _mk_inc(1, scope="fleet", exposure=1.0)
+        (act,) = ctl.plan(1, [job, fleet])
+        assert act.incident_id == "inc-01" and act.jobs == ("x", "y")
+
+    def test_merged_and_cooling_never_escalate(self):
+        ctl = EscalationController(budget_per_tick=4)
+        merged = _mk_inc(0)
+        merged.merged_into = "if:x"
+        cooling = _mk_inc(1, state="cooling")
+        resolved = _mk_inc(2, state="resolved")
+        assert ctl.plan(1, [merged, cooling, resolved]) == []
+
+    def test_double_plan_same_tick_respects_per_tick_cap(self):
+        """The per-tick HARD cap holds even when plan() is called twice
+        for one tick with carried-over tokens in the bucket."""
+        ctl = EscalationController(budget_per_tick=2, bucket_cap=4,
+                                   hysteresis_ticks=1)
+        ctl.plan(1, [])
+        ctl.plan(2, [])                           # bucket now at cap (4)
+        incs = [_mk_inc(i) for i in range(6)]
+        first = ctl.plan(3, incs)
+        second = ctl.plan(3, incs)                # same tick, again
+        assert len(first) == 2 and second == []
+
+    def test_token_bucket_carries_over_bounded(self):
+        ctl = EscalationController(budget_per_tick=2, bucket_cap=4)
+        assert ctl.plan(1, []) == []
+        assert ctl.plan(2, []) == []
+        assert ctl.tokens == 4                    # capped, not 6
+        incs = [_mk_inc(i) for i in range(6)]
+        # saved tokens still cannot exceed the per-tick budget
+        assert len(ctl.plan(3, incs)) == 2
+
+    def test_rejects_bad_config(self):
+        with pytest.raises(ValueError):
+            EscalationController(budget_per_tick=0)
+        with pytest.raises(ValueError):
+            EscalationController(budget_per_tick=4, bucket_cap=2)
+
+
+# ---------------------------------------------------------------------------
+# co-activation kernel parity (the benchmark gates the full sweep)
+# ---------------------------------------------------------------------------
+
+
+class TestCoActivation:
+    @pytest.mark.parametrize(
+        "shape", [(1, 1, 1, 1), (2, 5, 4, 6), (3, 7, 130, 6), (4, 8, 9, 9)]
+    )
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_kernel_matches_ref_exactly(self, shape, seed):
+        act = np.random.default_rng(seed).random(shape) < 0.3
+        ref = co_activation_ref(act)
+        got = co_activation(act)
+        loop = co_activation_loop(act)
+        for field in ("jobs", "coact", "active"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, field)), getattr(ref, field)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(getattr(loop, field)), getattr(ref, field)
+            )
+
+    def test_ref_semantics(self):
+        act = np.zeros((3, 4, 2, 2), bool)
+        act[0, :2, 0, 0] = True      # job 0 active steps 0-1
+        act[1, 1:3, 0, 0] = True     # job 1 active steps 1-2 (overlap at 1)
+        act[2, 3, 1, 1] = True       # job 2 alone elsewhere
+        ref = co_activation_ref(act)
+        assert ref.jobs[0, 0] == 2 and ref.jobs[1, 1] == 1
+        assert ref.coact[0, 0] == 1               # only step 1 overlaps
+        assert ref.active[0, 0] == 4
+
+    def test_ref_rejects_bad_rank(self):
+        with pytest.raises(ValueError):
+            co_activation_ref(np.zeros((2, 3, 4)))
+
+
+# ---------------------------------------------------------------------------
+# StreamingRegimes activity accessor (the correlation substrate)
+# ---------------------------------------------------------------------------
+
+
+class TestActivityAccessor:
+    def test_matches_thresholded_excess(self):
+        from repro.core import StreamingRegimes, make_sync_mask
+        from repro.core.regimes import RegimeParams, excess_stream
+
+        sc = regime_scenario("step", steps=30, seed=0)
+        res = simulate(sc)
+        mask = make_sync_mask(sc.stages, sc.sync_stages)
+        e, base = excess_stream(res.durations, sync_mask=mask)
+        sr = StreamingRegimes(
+            sc.world_size, len(sc.stages), base, capacity=30, sync_mask=mask
+        )
+        sr.push_many(res.durations)
+        want = e > RegimeParams().threshold(base)[None]
+        np.testing.assert_array_equal(sr.activity(), want)
+        assert sr.activity().shape == (30, sc.world_size, len(sc.stages))

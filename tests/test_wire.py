@@ -375,6 +375,113 @@ class TestGoldenSfp1:
 
 
 # ---------------------------------------------------------------------------
+# SFP2-v2 host-id section (the incident tier's topology on the wire)
+# ---------------------------------------------------------------------------
+
+
+class TestHostSection:
+    def _hosts(self, r=8):
+        return tuple(f"host-{i // 2}" for i in range(r))
+
+    @pytest.mark.parametrize("compress", ["none", "int8", "int8.delta"])
+    @pytest.mark.parametrize("window", [True, False])
+    def test_roundtrip(self, compress, window):
+        pkt = dataclasses.replace(
+            golden_packet(window=window), hosts=self._hosts()
+        )
+        wire = encode_packet(pkt, compress=compress)
+        assert wire[4] == 2            # hosts promote the frame to v2
+        back = decode_packet(wire)
+        assert back.hosts == pkt.hosts
+        assert back.present_ranks == pkt.present_ranks
+
+    def test_hostless_packet_stays_v1_byte_identical(self):
+        """A packet without hosts must encode byte-for-byte as before
+        the field existed — pre-incident decoders keep working."""
+        pkt = golden_packet()
+        wire = encode_packet(pkt)
+        assert wire[4] == 1
+        assert encode_packet(dataclasses.replace(pkt, hosts=())) == wire
+
+    def test_sfp1_drops_hosts(self):
+        """The legacy framing cannot carry hosts: byte-identity with the
+        golden fixtures wins over completeness."""
+        pkt = dataclasses.replace(golden_packet(), hosts=self._hosts())
+        legacy = encode_packet(pkt, wire="sfp1")
+        assert legacy == encode_packet(
+            dataclasses.replace(pkt, hosts=()), wire="sfp1"
+        )
+        assert decode_packet(legacy).hosts == ()
+
+    def test_every_offset_truncation_rejected(self):
+        full = encode_packet(
+            dataclasses.replace(golden_packet(window=False),
+                                hosts=self._hosts())
+        )
+        for cut in range(len(full)):
+            with pytest.raises(ValueError):
+                decode_packet(full[:cut])
+        with pytest.raises(ValueError):
+            decode_packet(full + b"\x00")
+
+    @pytest.mark.parametrize("with_hosts", [True, False])
+    def test_header_smuggled_hosts_rejected_sfp2(self, with_hosts):
+        """Hosts come ONLY from the binary v2 section; a JSON header
+        claiming the key is malformed on v2 AND v1 frames alike (a v1
+        frame must not sneak a placement past the section's rules)."""
+        pkt = golden_packet(window=False)
+        if with_hosts:
+            pkt = dataclasses.replace(pkt, hosts=("a", "b"))
+        wire = bytearray(encode_packet(pkt))
+        # splice a "hosts" key into the JSON header
+        head_len = int.from_bytes(wire[6:10], "little")
+        head = bytes(wire[10:10 + head_len]).replace(
+            b'{"window_index"', b'{"hosts":["evil"],"window_index"'
+        )
+        patched = (
+            bytes(wire[:6])
+            + len(head).to_bytes(4, "little")
+            + head
+            + bytes(wire[10 + head_len:])
+        )
+        with pytest.raises(ValueError, match="invalid packet header"):
+            decode_packet(patched)
+
+    def test_header_smuggled_hosts_rejected_sfp1(self):
+        """Same invariant on the legacy framing: SFP1 never carried
+        hosts, so a header claiming them is malformed, not trusted."""
+        wire = bytearray(
+            encode_packet(golden_packet(window=False), wire="sfp1")
+        )
+        head_len = int.from_bytes(wire[4:8], "little")
+        head = bytes(wire[8:8 + head_len]).replace(
+            b'{"window_index"', b'{"hosts":["evil"],"window_index"'
+        )
+        patched = (
+            bytes(wire[:4])
+            + len(head).to_bytes(4, "little")
+            + head
+            + bytes(wire[8 + head_len:])
+        )
+        with pytest.raises(ValueError, match="invalid packet header"):
+            decode_packet(patched)
+
+    def test_ingest_feeds_topology_through_service(self):
+        """Wire hosts land in the registry job state AND the attached
+        incident engine's topology."""
+        from repro.fleet import FleetService
+        from repro.incidents import IncidentEngine
+
+        pkt = dataclasses.replace(golden_packet(), hosts=self._hosts())
+        eng = IncidentEngine()
+        svc = FleetService(incidents=eng)
+        job = svc.submit("j", encode_packet(pkt, compress="int8"))
+        assert job.hosts == self._hosts()
+        assert eng.topology.hosts_for("j") == self._hosts()
+        assert eng.topology.host_of("j", 3) == "host-1"
+
+
+# ---------------------------------------------------------------------------
 # varint/delta codec unit coverage
 # ---------------------------------------------------------------------------
 

@@ -28,7 +28,12 @@ import pathlib
 import re
 import sys
 
-MODULES = ["repro.core", "repro.fleet", "repro.kernels.frontier"]
+MODULES = [
+    "repro.core",
+    "repro.fleet",
+    "repro.incidents",
+    "repro.kernels.frontier",
+]
 API_MD = pathlib.Path(__file__).resolve().parent.parent / "docs" / "api.md"
 
 
