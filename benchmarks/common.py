@@ -1,6 +1,11 @@
-"""Shared benchmark utilities: timing, CSV emission, bootstrap CIs."""
+"""Shared benchmark utilities: timing, CSV emission, bootstrap CIs,
+and `BENCH_<name>.json` artifact emission (the in-repo perf trajectory)."""
 from __future__ import annotations
 
+import datetime
+import json
+import os
+import subprocess
 import time
 from typing import Callable, Iterable
 
@@ -8,10 +13,58 @@ import numpy as np
 
 RESULTS: list[tuple[str, float, str]] = []
 
+#: default artifact directory (repo-relative); benchmarks/run.py writes
+#: one BENCH_<module>.json per module here unless --artifacts overrides.
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     RESULTS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def git_sha() -> str:
+    """Current commit SHA ('unknown' outside a git checkout)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(__file__),
+            capture_output=True, text=True, timeout=10,
+        )
+        return out.stdout.strip() if out.returncode == 0 else "unknown"
+    except Exception:
+        return "unknown"
+
+
+def write_artifact(
+    name: str,
+    rows: list[tuple[str, float, str]],
+    *,
+    extra: dict | None = None,
+    out_dir: str | None = None,
+) -> str:
+    """Write `BENCH_<name>.json`: the module's metric rows plus commit
+    SHA and UTC timestamp — the checked-in perf-trajectory record.
+    Returns the artifact path."""
+    out_dir = out_dir or ARTIFACT_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    doc = {
+        "benchmark": name,
+        "git_sha": git_sha(),
+        "timestamp_utc": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "metrics": [
+            {"name": n, "us_per_call": round(us, 3), "derived": d}
+            for n, us, d in rows
+        ],
+    }
+    if extra:
+        doc.update(extra)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def time_us(fn: Callable, *, repeat: int = 5, number: int = 1) -> float:

@@ -1,9 +1,12 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--artifacts DIR]
 
 Prints ``name,us_per_call,derived`` CSV rows (see each module's docstring
-for the paper table it reproduces).
+for the paper table it reproduces).  With ``--artifacts`` each module's
+rows are additionally written to ``DIR/BENCH_<name>.json`` stamped with
+the commit SHA and a UTC timestamp — the in-repo perf trajectory CI
+uploads per run.
 """
 from __future__ import annotations
 
@@ -11,6 +14,8 @@ import argparse
 import sys
 import time
 import traceback
+
+from . import common
 
 MODULES = [
     ("validation", "paper §6.1 algorithmic validation (RQ1)"),
@@ -27,19 +32,25 @@ MODULES = [
     ("whatif_matrix", "counterfactual what-if matrix vs per-candidate loop"),
     ("regime_detection", "temporal regime classification + batched route"),
     ("incident_engine", "common-cause attribution + escalation budget law"),
+    ("trace_replay", "trace-driven fleet replay: scale + routing accuracy"),
 ]
 
 
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default="")
-    args = p.parse_args()
+    p.add_argument("--artifacts", default="",
+                   help="write BENCH_<name>.json per module into this dir")
+    # unknown flags (e.g. --smoke) stay on sys.argv for the modules'
+    # own parse_known_args
+    args, _ = p.parse_known_args()
     failures = 0
     for name, desc in MODULES:
         if args.only and args.only != name:
             continue
         print(f"# --- {name}: {desc}", flush=True)
         t0 = time.time()
+        row0 = len(common.RESULTS)
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
             mod.main()
@@ -47,6 +58,13 @@ def main() -> None:
             failures += 1
             print(f"{name},nan,ERROR", flush=True)
             traceback.print_exc()
+        if args.artifacts:
+            path = common.write_artifact(
+                name, common.RESULTS[row0:],
+                extra={"elapsed_s": round(time.time() - t0, 1)},
+                out_dir=args.artifacts,
+            )
+            print(f"# artifact: {path}", flush=True)
         print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
     sys.exit(1 if failures else 0)
 

@@ -1,0 +1,134 @@
+"""Trace-driven replay at fleet scale: volume, accuracy, damage tolerance.
+
+Run:  PYTHONPATH=src python -m benchmarks.trace_replay [--smoke]
+(`--smoke` shrinks the trace for CI; every correctness gate except the
+100k-window volume floor still applies.)
+
+Three measurements, three gates:
+
+  1. **Scale replay** — a generated heterogeneous elastic trace (worker /
+     parameter-server / evaluator templates, DDP/FSDP/ZeRO-1 sync
+     profiles, staggered arrivals, departures, one same-id re-arrival,
+     mid-run resizes, two-lane fault scheduling) replayed through the
+     `serve_fleet`-equivalent ingest path.  Gates: >= 100k evidence
+     windows replayed (full size), and top-2 routing contains the
+     injected fault's exact (job, stage, rank) on >= 90% of scored
+     faulted windows.
+  2. **Churn coverage** — the replay must actually have exercised the
+     elastic paths it exists to test: re-arrivals, resizes, departures,
+     and registry evictions all non-zero.
+  3. **Truncation fuzz** — the trace file cut at EVERY byte offset (and
+     single-byte-corrupted at a stride of offsets) must always load and
+     replay: damaged rows surface as counted skips in the report,
+     never as exceptions.  Gate: zero unhandled exceptions.
+
+The emitted rows land in `BENCH_trace_replay.json` via `benchmarks.run
+--artifacts` (or standalone via this module's __main__), the checked-in
+perf-trajectory artifact.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.replay import generate_trace, parse_trace, replay_trace
+
+from .common import emit
+
+FULL = dict(jobs=320, ticks=440, window_steps=8, world_size=8, seed=7)
+SMOKE = dict(jobs=12, ticks=14, window_steps=8, world_size=8, seed=7)
+
+
+def bench_replay(params: dict):
+    text = generate_trace(**params)
+    trace = parse_trace(text, name="bench")
+    report = replay_trace(trace)
+    per_window_us = 1e6 * report.elapsed_s / max(report.windows_replayed, 1)
+    emit(
+        f"trace_replay/replay_{params['jobs']}jx{params['ticks']}t",
+        per_window_us,
+        f"windows={report.windows_replayed} "
+        f"windows_per_s={report.windows_per_s:.0f} "
+        f"acc_top1={report.accuracy_top1:.3f} "
+        f"acc_top2={report.accuracy_top2:.3f} "
+        f"scored={report.scored_windows} "
+        f"rearrivals={report.rearrivals} resizes={report.resizes} "
+        f"departures={report.departures} evictions={report.evictions}",
+    )
+    return text, report
+
+
+def bench_fuzz(text: str, *, corrupt_stride: int = 37) -> int:
+    """Cut the trace at every offset; corrupt one byte at a stride of
+    offsets; additionally replay a sample of the damaged traces end to
+    end.  Returns the number of unhandled exceptions (gate: 0)."""
+    raw = text.encode()
+    failures = 0
+    loads = 0
+    for cut in range(len(raw) + 1):
+        try:
+            parse_trace(raw[:cut].decode("utf-8", errors="replace"))
+            loads += 1
+        except Exception:
+            failures += 1
+    for off in range(0, len(raw), corrupt_stride):
+        damaged = bytearray(raw)
+        damaged[off] ^= 0xFF
+        try:
+            parse_trace(bytes(damaged).decode("utf-8", errors="replace"))
+            loads += 1
+        except Exception:
+            failures += 1
+    # a sample of truncations must also REPLAY cleanly (the report's
+    # loader section carries the skips) — damage never escapes the loader
+    for cut in range(1, len(raw), max(1, len(raw) // 8)):
+        try:
+            t = parse_trace(raw[:cut].decode("utf-8", errors="replace"))
+            rep = replay_trace(t)
+            assert rep.loader["rows"] == t.stats.rows
+            loads += 1
+        except Exception:
+            failures += 1
+    emit(
+        "trace_replay/truncation_fuzz",
+        0.0,
+        f"offsets={len(raw) + 1} loads={loads} unhandled={failures}",
+    )
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace for CI; accuracy/churn/fuzz gates "
+                         "still enforced, volume floor full-size only")
+    args, _ = ap.parse_known_args()
+    params = SMOKE if args.smoke else FULL
+    text, report = bench_replay(params)
+    # fuzz a small trace: every-offset truncation is O(len^2) in rows
+    fuzz_text = text if args.smoke else generate_trace(
+        jobs=6, ticks=8, window_steps=8, world_size=8, seed=7
+    )
+    failures = bench_fuzz(fuzz_text)
+
+    # acceptance gates
+    assert report.accuracy_top2 >= 0.90, (
+        f"top-2 routing missed injected faults: {report.accuracy_top2:.3f} "
+        f"over {report.scored_windows} scored windows"
+    )
+    for name, got in (
+        ("rearrivals", report.rearrivals), ("resizes", report.resizes),
+        ("departures", report.departures), ("evictions", report.evictions),
+    ):
+        assert got > 0, f"replay exercised no {name} — trace not elastic"
+    assert failures == 0, f"{failures} unhandled exceptions under fuzzing"
+    if not args.smoke:
+        assert report.windows_replayed >= 100_000, (
+            f"volume floor: {report.windows_replayed} windows < 100k"
+        )
+
+
+if __name__ == "__main__":
+    from . import common
+
+    main()
+    common.write_artifact("trace_replay", common.RESULTS)

@@ -338,7 +338,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes / few repeats for CI")
-    args = ap.parse_args()
+    args, _ = ap.parse_known_args()
 
     if args.smoke:
         n, r, s, repeat, gate = 6, 16, 6, 2, False

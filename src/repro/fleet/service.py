@@ -215,12 +215,25 @@ class FleetService:
             if len(jobs) < min_jobs:
                 continue
             stacked = np.stack([j.last_window for j in jobs])
+            # Pad the job dimension to the next power of two (replicating
+            # the last job's window) so elastic fleets — where the live
+            # job count J drifts every tick — hit a bounded set of
+            # compiled kernel shapes instead of one ~seconds-long jit
+            # compile per distinct J.  Per-job accounting is independent
+            # along the grid dimension, so the first-J outputs are
+            # unchanged; the padded rows are sliced away below.
+            j_live = stacked.shape[0]
+            j_pad = 1 << (j_live - 1).bit_length()
+            if j_pad > j_live:
+                stacked = np.concatenate(
+                    [stacked, np.repeat(stacked[-1:], j_pad - j_live, axis=0)]
+                )
             pkt = fleet_frontier_window(stacked)
             wif = fleet_whatif_matrix(stacked, sync_stages=sync_idx)
-            shares = np.asarray(pkt.shares)          # [J, S]
-            gains = np.asarray(pkt.gains)            # [J, S]
-            leader = np.asarray(pkt.leader)          # [J, N, S]
-            whatif = np.asarray(wif.matrix)          # [J, S, R]
+            shares = np.asarray(pkt.shares)[:j_live]   # [J, S]
+            gains = np.asarray(pkt.gains)[:j_live]     # [J, S]
+            leader = np.asarray(pkt.leader)[:j_live]   # [J, N, S]
+            whatif = np.asarray(wif.matrix)[:j_live]   # [J, S, R]
             for i, job in enumerate(jobs):
                 job.kernel_shares = shares[i]
                 job.kernel_gains = gains[i]

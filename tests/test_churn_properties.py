@@ -1,0 +1,212 @@
+"""Property-based tests (hypothesis) for registry/incident behavior under
+elastic churn: arbitrary interleavings of job arrival, eviction, and
+re-arrival under the SAME job id must never double-count the fleet's
+window counter, resurrect a resolved incident, or leak temporal-regime
+state from a previous registration into the next one."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.fleet import FleetRegistry
+from repro.incidents import IncidentEngine
+from repro.telemetry.packets import EvidencePacket
+
+STAGES = ("s0", "s1")
+R, W = 2, 4
+
+
+def mk_packet(
+    window_index: int,
+    *,
+    schema: str = "h0",
+    first_step: int = -1,
+    with_window: bool = True,
+) -> EvidencePacket:
+    window = None
+    if with_window:
+        window = np.full((W, R, len(STAGES)), 0.01)
+        window[:, 0, 0] += 0.001 * (window_index + 1)
+    return EvidencePacket(
+        window_index=window_index,
+        schema_hash=schema,
+        stages=STAGES,
+        steps=W,
+        world_size=R,
+        gather_ok=True,
+        labels=(),
+        routing_stages=("s0",),
+        shares=(0.6, 0.4),
+        gains=(0.1, 0.0),
+        co_critical_stages=(),
+        downgrade_reasons=(),
+        leader_rank=0,
+        exposed_total=float(W * 0.02),
+        first_step=first_step,
+        window=window,
+    )
+
+
+# -- 1. windows_total never double-counts across churn ----------------------
+
+#: one op: deliver a packet (job, window_index) or advance the eviction
+#: clock one tick.  Re-delivered window indices, evictions, and same-id
+#: re-arrivals interleave arbitrarily.
+op = st.one_of(
+    st.tuples(
+        st.just("pkt"), st.sampled_from(["a", "b"]), st.integers(0, 3)
+    ),
+    st.tuples(st.just("tick"), st.none(), st.none()),
+)
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.lists(op, min_size=1, max_size=30))
+def test_windows_total_exact_under_churn(ops):
+    """`windows_total` equals the number of accepted non-duplicate
+    windows under ANY interleaving of delivery, eviction, and same-id
+    re-arrival — and never decrements."""
+    reg = FleetRegistry(evict_after=2)
+    tick = 0
+    # model: job -> window_index of its last folded packet (absent =
+    # not registered); duplicates refresh liveness only
+    last_wi: dict[str, int] = {}
+    last_seen: dict[str, int] = {}
+    expected_total = 0
+    prev_total = 0
+    for kind, job, wi in ops:
+        if kind == "tick":
+            tick += 1
+            reg.evict_stale(tick)
+            for j in [j for j, t in last_seen.items() if tick - t >= 2]:
+                del last_seen[j], last_wi[j]
+        else:
+            reg.update(job, mk_packet(wi, with_window=False), tick)
+            if job not in last_wi or last_wi[job] != wi:
+                expected_total += 1
+                last_wi[job] = wi
+            last_seen[job] = tick
+        assert reg.windows_total >= prev_total, "windows_total decremented"
+        prev_total = reg.windows_total
+    assert reg.windows_total == expected_total
+    assert reg.duplicate_total == sum(
+        1 for kind, _, _ in ops if kind == "pkt"
+    ) - expected_total
+
+
+# -- 2. StreamingRegimes never leaks across re-registration -----------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(1, 4),          # windows before the break
+    st.integers(1, 4),          # windows after re-registration
+    st.sampled_from(["evict", "schema"]),
+)
+def test_regime_state_resets_on_reregistration(k1, k2, how):
+    """After a same-id re-arrival — via eviction or via a schema break —
+    the job's temporal regime stream contains ONLY steps pushed since
+    re-registration, and its step origin is the new stream's."""
+    reg = FleetRegistry(evict_after=2)
+    for i in range(k1):
+        reg.update("a", mk_packet(i, first_step=i * W), tick=0)
+    job = reg.jobs()[0]
+    assert job.regimes is not None and job.regimes.steps_seen == k1 * W
+
+    origin2 = 100
+    if how == "evict":
+        assert reg.evict_stale(5) == ["a"]
+        schema2 = "h0"
+    else:
+        schema2 = "h1"
+    for i in range(k2):
+        reg.update(
+            "a",
+            mk_packet(i, schema=schema2, first_step=origin2 + i * W),
+            tick=5,
+        )
+    job = reg.jobs()[0]
+    assert job.schema_hash == schema2
+    assert job.windows_seen == k2, "windows_seen leaked across registration"
+    assert job.regimes is not None
+    assert job.regimes.steps_seen == k2 * W, (
+        "regime stream leaked steps from the previous registration"
+    )
+    assert job.step_origin == origin2
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 3), st.integers(2, 5))
+def test_regime_stream_restarts_on_step_discontinuity(k1, gap_windows):
+    """A first_step gap inside ONE registration (dropped window) also
+    restarts the stream — non-adjacent steps are never stitched."""
+    reg = FleetRegistry()
+    for i in range(k1):
+        reg.update("a", mk_packet(i, first_step=i * W), tick=0)
+    resume = (k1 + gap_windows) * W
+    reg.update("a", mk_packet(k1, first_step=resume), tick=1)
+    job = reg.jobs()[0]
+    assert job.regimes.steps_seen == W
+    assert job.step_origin == resume
+
+
+# -- 3. resolved incidents stay resolved ------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class E:
+    job_id: str
+    stage: str
+    rank: int
+    recoverable_s: float
+    persistence: float = 1.0
+    regime: str = "persistent"
+    onset_step: int = 0
+    window_index: int = 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.integers(1, 3),          # ticks of activity before departure
+    st.integers(0, 3),          # silent ticks between departure and return
+    st.integers(1, 3),          # ticks of activity after re-arrival
+    st.floats(0.1, 5.0, allow_nan=False),
+)
+def test_eviction_resolved_incident_never_resurrects(t1, quiet, t2, price):
+    """A job's incident resolved by eviction stays resolved when the
+    same job id re-arrives with the same fault: the engine must open a
+    NEW incident, never flip the resolved one back to a live state."""
+    eng = IncidentEngine()
+    tick = 0
+    for _ in range(t1):
+        tick += 1
+        eng.observe(tick, [E("a", "s0", 1, price, window_index=tick)])
+    tick += 1
+    eng.observe(tick, [], evicted=["a"])
+    resolved = {
+        i.incident_id: (i.state, i.resolve_reason, i.exposure_s, i.windows_seen)
+        for i in eng.incidents(live_only=False)
+        if i.state == "resolved"
+    }
+    assert resolved, "eviction must resolve the job's live incident"
+
+    for _ in range(quiet):
+        tick += 1
+        eng.observe(tick, [])
+    for _ in range(t2):
+        tick += 1
+        eng.observe(tick, [E("a", "s0", 1, price, window_index=100 + tick)])
+
+    live = eng.incidents(live_only=True)
+    assert live, "the returned fault must open a live incident"
+    assert all(i.incident_id not in resolved for i in live), (
+        "a resolved incident came back to life"
+    )
+    for i in eng.incidents(live_only=False):
+        if i.incident_id in resolved:
+            assert (
+                i.state, i.resolve_reason, i.exposure_s, i.windows_seen
+            ) == resolved[i.incident_id], "resolved incident mutated"

@@ -1,0 +1,370 @@
+"""Trace-replay tests: schema/loader defensiveness (every malformed row
+is a counted skip, never an exception), generator determinism and
+heterogeneity, every-offset truncation fuzz, replay-engine end-to-end
+validation against injected ground truth, and the power-of-two batch
+padding regression in the fleet refresh."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.replay import (
+    FAULT_FAMILIES,
+    SCORED_FAMILIES,
+    TRACE_VERSION,
+    generate_trace,
+    load_trace,
+    parse_trace,
+    replay_trace,
+)
+from repro.replay.trace import EVAL_STAGES, PS_STAGES, WORKER_STAGES
+
+#: one small elastic trace shared by the engine tests (module-scoped so
+#: the kernel jit cache is paid once).
+PARAMS = dict(jobs=6, ticks=10, window_steps=8, world_size=8, seed=7)
+
+
+@pytest.fixture(scope="module")
+def small_trace():
+    return parse_trace(generate_trace(**PARAMS), name="t")
+
+
+@pytest.fixture(scope="module")
+def small_report(small_trace):
+    return replay_trace(small_trace)
+
+
+# ---------------------------------------------------------------------------
+# schema + loader
+# ---------------------------------------------------------------------------
+
+
+class TestTraceSchema:
+    def test_generator_deterministic(self):
+        assert generate_trace(**PARAMS) == generate_trace(**PARAMS)
+        assert generate_trace(**PARAMS) != generate_trace(
+            **{**PARAMS, "seed": 8}
+        )
+
+    def test_parse_accepts_every_generated_row(self):
+        text = generate_trace(**PARAMS)
+        tr = parse_trace(text, name="t")
+        assert tr.stats.rows == len(text.strip().splitlines())
+        assert tr.stats.accepted == tr.stats.rows
+        assert tr.stats.skipped == 0
+        assert tr.window_steps == 8 and tr.ticks == 10
+
+    def test_events_sorted_and_stable(self, small_trace):
+        ticks = [e.tick for e in small_trace.events]
+        assert ticks == sorted(ticks)
+
+    def test_generated_fleet_is_heterogeneous(self, small_trace):
+        """Stage vocabularies, sync profiles, and task roles all vary —
+        the axes the homogeneous sim scenarios cannot express."""
+        arrivals = [e for e in small_trace.events if e.kind == "arrive"]
+        vocabs = {e.stages for e in arrivals}
+        assert WORKER_STAGES in vocabs
+        assert PS_STAGES in vocabs
+        assert EVAL_STAGES in vocabs
+        roles = {t.role for e in arrivals for t in e.tasks}
+        assert {"ps", "worker", "chief", "evaluator"} <= roles
+        assert len({e.sync_stages for e in arrivals}) >= 3
+
+    def test_roles_mapping(self, small_trace):
+        ps = next(
+            e for e in small_trace.events
+            if e.kind == "arrive" and e.stages == PS_STAGES
+        )
+        roles = ps.roles()
+        assert len(roles) == ps.world_size
+        assert roles[0] == roles[1] == "ps"
+        assert set(roles[2:]) == {"worker"}
+
+    def test_fault_rows_carry_ground_truth(self, small_trace):
+        faults = [e for e in small_trace.events if e.kind == "fault"]
+        assert faults
+        for f in faults:
+            assert f.family in FAULT_FAMILIES
+            assert f.delay_ms > 0 and f.rank >= 0
+            assert f.until_tick == -1 or f.until_tick > f.tick
+
+    def test_load_trace_from_file(self, tmp_path):
+        p = tmp_path / "t.jsonl"
+        p.write_text(generate_trace(**PARAMS))
+        tr = load_trace(p)
+        assert tr.name == "synth-7"  # meta row's name wins over filename
+        assert tr.stats.skipped == 0
+
+
+class TestLoaderDefensiveness:
+    def row(self, **kw):
+        return json.dumps({"v": TRACE_VERSION, **kw})
+
+    def test_each_malformation_is_a_counted_skip(self):
+        good_arrive = self.row(
+            kind="arrive", tick=0, job_id="j", world_size=2,
+            stages=["a", "b"], sync_stages=[], seed=1,
+        )
+        bad = [
+            "{not json",                                          # bad_json
+            '"a bare string"',                                    # bad_row
+            json.dumps({"v": 99, "kind": "depart", "tick": 0,
+                        "job_id": "j"}),                          # bad_version
+            self.row(kind="nope", tick=0, job_id="j"),            # bad_kind
+            self.row(kind="depart", tick=0, job_id=""),           # bad_job_id
+            self.row(kind="depart", tick=-1, job_id="j"),         # bad tick
+            self.row(kind="arrive", tick=0, job_id="j",
+                     world_size=2, stages=[]),                    # empty_stages
+            self.row(kind="arrive", tick=0, job_id="j", world_size=2,
+                     stages=["a"], sync_stages=["zz"]),           # sync not in
+            self.row(kind="arrive", tick=0, job_id="j", world_size=2,
+                     stages=["a"], hosts=["h0"]),                 # bad_hosts
+            self.row(kind="arrive", tick=0, job_id="j", world_size=2,
+                     stages=["a"],
+                     tasks=[{"role": "worker", "ranks": [0]},
+                            {"role": "ps", "ranks": [0]}]),       # overlap
+            self.row(kind="arrive", tick=0, job_id="j", world_size=2,
+                     stages=["a"],
+                     tasks=[{"role": "astronaut", "ranks": [0]}]),  # role
+            self.row(kind="fault", tick=0, job_id="j", family="gremlins",
+                     rank=0, delay_ms=5),                         # bad_family
+            self.row(kind="fault", tick=0, job_id="j", family="data",
+                     rank=0, delay_ms=-5),                        # bad_delay
+            self.row(kind="fault", tick=3, job_id="j", family="data",
+                     rank=0, delay_ms=5, until_tick=2),           # until<=tick
+        ]
+        tr = parse_trace("\n".join([good_arrive] + bad))
+        assert tr.stats.rows == 1 + len(bad)
+        assert tr.stats.accepted == 1
+        assert tr.stats.skipped == len(bad) + 1  # +1 missing_meta
+        assert len(tr.events) == 1
+        assert tr.stats.skip_reasons["bad_json"] == 1
+        assert tr.stats.skip_reasons["missing_meta"] == 1
+
+    def test_duplicate_meta_counted(self):
+        meta = json.dumps({"v": 1, "kind": "meta", "name": "x",
+                           "window_steps": 4, "ticks": 2})
+        tr = parse_trace("\n".join([meta, meta]))
+        assert tr.stats.skip_reasons["duplicate_meta"] == 1
+        assert tr.window_steps == 4 and tr.ticks == 2
+
+    def test_missing_meta_defaults_from_events(self):
+        tr = parse_trace(self.row(kind="depart", tick=5, job_id="j"))
+        assert tr.ticks == 6 and tr.window_steps == 8
+
+    def test_empty_and_blank_input(self):
+        assert parse_trace("").events == ()
+        assert parse_trace("\n\n  \n").stats.rows == 0
+
+
+class TestTruncationFuzz:
+    """Mirrors the wire-path fuzz: a trace file cut at EVERY byte offset
+    (and bit-flipped at a stride of offsets) must load as counted skips
+    and still replay — never an unhandled exception."""
+
+    def test_every_offset_truncation_loads(self):
+        raw = generate_trace(
+            jobs=4, ticks=6, window_steps=4, world_size=4, seed=1
+        ).encode()
+        whole = parse_trace(raw.decode())
+        for cut in range(len(raw) + 1):
+            tr = parse_trace(raw[:cut].decode("utf-8", errors="replace"))
+            # rows on complete lines before the cut still parse; the
+            # missing_meta skip is file-level, not tied to a row
+            assert tr.stats.accepted <= whole.stats.accepted
+            non_row = tr.stats.skip_reasons.get("missing_meta", 0)
+            assert tr.stats.rows == (
+                tr.stats.accepted + tr.stats.skipped - non_row
+            )
+
+    def test_corrupt_bytes_load_as_counted_skips(self):
+        raw = bytearray(generate_trace(
+            jobs=4, ticks=6, window_steps=4, world_size=4, seed=1
+        ).encode())
+        for off in range(0, len(raw), 11):
+            damaged = bytearray(raw)
+            damaged[off] ^= 0xFF
+            parse_trace(bytes(damaged).decode("utf-8", errors="replace"))
+
+    def test_truncated_file_replays_with_reported_skips(self, tmp_path):
+        raw = generate_trace(
+            jobs=3, ticks=4, window_steps=4, world_size=4, seed=1
+        ).encode()
+        # cut mid-row: the partial last line must surface in the report
+        cut = len(raw) - 20
+        p = tmp_path / "cut.jsonl"
+        p.write_bytes(raw[:cut])
+        tr = load_trace(p)
+        assert tr.stats.skipped >= 1
+        rep = replay_trace(tr)
+        assert rep.loader["skipped"] == tr.stats.skipped
+        assert rep.loader["skip_reasons"]
+
+    def test_all_garbage_trace_replays_to_empty_report(self):
+        tr = parse_trace("garbage\nmore garbage\n")
+        rep = replay_trace(tr)
+        assert rep.windows_replayed == 0
+        assert rep.loader["accepted"] == 0
+        assert rep.loader["skipped"] == 3  # 2 rows + missing_meta
+
+
+# ---------------------------------------------------------------------------
+# replay engine end-to-end
+# ---------------------------------------------------------------------------
+
+
+class TestReplayEngine:
+    def test_volume_and_acceptance(self, small_report):
+        r = small_report
+        assert r.windows_replayed > 0
+        assert r.packets_accepted == r.packets_sent == r.windows_replayed
+        assert r.snapshot["decode_errors"] == 0
+        assert r.snapshot["windows_seen"] == r.windows_replayed
+
+    def test_elastic_paths_exercised(self, small_report):
+        r = small_report
+        assert r.arrivals == PARAMS["jobs"]
+        assert r.rearrivals >= 1
+        assert r.departures >= 1
+        assert r.evictions >= 1
+        assert r.resizes >= 1
+        assert r.skipped_events == 0
+
+    def test_routing_contains_injected_faults(self, small_report):
+        r = small_report
+        assert r.scored_windows > 0
+        assert r.accuracy_top2 >= 0.9
+        for family, b in r.per_family.items():
+            assert family in FAULT_FAMILIES
+            assert b["top2"] <= b["scored"]
+        scored_fams = {f for f, b in r.per_family.items() if b["scored"]}
+        assert scored_fams <= set(SCORED_FAMILIES)
+
+    def test_report_dict_is_json_clean(self, small_report):
+        d = small_report.as_dict()
+        json.dumps(d)  # no numpy scalars / arrays leaked
+        for key in ("accuracy_top1", "accuracy_top2", "windows_per_s",
+                    "loader", "snapshot", "per_family"):
+            assert key in d
+
+    def test_replay_deterministic(self, small_trace, small_report):
+        again = replay_trace(small_trace)
+        stable = (
+            "windows_replayed", "packets_accepted", "scored_windows",
+            "hits_top1", "hits_top2", "ambiguous_windows", "arrivals",
+            "rearrivals", "resizes", "departures", "evictions",
+        )
+        a, b = small_report.as_dict(), again.as_dict()
+        for k in stable:
+            assert a[k] == b[k], k
+        assert a["per_family"] == b["per_family"]
+
+    def test_sfp1_wire_also_replays(self):
+        tr = parse_trace(generate_trace(
+            jobs=3, ticks=4, window_steps=8, world_size=8, seed=2,
+            elastic=False, hosts=False,
+        ))
+        rep = replay_trace(tr, wire="sfp1", compress="none")
+        assert rep.windows_replayed == 3 * 4
+        assert rep.packets_accepted == rep.packets_sent
+
+
+class TestReplayCli:
+    def test_synth_run_returns_report(self):
+        from repro.launch.replay import make_argparser, run
+
+        args = make_argparser().parse_args(
+            ["--synth", "--jobs", "3", "--ticks", "4", "--ranks", "8",
+             "--fault-every", "0"]
+        )
+        out = run(args)
+        assert out["windows_replayed"] > 0
+        assert out["wire"] == "sfp2"
+        json.dumps(out)
+
+    def test_trace_file_run_and_save_trace(self, tmp_path):
+        from repro.launch.replay import make_argparser, run
+
+        saved = tmp_path / "synth.jsonl"
+        args = make_argparser().parse_args(
+            ["--synth", "--jobs", "3", "--ticks", "4", "--ranks", "8",
+             "--fault-every", "0", "--save-trace", str(saved),
+             "--out", str(tmp_path / "report.json")]
+        )
+        first = run(args)
+        assert saved.exists()
+        args2 = make_argparser().parse_args(["--trace", str(saved)])
+        second = run(args2)
+        assert second["windows_replayed"] == first["windows_replayed"]
+
+
+# ---------------------------------------------------------------------------
+# fleet refresh padding regression
+# ---------------------------------------------------------------------------
+
+
+class TestRefreshPadding:
+    def test_padded_batch_outputs_match_unpadded(self):
+        """refresh_batched pads the job dimension to the next power of
+        two (bounded jit shapes under elastic churn); the padded rows
+        must never change the live jobs' outputs: a 3-job fleet (padded
+        to 4 internally) and a 4-job fleet whose 4th job duplicates the
+        3rd must agree bit-for-bit on the first three jobs."""
+        import dataclasses
+
+        from repro.fleet import FleetService
+        from repro.telemetry.packets import EvidencePacket
+
+        def pkt(seed):
+            rng = np.random.default_rng(seed)
+            return EvidencePacket(
+                window_index=0, schema_hash="h", stages=("s0", "s1", "s2"),
+                steps=4, world_size=2, gather_ok=True, labels=(),
+                routing_stages=("s0",), shares=(0.5, 0.3, 0.2),
+                gains=(0.1, 0.0, 0.0), co_critical_stages=(),
+                downgrade_reasons=(), leader_rank=0, exposed_total=1.0,
+                window=rng.exponential(0.02, size=(4, 2, 3)),
+            )
+
+        pkts = [pkt(i) for i in range(3)]
+        svc3 = FleetService(window_capacity=4)
+        svc3.submit_many(
+            [(f"j{i}", p) for i, p in enumerate(pkts)], refresh=True
+        )
+        svc4 = FleetService(window_capacity=4)
+        svc4.submit_many(
+            [(f"j{i}", p) for i, p in enumerate(pkts)]
+            + [("j3", dataclasses.replace(pkts[2], window=pkts[2].window))],
+            refresh=True,
+        )
+        a = {j.job_id: j for j in svc3.registry.jobs()}
+        b = {j.job_id: j for j in svc4.registry.jobs()}
+        for i in range(3):
+            np.testing.assert_array_equal(
+                a[f"j{i}"].whatif, b[f"j{i}"].whatif
+            )
+            np.testing.assert_array_equal(
+                a[f"j{i}"].kernel_shares, b[f"j{i}"].kernel_shares
+            )
+            assert a[f"j{i}"].kernel_leader == b[f"j{i}"].kernel_leader
+        # the padding replica mirrors its source job exactly
+        np.testing.assert_array_equal(b["j3"].whatif, b["j2"].whatif)
+
+    def test_single_job_group_still_refreshes(self):
+        from repro.fleet import FleetService
+        from repro.telemetry.packets import EvidencePacket
+
+        rng = np.random.default_rng(0)
+        p = EvidencePacket(
+            window_index=0, schema_hash="h", stages=("s0", "s1"),
+            steps=4, world_size=2, gather_ok=True, labels=(),
+            routing_stages=("s0",), shares=(0.5, 0.5), gains=(0.1, 0.0),
+            co_critical_stages=(), downgrade_reasons=(), leader_rank=0,
+            exposed_total=1.0, window=rng.exponential(0.02, size=(4, 2, 2)),
+        )
+        svc = FleetService(window_capacity=4)
+        svc.submit("solo", p)
+        assert svc.refresh_batched() == 1
+        job = svc.registry.jobs()[0]
+        assert job.whatif is not None and job.whatif.shape == (2, 2)
+        assert job.last_window is None  # consumed by the refresh

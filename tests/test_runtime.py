@@ -91,6 +91,85 @@ class TestCheckpoint:
         assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
 
 
+class TestCheckpointEdges:
+    def test_restore_explicit_step(self, tmp_path):
+        for s in (1, 2, 3):
+            save_checkpoint(str(tmp_path), s, {"x": np.full(2, float(s))})
+        out = restore_checkpoint(str(tmp_path), {"x": np.zeros(2)}, step=2)
+        assert out is not None and out[2] == 2
+        np.testing.assert_array_equal(out[0]["x"], np.full(2, 2.0))
+
+    def test_restore_explicit_missing_step_returns_none(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, {"x": np.zeros(2)})
+        assert restore_checkpoint(
+            str(tmp_path), {"x": np.zeros(2)}, step=99
+        ) is None
+
+    def test_template_leaf_count_mismatch_skips(self, tmp_path):
+        """A checkpoint whose tree no longer matches the template is
+        treated like corruption: skipped, falling back to an older
+        matching one instead of raising."""
+        save_checkpoint(str(tmp_path), 1, {"x": np.arange(2.0)})
+        save_checkpoint(str(tmp_path), 2, {"x": np.arange(2.0), "y": np.ones(1)})
+        out = restore_checkpoint(str(tmp_path), {"x": np.zeros(2)})
+        assert out is not None and out[2] == 1
+
+    def test_empty_and_absent_root(self, tmp_path):
+        assert restore_checkpoint(str(tmp_path), {"x": np.zeros(1)}) is None
+        assert latest_step(str(tmp_path)) is None
+        absent = str(tmp_path / "never_created")
+        assert restore_checkpoint(absent, {"x": np.zeros(1)}) is None
+        assert latest_step(absent) is None
+
+    def test_restore_recasts_dtype_and_shape(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, {"x": np.arange(6, dtype=np.float64)})
+        out = restore_checkpoint(
+            str(tmp_path), {"x": np.zeros((2, 3), dtype=np.float32)}
+        )
+        assert out is not None
+        assert out[0]["x"].dtype == np.float32 and out[0]["x"].shape == (2, 3)
+
+
+class TestDryrunSmoke:
+    def test_cli_skipped_cell_exits_clean(self, tmp_path):
+        """Drive the dryrun CLI end to end on a cell `shape_applicable`
+        rejects (no mesh build, no compile): it must write the cell
+        record with status=skipped and exit 0.  Runs in a subprocess
+        because the module overwrites XLA_FLAGS at import."""
+        import json
+        import subprocess
+        import sys
+
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "paper-gpt-125m", "--shape", "long_500k",
+             "--mesh", "single", "--skip-production",
+             "--out", str(tmp_path)],
+            capture_output=True, text=True, timeout=300,
+            env={**os.environ, "JAX_PLATFORMS": "cpu",
+                 "PYTHONPATH": os.pathsep.join(
+                     filter(None, [os.environ.get("PYTHONPATH", ""), "src"])
+                 )},
+        )
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        rows = [f for f in os.listdir(tmp_path) if f.endswith(".json")]
+        assert len(rows) == 1
+        with open(tmp_path / rows[0]) as f:
+            row = json.load(f)
+        assert row["status"] == "skipped" and row["reason"]
+
+    def test_run_cell_skip_reason_is_stable(self):
+        """`run_cell` refuses inapplicable cells before any mesh work
+        (importable without the XLA_FLAGS side effect mattering: the
+        skip path never touches devices)."""
+        from repro.launch.dryrun import run_cell
+
+        row = run_cell("paper-gpt-125m", "long_500k", "single",
+                       skip_production=True)
+        assert row["status"] == "skipped"
+        assert "sub_quadratic" in row["reason"] or row["reason"]
+
+
 class TestOptimizer:
     def test_adamw_reduces_quadratic_loss(self):
         cfg = AdamWConfig(peak_lr=0.1, warmup_steps=1, decay_steps=100,

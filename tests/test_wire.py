@@ -340,6 +340,68 @@ class TestIngestStats:
         assert ing.stats.predecoded == 1
 
 
+class TestHeterogeneousVocabularies:
+    def test_two_jobs_different_s_through_one_ingest(self):
+        """A fleet ingest carries jobs that disagree on the stage
+        vocabulary (different S, different names — the replay harness's
+        parameter-server vs. worker asymmetry): each packet must decode
+        against its own declared stages with the window shape intact."""
+        a = golden_packet(n=4, r=2, s=4)
+        b = dataclasses.replace(
+            golden_packet(n=4, r=2, s=6),
+            stages=("data", "fwd", "bwd", "opt", "ps.push", "other"),
+            schema_hash="sh-b",
+            shares=(0.3, 0.2, 0.2, 0.1, 0.1, 0.1),
+            gains=(0.05,) * 6,
+        )
+        assert len(a.stages) == 4 and len(b.stages) == 6
+        ing = FleetIngest()
+        wires = [
+            encode_packet(a, compress="int8"),
+            encode_packet(b, compress="int8"),
+            encode_packet(a, compress="none"),
+            encode_packet(b, compress="int8.delta"),
+        ]
+        out = ing.decode_many(wires)
+        assert all(p is not None for p in out)
+        for got, want in zip(out, (a, b, a, b)):
+            assert got.stages == want.stages
+            assert got.schema_hash == want.schema_hash
+            assert got.window.shape == (4, 2, len(want.stages))
+        assert ing.stats.decode_errors == 0
+
+    def test_hetero_jobs_fold_and_route_in_one_service(self):
+        """The same two vocabularies folded into one FleetService: both
+        register, refresh through separate kernel shape groups, and the
+        snapshot counts both windows."""
+        from repro.fleet import FleetService
+
+        a = golden_packet(n=4, r=2, s=4)
+        b = dataclasses.replace(
+            golden_packet(n=4, r=2, s=6),
+            stages=("data", "fwd", "bwd", "opt", "ps.push", "other"),
+            schema_hash="sh-b",
+            shares=(0.3, 0.2, 0.2, 0.1, 0.1, 0.1),
+            gains=(0.05,) * 6,
+        )
+        svc = FleetService(window_capacity=4)
+        accepted = svc.submit_many(
+            [("job-a", encode_packet(a, compress="int8")),
+             ("job-b", encode_packet(b, compress="int8"))],
+            refresh=True,
+        )
+        assert accepted == 2
+        snap = svc.snapshot()
+        assert snap["jobs"] == 2 and snap["windows_seen"] == 2
+        jobs = {j.job_id: j for j in svc.registry.jobs()}
+        assert jobs["job-a"].stages != jobs["job-b"].stages
+        # both shape groups went through the batched kernel refresh
+        assert jobs["job-a"].whatif is not None
+        assert jobs["job-b"].whatif is not None
+        assert jobs["job-a"].whatif.shape == (4, 2)
+        assert jobs["job-b"].whatif.shape == (6, 2)
+
+
 # ---------------------------------------------------------------------------
 # golden SFP1 fixtures: the legacy byte format can never drift silently
 # ---------------------------------------------------------------------------

@@ -32,6 +32,7 @@ MODULES = [
     "repro.core",
     "repro.fleet",
     "repro.incidents",
+    "repro.replay",
     "repro.kernels.frontier",
 ]
 API_MD = pathlib.Path(__file__).resolve().parent.parent / "docs" / "api.md"
