@@ -13,6 +13,16 @@ import numpy as np
 
 RESULTS: list[tuple[str, float, str]] = []
 
+#: kernel refresh route for fleet-driving benchmark modules ("fused" or
+#: "four-dispatch").  benchmarks/run.py sets this from --tick-path and
+#: stamps it into every artifact so regression baselines only ever
+#: compare like with like.
+TICK_PATH = "fused"
+
+
+def fused_tick_path() -> bool:
+    return TICK_PATH == "fused"
+
 #: default artifact directory (repo-relative); benchmarks/run.py writes
 #: one BENCH_<module>.json per module here unless --artifacts overrides.
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")

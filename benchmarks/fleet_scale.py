@@ -28,6 +28,7 @@ from repro.sim.scenarios import ddp_scenario
 from repro.telemetry.packets import encode_packet, from_diagnosis
 from repro.core.windows import WindowAggregator
 
+from . import common
 from .common import emit, time_us
 
 
@@ -54,7 +55,9 @@ def bench_ingest(jobs: int = 64, ranks: int = 32, window: int = 20) -> None:
     wires = _packets(jobs, ranks, window)
 
     def ingest_round() -> None:
-        svc = FleetService(window_capacity=window)
+        svc = FleetService(
+            window_capacity=window, fused=common.fused_tick_path()
+        )
         for j, wire in enumerate(wires):
             svc.submit(f"job-{j}", wire)
         svc.tick()

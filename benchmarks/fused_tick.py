@@ -1,0 +1,183 @@
+"""Fused fleet-tick megakernel vs the four-dispatch reference path.
+
+Run:  PYTHONPATH=src python -m benchmarks.fused_tick [--smoke]
+
+Two measurements and one non-negotiable contract:
+
+  1. throughput: one `fused_fleet_tick` dispatch (single HBM read of the
+     stacked [J, N, R, S] windows feeding all four accumulator families)
+     vs `four_dispatch_tick` (frontier + what-if + regimes +
+     co-activation, each re-reading the windows).  Acceptance at the
+     fleet shape J=64, R=128: fused >= 2x (full mode only — `--smoke`
+     shrinks the tensor for CI and reports without the floor);
+  2. service tick: `FleetService.refresh_batched` end to end on a dirty
+     cohort, fused vs four-dispatch route (staging + epilog + registry
+     writeback included);
+  3. parity: on every tested shape the fused packet is asserted
+     BIT-EXACT against the four-dispatch path — in both modes; a fast
+     wrong kernel must fail the benchmark, not ship a speedup.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.fleet import FleetService
+from repro.kernels.frontier import four_dispatch_tick, fused_fleet_tick
+from repro.telemetry.packets import EvidencePacket
+
+from .common import emit, time_us
+
+_FAMILIES = ("frontier", "whatif", "regimes", "coact")
+
+# (J, N, R, S) shapes: the headline fleet shape plus the degenerate
+# corners the parity contract must hold on
+FULL_SHAPE = (64, 8, 128, 6)
+SMOKE_SHAPE = (8, 6, 16, 5)
+PARITY_SHAPES = [(1, 4, 1, 4), (3, 6, 9, 5), (2, 3, 129, 4)]
+
+
+def _case(shape, *, num_hosts=4, seed=0):
+    j, n, r, s = shape
+    rng = np.random.default_rng(seed)
+    d = rng.exponential(1.0, shape).astype(np.float32)
+    hosts = rng.integers(0, num_hosts, (j, r))
+    kw = dict(
+        sync_stages=(1, s - 1), host_index=hosts, num_hosts=num_hosts
+    )
+    return d, kw
+
+
+def _assert_parity(fused, four, context):
+    for fam in _FAMILIES:
+        pf, pg = getattr(fused, fam), getattr(four, fam)
+        assert (pf is None) == (pg is None), f"{context}: {fam} presence"
+        if pf is None:
+            continue
+        for field in pf._fields:
+            a = np.asarray(getattr(pf, field))
+            b = np.asarray(getattr(pg, field))
+            assert a.shape == b.shape and np.array_equal(
+                a, b, equal_nan=True
+            ), f"{context}: {fam}.{field} diverged — fused tick is WRONG"
+
+
+def bench_parity(shapes) -> None:
+    for shape in shapes:
+        d, kw = _case(shape, seed=sum(shape))
+        _assert_parity(
+            fused_fleet_tick(d, **kw),
+            four_dispatch_tick(d, **kw),
+            f"shape {shape}",
+        )
+        emit(
+            "fused_tick/parity_%dx%dx%dx%d" % shape, 0.0, "bit_exact=1"
+        )
+
+
+def bench_kernel(shape) -> float:
+    j, n, r, s = shape
+    d, kw = _case(shape, num_hosts=16, seed=1)
+    # parity first — on the exact tensors being timed
+    fused_pkt = fused_fleet_tick(d, **kw)
+    _assert_parity(fused_pkt, four_dispatch_tick(d, **kw), f"timed {shape}")
+
+    def _run_fused():
+        p = fused_fleet_tick(d, **kw)
+        np.asarray(p.frontier.frontier)
+
+    def _run_four():
+        p = four_dispatch_tick(d, **kw)
+        np.asarray(p.frontier.frontier)
+
+    fused_us = time_us(_run_fused, repeat=5)
+    four_us = time_us(_run_four, repeat=5)
+    speedup = four_us / fused_us
+    emit(
+        f"fused_tick/kernel_{j}x{n}x{r}x{s}",
+        fused_us,
+        f"four_dispatch_us={four_us:.0f} speedup={speedup:.2f}x "
+        f"families=4 dispatches=1v4",
+    )
+    return speedup
+
+
+def _window_packet(d, stages, sync, widx):
+    return EvidencePacket(
+        window_index=widx, schema_hash="bench", stages=stages,
+        steps=d.shape[0], world_size=d.shape[1], gather_ok=True,
+        labels=(), routing_stages=(), shares=(), gains=(),
+        co_critical_stages=(), downgrade_reasons=(), leader_rank=-1,
+        sync_stages=sync, window=d,
+    )
+
+
+def bench_service(jobs: int, *, n=8, r=32, s=6) -> float:
+    """refresh_batched end to end: fused vs four-dispatch route."""
+    stages = tuple(f"s{i}" for i in range(s))
+    sync = (stages[1], stages[-1])
+    rng = np.random.default_rng(2)
+    windows = [
+        rng.exponential(0.05, (n, r, s)).astype(np.float64)
+        for _ in range(jobs)
+    ]
+
+    def _tick(svc: FleetService, widx: int) -> None:
+        for i, w in enumerate(windows):
+            svc.registry.update(
+                f"job-{i}", _window_packet(w, stages, sync, widx), widx
+            )
+        assert svc.refresh_batched() == jobs
+
+    svc_f, svc_u = FleetService(fused=True), FleetService(fused=False)
+    _tick(svc_f, 0)  # warm both jit caches
+    _tick(svc_u, 0)
+    tick = [1]
+
+    def _run(svc):
+        _tick(svc, tick[0])
+        tick[0] += 1
+
+    fused_us = time_us(lambda: _run(svc_f), repeat=7)
+    four_us = time_us(lambda: _run(svc_u), repeat=7)
+    speedup = four_us / fused_us
+    emit(
+        f"fused_tick/service_refresh_{jobs}j_{n}x{r}x{s}",
+        fused_us,
+        f"four_dispatch_us={four_us:.0f} speedup={speedup:.2f}x",
+    )
+    # the two routes must leave identical registry state
+    for i in range(jobs):
+        jf = svc_f.registry.get(f"job-{i}")
+        ju = svc_u.registry.get(f"job-{i}")
+        assert np.array_equal(jf.kernel_shares, ju.kernel_shares)
+        assert np.array_equal(jf.whatif, ju.whatif)
+    return speedup
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small tensors for CI; parity gates still "
+                         "enforced, the 2x floor is full-size only")
+    args, _ = ap.parse_known_args()
+
+    bench_parity(PARITY_SHAPES)
+    shape = SMOKE_SHAPE if args.smoke else FULL_SHAPE
+    k = bench_kernel(shape)
+    svc = bench_service(4 if args.smoke else 16)
+
+    # acceptance: the megakernel's reason to exist is the single HBM
+    # read — at the fleet shape it must be >= 2x the four-dispatch path
+    if not args.smoke:
+        assert k >= 2.0, (
+            f"fused tick below the 2x gate at {FULL_SHAPE}: {k:.2f}x"
+        )
+        assert svc >= 1.0, (
+            f"fused service refresh slower than four-dispatch: {svc:.2f}x"
+        )
+
+
+if __name__ == "__main__":
+    main()

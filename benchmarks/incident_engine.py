@@ -46,6 +46,7 @@ from repro.sim import simulate
 from repro.sim.scenarios import shared_host_fleet
 from repro.telemetry.packets import encode_packet, from_diagnosis
 
+from . import common
 from .common import emit, time_us
 
 
@@ -62,7 +63,10 @@ def drive_fleet(seed: int, *, jobs: int = 6, shared: int = 3,
         jobs=jobs, shared_jobs=shared, steps=steps, seed=seed
     )
     engine = IncidentEngine()
-    svc = FleetService(window_capacity=window, incidents=engine)
+    svc = FleetService(
+        window_capacity=window, incidents=engine,
+        fused=common.fused_tick_path(),
+    )
     sims = {j: simulate(sc) for j, sc in fleet.scenarios.items()}
     aggs = {
         j: WindowAggregator(sc.schema(), window_steps=window)

@@ -33,6 +33,7 @@ MODULES = [
     ("regime_detection", "temporal regime classification + batched route"),
     ("incident_engine", "common-cause attribution + escalation budget law"),
     ("trace_replay", "trace-driven fleet replay: scale + routing accuracy"),
+    ("fused_tick", "fused fleet-tick megakernel vs four-dispatch + parity"),
 ]
 
 
@@ -41,9 +42,16 @@ def main() -> None:
     p.add_argument("--only", default="")
     p.add_argument("--artifacts", default="",
                    help="write BENCH_<name>.json per module into this dir")
+    p.add_argument("--tick-path", default="fused",
+                   choices=["fused", "four-dispatch"],
+                   help="fleet refresh route used by fleet-driving modules; "
+                        "recorded in artifact metadata so regression "
+                        "baselines compare like with like")
     # unknown flags (e.g. --smoke) stay on sys.argv for the modules'
     # own parse_known_args
     args, _ = p.parse_known_args()
+    common.TICK_PATH = args.tick_path
+    smoke = "--smoke" in sys.argv
     failures = 0
     for name, desc in MODULES:
         if args.only and args.only != name:
@@ -61,7 +69,11 @@ def main() -> None:
         if args.artifacts:
             path = common.write_artifact(
                 name, common.RESULTS[row0:],
-                extra={"elapsed_s": round(time.time() - t0, 1)},
+                extra={
+                    "elapsed_s": round(time.time() - t0, 1),
+                    "tick_path": common.TICK_PATH,
+                    "smoke": smoke,
+                },
                 out_dir=args.artifacts,
             )
             print(f"# artifact: {path}", flush=True)

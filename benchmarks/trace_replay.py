@@ -32,6 +32,7 @@ import argparse
 
 from repro.replay import generate_trace, parse_trace, replay_trace
 
+from . import common
 from .common import emit
 
 FULL = dict(jobs=320, ticks=440, window_steps=8, world_size=8, seed=7)
@@ -41,7 +42,7 @@ SMOKE = dict(jobs=12, ticks=14, window_steps=8, world_size=8, seed=7)
 def bench_replay(params: dict):
     text = generate_trace(**params)
     trace = parse_trace(text, name="bench")
-    report = replay_trace(trace)
+    report = replay_trace(trace, fused=common.fused_tick_path())
     per_window_us = 1e6 * report.elapsed_s / max(report.windows_replayed, 1)
     emit(
         f"trace_replay/replay_{params['jobs']}jx{params['ticks']}t",
@@ -83,7 +84,7 @@ def bench_fuzz(text: str, *, corrupt_stride: int = 37) -> int:
     for cut in range(1, len(raw), max(1, len(raw) // 8)):
         try:
             t = parse_trace(raw[:cut].decode("utf-8", errors="replace"))
-            rep = replay_trace(t)
+            rep = replay_trace(t, fused=common.fused_tick_path())
             assert rep.loader["rows"] == t.stats.rows
             loads += 1
         except Exception:

@@ -32,6 +32,7 @@ __all__ = [
     "StreamingRegimes",
     "StreamingWindowState",
     "StreamingWhatIf",
+    "WindowStager",
 ]
 
 
@@ -515,3 +516,54 @@ class StreamingRegimes:
             weights=persistence_weight(stats, self.params),
             params=self.params,
         )
+
+
+class WindowStager:
+    """Reusable host staging buffers feeding the fused fleet tick.
+
+    Every kernel refresh stacks the dirty jobs' [N, R, S] windows into
+    one [J, N, R, S] tensor, pads J to the next power of two (bounded
+    jit shapes under elastic churn), and ships it to the device.  Done
+    naively that is a fresh `np.stack` allocation per tick; under buffer
+    donation the *device* copy is consumed by the kernel, so the host
+    staging array is the only piece that can be recycled.  The stager
+    keeps one host buffer per padded shape and refills it in place —
+    steady-state ticks allocate nothing on the host side.
+
+    The padding rows replicate the last live window (per-job accounting
+    is independent along the kernel's grid axis, so live outputs are
+    unchanged; callers slice `[:len(windows)]` from the results).
+    """
+
+    def __init__(self, max_shapes: int = 32):
+        # shape -> staging buffer; tiny LRU so a long-lived service
+        # under pathological shape churn stays bounded.
+        self._buffers: dict[tuple, np.ndarray] = {}
+        self.max_shapes = int(max_shapes)
+
+    @staticmethod
+    def padded_jobs(j_live: int) -> int:
+        """Next power of two >= j_live (the J the kernel will see)."""
+        return 1 << (int(j_live) - 1).bit_length()
+
+    def stage(self, windows) -> np.ndarray:
+        """Pack `windows` (same-shape [N, R, S] float32 arrays) into the
+        recycled [J_pad, N, R, S] staging buffer and return it."""
+        if not windows:
+            raise ValueError("stage() needs at least one window")
+        j_live = len(windows)
+        key = (self.padded_jobs(j_live), *windows[0].shape)
+        buf = self._buffers.pop(key, None)
+        if buf is None:
+            if len(self._buffers) >= self.max_shapes:
+                # evict the least-recently-staged shape
+                self._buffers.pop(next(iter(self._buffers)))
+            buf = np.empty(key, dtype=np.float32)
+        self._buffers[key] = buf  # re-insert: most recently used
+        for i, w in enumerate(windows):
+            buf[i] = w
+        buf[j_live:] = buf[j_live - 1]
+        return buf
+
+    def clear(self) -> None:
+        self._buffers.clear()

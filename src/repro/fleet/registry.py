@@ -404,6 +404,27 @@ class FleetRegistry:
     def jobs(self) -> list[JobState]:
         return list(self._jobs.values())
 
+    def dirty_groups(self) -> dict[tuple, list[JobState]]:
+        """Dirty window-carrying jobs grouped by batching key.
+
+        Dirty = a raw window arrived since the last kernel refresh (the
+        registry nulls `kernel_shares` on ingest).  Jobs are grouped by
+        (window shape, declared sync profile): windows stack into one
+        [J, N, R, S] tensor only when shapes agree, and the sync
+        segmentation is a static kernel argument that must match within
+        a batch.  Degraded jobs are skipped — their telemetry is not
+        trusted enough to spend kernel time on."""
+        groups: dict[tuple, list[JobState]] = {}
+        for job in self._jobs.values():
+            if (
+                job.last_window is not None
+                and not job.degraded
+                and job.kernel_shares is None
+            ):
+                key = (job.last_window.shape, job.sync_index_tuple())
+                groups.setdefault(key, []).append(job)
+        return groups
+
     def __len__(self) -> int:
         return len(self._jobs)
 

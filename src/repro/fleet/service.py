@@ -24,11 +24,11 @@ pin memory).
 from __future__ import annotations
 
 import dataclasses
-from collections import defaultdict
 from typing import TYPE_CHECKING, Iterable
 
 import numpy as np
 
+from ..core.streaming import WindowStager
 from ..telemetry.packets import EvidencePacket
 from .ingest import FleetIngest
 from .registry import FleetRegistry, JobState
@@ -82,6 +82,7 @@ class FleetService:
         max_jobs: int = 100_000,
         regime_windows: int = 4,
         incidents: "IncidentEngine | None" = None,
+        fused: bool = True,
     ):
         self.ingest = FleetIngest()
         self.registry = FleetRegistry(
@@ -91,6 +92,14 @@ class FleetService:
             max_jobs=max_jobs,
             regime_windows=regime_windows,
         )
+        #: True routes `refresh_batched` through the fused megakernel
+        #: (`fused_fleet_tick`: one dispatch, one HBM read of the stacked
+        #: windows); False keeps the four-dispatch reference composition.
+        #: Flip to False when triaging a suspected kernel miscompile —
+        #: the two paths are bit-identical by contract, so any divergence
+        #: between them IS the bug report.
+        self.fused = bool(fused)
+        self._stager = WindowStager()
         #: optional incident tier (`repro.incidents.IncidentEngine`):
         #: when attached, every `tick()` feeds it this round's route
         #: entries, evictions, and per-job activity series, and packets'
@@ -178,9 +187,11 @@ class FleetService:
 
     # -- batched kernel refresh --------------------------------------------
 
-    def refresh_batched(self, *, min_jobs: int = 1) -> int:
-        """Re-account every *dirty* window-carrying job through the fused
-        fleet kernel, grouped by window shape.  Returns jobs refreshed.
+    def refresh_batched(
+        self, *, min_jobs: int = 1, fused: bool | None = None
+    ) -> int:
+        """Re-account every *dirty* window-carrying job through the fleet
+        tick kernel, grouped by window shape.  Returns jobs refreshed.
 
         Dirty = a new raw window arrived since the last refresh (the
         registry nulls `kernel_shares` on ingest), so per-tick cost scales
@@ -190,46 +201,49 @@ class FleetService:
         prefer leaving tiny groups to their streaming state can raise
         `min_jobs`.
 
-        Each refresh also runs the batched counterfactual route
-        (`fleet_whatif_matrix`) on the same stacked tensor, so every
+        Each refresh runs the frontier accounting AND the batched
+        counterfactual route on the same stacked tensor, so every
         refreshed job carries a dense [S, R] recoverable-time matrix —
-        the evidence `route(k)` ranks by.  The counterfactual replays each
-        job's *declared* sync profile (packet `sync_stages`), so jobs are
-        grouped by (window shape, sync profile) — the sync segmentation is
-        a static kernel argument and must match within a batch.
+        the evidence `route(k)` ranks by.  With `fused` (default: the
+        service flag) both come out of ONE `fused_fleet_tick` dispatch
+        that reads the window tensor from HBM once; `fused=False` keeps
+        the four-dispatch reference composition (`four_dispatch_tick`),
+        bit-identical by contract.  The counterfactual replays each job's
+        *declared* sync profile (packet `sync_stages`), so jobs are
+        grouped by (window shape, sync profile) — the sync segmentation
+        is a static kernel argument and must match within a batch.
         """
-        from ..kernels.frontier import fleet_frontier_window, fleet_whatif_matrix
+        from ..kernels.frontier import four_dispatch_tick, fused_fleet_tick
 
-        groups: dict[tuple, list[JobState]] = defaultdict(list)
-        for job in self.registry.jobs():
-            if (
-                job.last_window is not None
-                and not job.degraded
-                and job.kernel_shares is None
-            ):
-                key = (job.last_window.shape, job.sync_index_tuple())
-                groups[key].append(job)
-
+        use_fused = self.fused if fused is None else bool(fused)
         refreshed = 0
-        for (shape, sync_idx), jobs in sorted(groups.items()):
+        for (shape, sync_idx), jobs in sorted(
+            self.registry.dirty_groups().items()
+        ):
             if len(jobs) < min_jobs:
                 continue
-            stacked = np.stack([j.last_window for j in jobs])
-            # Pad the job dimension to the next power of two (replicating
-            # the last job's window) so elastic fleets — where the live
-            # job count J drifts every tick — hit a bounded set of
-            # compiled kernel shapes instead of one ~seconds-long jit
-            # compile per distinct J.  Per-job accounting is independent
-            # along the grid dimension, so the first-J outputs are
-            # unchanged; the padded rows are sliced away below.
-            j_live = stacked.shape[0]
-            j_pad = 1 << (j_live - 1).bit_length()
-            if j_pad > j_live:
-                stacked = np.concatenate(
-                    [stacked, np.repeat(stacked[-1:], j_pad - j_live, axis=0)]
+            # Stage into the recycled host buffer: the job dimension is
+            # padded to the next power of two (replicating the last job's
+            # window) so elastic fleets — where the live job count J
+            # drifts every tick — hit a bounded set of compiled kernel
+            # shapes instead of one ~seconds-long jit compile per
+            # distinct J.  Per-job accounting is independent along the
+            # grid dimension, so the first-J outputs are unchanged; the
+            # padded rows are sliced away below.
+            j_live = len(jobs)
+            stacked = self._stager.stage([j.last_window for j in jobs])
+            if use_fused:
+                # one dispatch, one HBM read; the device input buffer is
+                # donated — consumed by the kernel, never copied back.
+                tick = fused_fleet_tick(
+                    stacked, sync_stages=sync_idx,
+                    with_regimes=False, donate=True,
                 )
-            pkt = fleet_frontier_window(stacked)
-            wif = fleet_whatif_matrix(stacked, sync_stages=sync_idx)
+            else:
+                tick = four_dispatch_tick(
+                    stacked, sync_stages=sync_idx, with_regimes=False,
+                )
+            pkt, wif = tick.frontier, tick.whatif
             shares = np.asarray(pkt.shares)[:j_live]   # [J, S]
             gains = np.asarray(pkt.gains)[:j_live]     # [J, S]
             leader = np.asarray(pkt.leader)[:j_live]   # [J, N, S]

@@ -42,6 +42,11 @@ def make_argparser() -> argparse.ArgumentParser:
     p.add_argument("--evict-after", type=int, default=3)
     p.add_argument("--incidents", action="store_true",
                    help="attach the durable incident tier during replay")
+    p.add_argument("--tick-path", default="fused",
+                   choices=["fused", "four-dispatch"],
+                   help="kernel refresh route: the fused megakernel or "
+                        "the four-dispatch reference (bit-identical; "
+                        "four-dispatch is the triage fallback)")
     # synthetic-trace shape (ignored with --trace)
     p.add_argument("--jobs", type=int, default=12)
     p.add_argument("--ticks", type=int, default=16)
@@ -74,10 +79,12 @@ def run(args) -> dict:
     report = replay_trace(
         trace, wire=args.wire, compress=args.compress, top_k=args.top_k,
         evict_after=args.evict_after, incidents=args.incidents,
+        fused=args.tick_path == "fused",
     )
     out = report.as_dict()
     out["wire"] = args.wire
     out["compress"] = args.compress
+    out["tick_path"] = args.tick_path
     return out
 
 

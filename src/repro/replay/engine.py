@@ -233,6 +233,7 @@ def replay_trace(
     min_scored_s: float = 0.05,
     incidents: bool = False,
     service: FleetService | None = None,
+    fused: bool = True,
 ) -> ReplayReport:
     """Replay `trace` through a `FleetService`; see the module docstring.
 
@@ -243,6 +244,10 @@ def replay_trace(
     `incidents=True` attaches an `IncidentEngine` so the durable
     incident tier runs over the replay too.  Pass `service` to replay
     into a caller-owned (pre-configured or shared) service instance.
+    `fused` picks the kernel refresh path (megakernel vs the
+    four-dispatch reference — bit-identical by contract, so the
+    resulting reports differ only in wall-clock fields); it is ignored
+    when `service` is caller-owned.
     """
     report = ReplayReport(
         trace_name=trace.name,
@@ -265,6 +270,7 @@ def replay_trace(
             window_capacity=trace.window_steps,
             evict_after=evict_after,
             incidents=engine,
+            fused=fused,
         )
 
     live: dict[str, _LiveJob] = {}

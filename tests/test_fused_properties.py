@@ -1,0 +1,126 @@
+"""Property-based tests (hypothesis) for the fused fleet-tick megakernel:
+on RANDOM window tensors, sync masks, and host topologies the fused tick
+must stay bit-identical to the four-dispatch path (every family, every
+field), its outputs must be equivariant under permutation of the job
+axis (per-job accounting is independent along the grid dimension), and a
+fused replay must reproduce the unfused `ReplayReport` exactly.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.frontier import four_dispatch_tick, fused_fleet_tick
+from repro.replay import generate_trace, parse_trace, replay_trace
+
+_FAMILIES = ("frontier", "whatif", "regimes", "coact")
+
+# one compiled-shape pool: hypothesis draws data/syncs/topology freely,
+# but shapes come from a small set so the interpreter-mode Pallas jit
+# cache stays warm across examples (wall-clock, not correctness)
+_SHAPES = [(1, 3, 2, 3), (2, 4, 5, 4), (3, 2, 9, 5)]
+
+
+@st.composite
+def tick_case(draw):
+    j, n, r, s = draw(st.sampled_from(_SHAPES))
+    flat = draw(
+        st.lists(
+            st.floats(
+                min_value=0.0, max_value=50.0,
+                allow_nan=False, allow_infinity=False, width=32,
+            ),
+            min_size=j * n * r * s, max_size=j * n * r * s,
+        )
+    )
+    d = np.asarray(flat, np.float32).reshape(j, n, r, s)
+    sync = tuple(sorted(draw(
+        st.sets(st.integers(min_value=0, max_value=s - 1), max_size=s)
+    )))
+    num_hosts = draw(st.integers(min_value=1, max_value=3))
+    hosts = np.asarray(
+        draw(st.lists(
+            st.integers(min_value=0, max_value=num_hosts - 1),
+            min_size=j * r, max_size=j * r,
+        )),
+        np.int64,
+    ).reshape(j, r)
+    return d, sync, hosts, num_hosts
+
+
+def _assert_tick_equal(got, want):
+    for fam in _FAMILIES:
+        pg, pw = getattr(got, fam), getattr(want, fam)
+        assert (pg is None) == (pw is None)
+        if pg is None:
+            continue
+        for field in pg._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(pg, field)),
+                np.asarray(getattr(pw, field)),
+                err_msg=f"{fam}.{field}",
+            )
+
+
+class TestFusedTickProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(case=tick_case())
+    def test_fused_equals_four_dispatch_bitwise(self, case):
+        d, sync, hosts, num_hosts = case
+        fused = fused_fleet_tick(
+            d, sync_stages=sync, host_index=hosts, num_hosts=num_hosts
+        )
+        four = four_dispatch_tick(
+            d, sync_stages=sync, host_index=hosts, num_hosts=num_hosts
+        )
+        _assert_tick_equal(fused, four)
+
+    @settings(max_examples=15, deadline=None)
+    @given(case=tick_case(), seed=st.integers(min_value=0, max_value=2**31))
+    def test_job_axis_permutation_equivariant(self, case, seed):
+        # permuting jobs permutes every per-job output identically and
+        # leaves the job-count-valued co-activation statistics unchanged
+        d, sync, hosts, num_hosts = case
+        j = d.shape[0]
+        perm = np.random.default_rng(seed).permutation(j)
+        base = fused_fleet_tick(
+            d, sync_stages=sync, host_index=hosts, num_hosts=num_hosts
+        )
+        shuf = fused_fleet_tick(
+            d[perm], sync_stages=sync, host_index=hosts[perm],
+            num_hosts=num_hosts,
+        )
+        for fam in ("frontier", "whatif", "regimes"):
+            pb, ps = getattr(base, fam), getattr(shuf, fam)
+            for field in pb._fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(pb, field))[perm],
+                    np.asarray(getattr(ps, field)),
+                    err_msg=f"{fam}.{field} under permutation {perm}",
+                )
+        # co-activation reduces over jobs: counts are permutation-invariant
+        for field in base.coact._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(base.coact, field)),
+                np.asarray(getattr(shuf.coact, field)),
+                err_msg=f"coact.{field} under permutation {perm}",
+            )
+
+    @settings(max_examples=3, deadline=None)
+    @given(
+        seed=st.integers(min_value=0, max_value=100),
+        fault_every=st.sampled_from([0, 2]),
+    )
+    def test_replay_report_identical(self, seed, fault_every):
+        text = generate_trace(
+            jobs=4, ticks=6, window_steps=5, world_size=6, seed=seed,
+            fault_every=fault_every,
+        )
+        rep_f = replay_trace(parse_trace(text, name="p"), fused=True)
+        rep_u = replay_trace(parse_trace(text, name="p"), fused=False)
+        df, du = rep_f.as_dict(), rep_u.as_dict()
+        for k in ("elapsed_s", "windows_per_s"):
+            df.pop(k, None)
+            du.pop(k, None)
+        assert df == du

@@ -1,0 +1,227 @@
+"""Fail CI when a fresh benchmark run regresses past the checked-in
+baselines.
+
+    PYTHONPATH=src python tools/check_bench_regression.py --fresh DIR
+    PYTHONPATH=src python tools/check_bench_regression.py --fresh DIR \
+        --update-baselines
+    python tools/check_bench_regression.py --self-test
+
+Compares every ``BENCH_<name>.json`` in ``--fresh`` against the same
+file under ``--baseline`` (default ``benchmarks/artifacts/``, the
+checked-in perf trajectory).  For each metric row present in both, the
+fresh ``us_per_call`` must not exceed the baseline by more than
+``--threshold`` (default 15%).  Zero-cost rows (parity gates and other
+pure assertions that emit ``us_per_call == 0``) are compared for
+presence only.
+
+Comparisons are strictly like-with-like: if the artifacts' metadata
+disagree on ``tick_path`` (fused vs four-dispatch refresh route) or on
+``smoke`` (reduced-shape run), the pair is skipped with a note instead
+of producing a meaningless delta.  Metrics that exist only in the
+baseline are reported as MISSING (a silently dropped benchmark row is
+a regression in coverage); metrics that are new in the fresh run pass
+and are flagged for baseline refresh.
+
+``--update-baselines`` copies every fresh artifact over the baseline
+dir (use after an intentional perf change, then commit the diff).
+``--self-test`` runs the tool against synthetic artifacts — including
+an injected 20% regression that MUST fail — and exits non-zero if the
+gate logic itself is broken.
+
+Exit code 0 iff no metric regressed and nothing went missing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+import tempfile
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_BASELINE = REPO / "benchmarks" / "artifacts"
+
+#: metadata keys that must match for a baseline/fresh pair to be
+#: comparable at all
+_VARIANT_KEYS = ("tick_path", "smoke")
+
+
+def _load(path: pathlib.Path) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _metrics(doc: dict) -> dict[str, float]:
+    return {m["name"]: float(m["us_per_call"]) for m in doc["metrics"]}
+
+
+def _variant(doc: dict) -> tuple:
+    return tuple(doc.get(k) for k in _VARIANT_KEYS)
+
+
+def compare(
+    fresh_dir: pathlib.Path,
+    baseline_dir: pathlib.Path,
+    threshold: float,
+) -> tuple[list[str], list[str]]:
+    """Returns (failures, notes).  Empty failures == gate passes."""
+    failures: list[str] = []
+    notes: list[str] = []
+    fresh_files = sorted(fresh_dir.glob("BENCH_*.json"))
+    if not fresh_files:
+        failures.append(f"no BENCH_*.json artifacts found in {fresh_dir}")
+        return failures, notes
+    for fpath in fresh_files:
+        bpath = baseline_dir / fpath.name
+        if not bpath.exists():
+            notes.append(f"NEW      {fpath.name}: no baseline yet "
+                         "(run --update-baselines and commit)")
+            continue
+        fresh, base = _load(fpath), _load(bpath)
+        if _variant(fresh) != _variant(base):
+            notes.append(
+                f"SKIP     {fpath.name}: variant mismatch "
+                f"(fresh {dict(zip(_VARIANT_KEYS, _variant(fresh)))} vs "
+                f"baseline {dict(zip(_VARIANT_KEYS, _variant(base)))})"
+            )
+            continue
+        fm, bm = _metrics(fresh), _metrics(base)
+        for name, base_us in sorted(bm.items()):
+            if name not in fm:
+                failures.append(
+                    f"MISSING  {fpath.name}: metric '{name}' present in "
+                    "baseline but absent from the fresh run"
+                )
+                continue
+            fresh_us = fm[name]
+            if base_us <= 0.0:
+                # parity/assert rows: presence is the whole contract
+                notes.append(f"OK       {name}: assertion row present")
+                continue
+            ratio = fresh_us / base_us
+            line = (f"{name}: {fresh_us:.1f}us vs baseline "
+                    f"{base_us:.1f}us ({(ratio - 1) * 100:+.1f}%)")
+            if ratio > 1.0 + threshold:
+                failures.append(f"REGRESS  {line} > +{threshold * 100:.0f}%")
+            else:
+                notes.append(f"OK       {line}")
+        for name in sorted(set(fm) - set(bm)):
+            notes.append(f"NEW      {name}: not in baseline "
+                         "(refresh baselines to start tracking)")
+    return failures, notes
+
+
+def update_baselines(
+    fresh_dir: pathlib.Path, baseline_dir: pathlib.Path
+) -> int:
+    baseline_dir.mkdir(parents=True, exist_ok=True)
+    n = 0
+    for fpath in sorted(fresh_dir.glob("BENCH_*.json")):
+        shutil.copyfile(fpath, baseline_dir / fpath.name)
+        print(f"updated  {baseline_dir / fpath.name}")
+        n += 1
+    return n
+
+
+def _write_artifact(path: pathlib.Path, name: str, rows, **meta) -> None:
+    doc = {
+        "benchmark": name,
+        "git_sha": "selftest",
+        "timestamp_utc": "1970-01-01T00:00:00+00:00",
+        "metrics": [
+            {"name": n, "us_per_call": us, "derived": ""} for n, us in rows
+        ],
+    }
+    doc.update(meta)
+    path.write_text(json.dumps(doc))
+
+
+def self_test() -> int:
+    """The gate must fail on an injected 20% regression and on a dropped
+    metric, pass within the threshold, and skip variant mismatches."""
+    with tempfile.TemporaryDirectory() as td:
+        root = pathlib.Path(td)
+        base, fresh = root / "base", root / "fresh"
+        base.mkdir(), fresh.mkdir()
+        meta = {"tick_path": "fused", "smoke": True}
+        _write_artifact(
+            base / "BENCH_a.json", "a",
+            [("a/fast", 100.0), ("a/parity", 0.0), ("a/dropped", 5.0)],
+            **meta,
+        )
+        _write_artifact(
+            fresh / "BENCH_a.json", "a",
+            [("a/fast", 120.0), ("a/parity", 0.0)], **meta,
+        )
+        _write_artifact(base / "BENCH_b.json", "b", [("b/x", 50.0)], **meta)
+        _write_artifact(
+            fresh / "BENCH_b.json", "b", [("b/x", 55.0)], **meta
+        )
+        _write_artifact(base / "BENCH_c.json", "c", [("c/x", 10.0)], **meta)
+        _write_artifact(
+            fresh / "BENCH_c.json", "c", [("c/x", 90.0)],
+            tick_path="four-dispatch", smoke=True,
+        )
+        failures, notes = compare(fresh, base, 0.15)
+        # injected +20% on a/fast must FAIL; dropped metric must FAIL
+        assert any("a/fast" in f and "REGRESS" in f for f in failures), failures
+        assert any("a/dropped" in f and "MISSING" in f for f in failures)
+        # +10% on b/x is within the 15% gate
+        assert not any("b/x" in f for f in failures), failures
+        assert any("b/x" in n and n.startswith("OK") for n in notes)
+        # variant mismatch on c is a skip, never a fail
+        assert not any("c/x" in f for f in failures), failures
+        assert any("BENCH_c.json" in n and n.startswith("SKIP") for n in notes)
+        # tightening the threshold flips b/x to a failure
+        f2, _ = compare(fresh, base, 0.05)
+        assert any("b/x" in f for f in f2), f2
+        # an empty fresh dir is itself a failure
+        empty = root / "empty"
+        empty.mkdir()
+        f3, _ = compare(empty, base, 0.15)
+        assert f3 and "no BENCH_" in f3[0]
+    print("self-test OK: regression/missing fail, in-threshold passes, "
+          "variant mismatch skips")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default="",
+                    help="dir of freshly produced BENCH_*.json artifacts")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="dir of checked-in baseline artifacts "
+                         f"(default {DEFAULT_BASELINE})")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max allowed per-metric slowdown (0.15 = +15%%)")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="copy fresh artifacts over the baselines")
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+    if args.self_test:
+        return self_test()
+    if not args.fresh:
+        ap.error("--fresh is required (or use --self-test)")
+    fresh_dir = pathlib.Path(args.fresh)
+    baseline_dir = pathlib.Path(args.baseline)
+    if args.update_baselines:
+        n = update_baselines(fresh_dir, baseline_dir)
+        print(f"{n} baseline(s) refreshed in {baseline_dir}")
+        return 0
+    failures, notes = compare(fresh_dir, baseline_dir, args.threshold)
+    for line in notes:
+        print(line)
+    for line in failures:
+        print(f"FAIL     {line}", file=sys.stderr)
+    if failures:
+        print(f"\n{len(failures)} benchmark regression(s); if intentional, "
+              "rerun with --update-baselines and commit the diff",
+              file=sys.stderr)
+        return 1
+    print(f"\nbench regression gate passed ({baseline_dir})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
