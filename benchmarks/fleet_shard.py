@@ -1,0 +1,171 @@
+"""Sharded fleet service: aggregate ingest scaling + parity gate.
+
+Run:  PYTHONPATH=src python -m benchmarks.fleet_shard [--smoke]
+
+Measures what sharding actually buys — and proves it buys it without
+changing a single answer:
+
+  1. aggregate ingest at N shards vs 1, J live jobs per tick.  This
+     container has ONE core, so wall-clock parallelism is unmeasurable
+     here; what IS measurable is the critical path an N-core deployment
+     would see: coordinator partition time plus the SLOWEST single
+     shard's decode+fold+tick, each shard timed serially on the one
+     core.  Aggregate throughput = J / critical_path.  The gate
+     (full mode: >= 4x at 8 shards; --smoke relaxes to >= 1.5x for the
+     noisy CI container) catches exactly the two ways scale-out rots:
+     hash imbalance (one hot shard stretches the max) and per-shard
+     overhead growth (8 small services costing more than 1 big one).
+  2. parity: the sharded service's route answer and merged snapshot on
+     the benchmark fleet are asserted equal to the unsharded service's
+     (a zero-cost gate row, like the fused-tick parity rows).
+
+Packets are deliberately cheap (no window tensor: decode + registry
+fold, no kernel work) — the regime where coordinator and partition
+overhead is the LARGEST relative cost, i.e. the hardest case for the
+>= 4x gate, and the fleet regime sharding targets (tens of thousands of
+small always-on jobs, not a few heavy ones).
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import time
+
+from repro.fleet import FleetService, ShardedFleetService
+from repro.telemetry.packets import EvidencePacket, encode_packet
+
+from .common import emit
+
+STAGES = ("data.next_wait", "model.fwd", "model.bwd", "opt.step")
+FULL_JOBS = 10_000
+SMOKE_JOBS = 2_000
+SHARDS = 8
+FULL_GATE = 4.0
+SMOKE_GATE = 1.5
+
+
+def _wire_packets(jobs: int, window_index: int = 0) -> list[tuple[str, bytes]]:
+    """J cheap wire packets (one per job, no window tensor)."""
+    out = []
+    for j in range(jobs):
+        pkt = EvidencePacket(
+            window_index=window_index,
+            schema_hash="bench",
+            stages=STAGES,
+            steps=20,
+            world_size=4,
+            gather_ok=True,
+            labels=(),
+            routing_stages=(STAGES[0],),
+            shares=(0.4, 0.3, 0.2, 0.1),
+            gains=(0.1 + (j % 7) * 0.01, 0.0, 0.0, 0.0),
+            co_critical_stages=(),
+            downgrade_reasons=(),
+            leader_rank=0,
+            exposed_total=0.4,
+        )
+        out.append((f"job-{j:05d}", encode_packet(pkt, compress="none")))
+    return out
+
+
+def _critical_path_us(
+    items: list[tuple[str, bytes]], shards: int, *, repeat: int = 5
+) -> tuple:
+    """One fleet cycle's critical path at `shards` workers, measured as
+    an N-core deployment's clock: serial coordinator work (partition)
+    plus the slowest shard's own ingest+tick, each shard timed alone.
+
+    Best-of-`repeat` with the GC paused (the `time_us` discipline:
+    a collector sweep over tens of thousands of live JobStates lands in
+    whichever measurement is unlucky, and a deployment ingesting at
+    this rate would tune exactly that) — each repeat gets FRESH
+    services, since re-submitting a seen window takes the cheap
+    duplicate path and would flatter later repeats.
+
+    Returns (critical_path_us, per_shard_max_us, partition_us, service)
+    — the returned service is populated, for the parity check.
+    """
+    best = (float("inf"), 0.0, 0.0, None)
+    for _ in range(repeat):
+        svc = ShardedFleetService(shards=shards, workers="inline")
+        gc.collect()
+        gc.disable()
+        try:
+            t0 = time.perf_counter()
+            parts = svc.partition(items)
+            partition_us = (time.perf_counter() - t0) * 1e6
+            shard_us = []
+            for shard, part in zip(svc.shards, parts):
+                t0 = time.perf_counter()
+                shard.submit_many(part)
+                shard.tick()
+                shard_us.append((time.perf_counter() - t0) * 1e6)
+        finally:
+            gc.enable()
+        svc._tick += 1  # the clock the per-shard ticks just mirrored
+        worst = max(shard_us)
+        if partition_us + worst < best[0]:
+            best = (partition_us + worst, worst, partition_us, svc)
+    return best
+
+
+def bench_aggregate_ingest(jobs: int) -> tuple[float, "ShardedFleetService"]:
+    """Aggregate ingest throughput, 1 shard vs SHARDS; returns the
+    speedup and the populated N-shard service (for the parity gate)."""
+    items = _wire_packets(jobs)
+    base_us, _, _, base_svc = _critical_path_us(items, 1)
+    # informational (zero-gated) row: the single-service critical path
+    # exists as the speedup denominator; its 1x~50ms timing window
+    # collects ±20% of scheduler noise on this container, too wide for
+    # the 15% regression threshold.  The gated timing is the 8-shard
+    # row below (short per-shard windows, best-of-repeat converges).
+    emit(
+        f"fleet_shard/ingest_1x{jobs}j",
+        0.0,
+        f"critical_path_us={base_us:.0f} "
+        f"jobs_per_sec={jobs / (base_us / 1e6):.0f}",
+    )
+    shard_us, worst_us, partition_us, svc = _critical_path_us(
+        items, SHARDS, repeat=7
+    )
+    speedup = base_us / shard_us
+    counts = [len(s.registry) for s in svc.shards]
+    emit(
+        f"fleet_shard/ingest_{SHARDS}x{jobs}j",
+        shard_us,
+        f"jobs_per_sec={jobs / (shard_us / 1e6):.0f} "
+        f"speedup={speedup:.2f}x partition_us={partition_us:.0f} "
+        f"hot_shard_jobs={max(counts)} cold_shard_jobs={min(counts)}",
+    )
+    # parity on the very fleet just ingested: merged route + snapshot
+    # equal the single service's, bit for bit
+    routes_equal = base_svc.route(10) == svc.route(10)
+    snap_equal = base_svc.snapshot() == svc.snapshot()
+    assert routes_equal, "sharded route diverged from unsharded"
+    assert snap_equal, "sharded snapshot diverged from unsharded"
+    emit(
+        f"fleet_shard/parity_{SHARDS}x{jobs}j",
+        0.0,
+        f"route_equal={int(routes_equal)} snapshot_equal={int(snap_equal)}",
+    )
+    svc.close()
+    return speedup, svc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced fleet + relaxed ratio gate for CI")
+    args, _ = ap.parse_known_args()
+    jobs = SMOKE_JOBS if args.smoke else FULL_JOBS
+    gate = SMOKE_GATE if args.smoke else FULL_GATE
+    speedup, _ = bench_aggregate_ingest(jobs)
+    assert speedup >= gate, (
+        f"aggregate ingest at {SHARDS} shards only {speedup:.2f}x the "
+        f"single service (gate {gate}x, {jobs} jobs): hash imbalance or "
+        f"per-shard overhead blowup"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,7 @@ MODULES = [
     ("incident_engine", "common-cause attribution + escalation budget law"),
     ("trace_replay", "trace-driven fleet replay: scale + routing accuracy"),
     ("fused_tick", "fused fleet-tick megakernel vs four-dispatch + parity"),
+    ("fleet_shard", "sharded fleet aggregate ingest scaling + parity gate"),
 ]
 
 

@@ -27,6 +27,7 @@ __all__ = [
     "sharding_for_axes",
     "tree_shardings",
     "batch_sharding",
+    "shard_placements",
 ]
 
 MeshAxes = tuple[str, ...] | str | None
@@ -207,6 +208,21 @@ def cache_sharding(
     dims: list[MeshAxes] = [None, batch] + [None] * (len(spec_shape) - 2)
     dims[seq_dim] = seq
     return NamedSharding(mesh, P(*dims))
+
+
+def shard_placements(mesh: Mesh, shards: int) -> tuple:
+    """Round-robin device assignment of `shards` logical fleet shards
+    onto a ``shard``-axis mesh (`launch.mesh.make_fleet_mesh`).
+
+    Placement is data, not code — the same policy discipline as the
+    `ShardingPlan` tables above: shard i refreshes on
+    ``mesh.devices.flat[i % len]``, so N shards on an N-device rig get
+    one device each and a larger fleet wraps around deterministically.
+    """
+    devs = list(mesh.devices.flat)
+    if not devs:
+        raise ValueError("mesh has no devices")
+    return tuple(devs[i % len(devs)] for i in range(max(0, int(shards))))
 
 
 def ssm_cache_sharding(

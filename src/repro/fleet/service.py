@@ -34,7 +34,7 @@ from .ingest import FleetIngest
 from .registry import FleetRegistry, JobState
 
 if TYPE_CHECKING:  # pragma: no cover
-    from ..incidents import IncidentEngine
+    from ..incidents import IncidentEngine, Topology
 
 __all__ = ["FleetService", "RouteEntry"]
 
@@ -83,6 +83,8 @@ class FleetService:
         regime_windows: int = 4,
         incidents: "IncidentEngine | None" = None,
         fused: bool = True,
+        topology: "Topology | None" = None,
+        device=None,
     ):
         self.ingest = FleetIngest()
         self.registry = FleetRegistry(
@@ -106,6 +108,18 @@ class FleetService:
         #: declared host placements flow into its `Topology` — route
         #: answers gain identity, lifecycle, and common-cause grouping.
         self.incidents = incidents
+        #: optional coordinator-owned `incidents.Topology` to declare
+        #: packet host placements into when this service runs as ONE
+        #: SHARD of a `ShardedFleetService`: shards carry no engine of
+        #: their own (the coordinator owns the single fleet-wide one),
+        #: but their packets' placements must still reach it.  Ignored
+        #: when `incidents` is attached (the engine's topology wins).
+        self._topology = topology
+        #: optional jax device pinning the batched kernel refresh: a
+        #: sharded coordinator places each shard's refresh on its own
+        #: forced-host CPU device (`launch.mesh.make_fleet_mesh`), so N
+        #: shards dispatch onto N devices.  None = jax's default device.
+        self.device = device
         self._tick = 0
         self.evicted_total = 0
 
@@ -124,9 +138,20 @@ class FleetService:
         if pkt is None:
             return None
         job = self.registry.update(job_id, pkt, self._tick)
-        if job is not None and self.incidents is not None and pkt.hosts:
-            self.incidents.topology.declare(job_id, pkt.hosts)
+        if job is not None:
+            self._declare_hosts(job_id, pkt)
         return job
+
+    def _declare_hosts(self, job_id: str, pkt: EvidencePacket) -> None:
+        """Land a packet's declared placement in the fleet topology —
+        the attached engine's, or the coordinator sink when this service
+        is one shard of a sharded fleet."""
+        if not pkt.hosts:
+            return
+        if self.incidents is not None:
+            self.incidents.topology.declare(job_id, pkt.hosts)
+        elif self._topology is not None:
+            self._topology.declare(job_id, pkt.hosts)
 
     def submit_many(
         self,
@@ -154,8 +179,7 @@ class FleetService:
                 continue
             if self.registry.update(job_id, pkt, self._tick) is not None:
                 accepted += 1
-                if self.incidents is not None and pkt.hosts:
-                    self.incidents.topology.declare(job_id, pkt.hosts)
+                self._declare_hosts(job_id, pkt)
         if refresh:
             self.refresh_batched()
         return accepted
@@ -232,6 +256,14 @@ class FleetService:
             # padded rows are sliced away below.
             j_live = len(jobs)
             stacked = self._stager.stage([j.last_window for j in jobs])
+            if self.device is not None:
+                # shard-pinned refresh: commit the staged tensor to this
+                # service's device so the dispatch runs there (same
+                # compiled program on every CPU device — bit-identical
+                # outputs, see tests/test_sharded_fleet.py).
+                import jax
+
+                stacked = jax.device_put(stacked, self.device)
             if use_fused:
                 # one dispatch, one HBM read; the device input buffer is
                 # donated — consumed by the kernel, never copied back.

@@ -1,0 +1,441 @@
+"""Sharded multi-worker fleet service: horizontal scale-out of the
+always-on signal.
+
+One `FleetService` process tops out around ~1.5k jobs/s on one core
+(`benchmarks/fleet_scale.py`) — nowhere near fleet scale.  This module
+partitions the fleet by a STABLE job-id hash across N worker shards,
+each owning its jobs' full vertical slice (wire ingest -> registry ->
+`WindowStager` -> fused-tick kernel refresh -> regime state), behind a
+thin `ShardedFleetService` coordinator that preserves the single-process
+`FleetService` API: ``submit`` / ``submit_many`` / ``tick`` / ``route``
+/ ``snapshot`` / ``incidents``.
+
+Correctness contract — the part a sharded service can silently break and
+only a differential rig can pin (see ``tests/test_sharded_fleet.py``):
+
+  * **routing** — per-job evidence is shard-local (windows of one job
+    never cross shards, and per-job kernel accounting is independent
+    along the fused tick's grid axis), so every shard's `route` entries
+    are bit-identical to the unsharded service's; the coordinator
+    merges them under the SAME total ``(-score, job_id, rank)`` order
+    the single service sorts by.  The total key is load-bearing: a
+    merge that breaks score ties per-shard (e.g. trusting per-shard
+    positions) would reorder equal-score jobs that hash to different
+    shards — the latent tie-order hazard this module asserts against.
+  * **incidents** — common-cause correlation must see the WHOLE fleet
+    ("When Scaling Fails": fabric/host effects span jobs), so the
+    coordinator owns the one `IncidentEngine`.  Each tick it derives a
+    `CorrelationGroup` plan from merged activity metadata, every shard
+    folds its own jobs' rank-level activity onto the plan's candidate
+    host axes (`incidents.fold_host_activity` — the per-(host, stage)
+    activity partials), and the coordinator stacks the partials in plan
+    order and scores them with the `co_activation` kernel: the explicit
+    cross-shard reduce, bit-identical to the single-process engine.
+  * **counters** — ingest/registry counters are per-shard sums;
+    `snapshot()` recomputes derived ratios from the summed raw
+    counters, so the merged snapshot equals the unsharded one.
+
+Worker model: ``workers="thread"`` (default) gives each shard a
+single-thread executor — one tick's sub-batches decode and fold
+concurrently, so shard B's wire decode overlaps shard A's kernel
+dispatch (XLA releases the GIL while the fused tick runs): the async
+ingest lane.  ``workers="inline"`` runs shards sequentially on the
+caller's thread (the deterministic debugging/CI reference — outputs are
+identical either way, only wall-clock differs).  With multiple jax
+devices visible (CPU: ``--xla_force_host_platform_device_count=N``),
+``devices="auto"`` pins shard i's batched refresh to device i via
+`launch.mesh.make_fleet_mesh` + `distributed.sharding.shard_placements`,
+so N shards dispatch kernels onto N devices.
+"""
+from __future__ import annotations
+
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+from typing import TYPE_CHECKING, Iterable, Sequence
+
+import numpy as np
+
+from ..telemetry.packets import EvidencePacket
+from .registry import JobState
+from .service import FleetService, RouteEntry
+
+if TYPE_CHECKING:  # pragma: no cover
+    from ..incidents import IncidentEngine
+
+__all__ = ["ShardedFleetService", "job_id_for_shard", "shard_of"]
+
+
+def shard_of(job_id: str, shards: int) -> int:
+    """Owning shard of `job_id` among `shards` workers.
+
+    Stable by construction (CRC-32 of the UTF-8 id — never Python's
+    salted `hash`): the same job lands on the same shard across
+    processes, restarts, and runs, so re-arrivals and duplicate windows
+    keep hitting the registry state that knows them.
+    """
+    if shards <= 0:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    return zlib.crc32(job_id.encode("utf-8")) % shards
+
+
+def job_id_for_shard(
+    base: str, shard: int, shards: int, *, sep: str = "~"
+) -> str:
+    """Deterministic job id derived from `base` that hashes to `shard`.
+
+    Test/scenario helper (e.g. `sim.scenarios.shared_host_fleet`'s
+    shard-splitting placement): returns `base` itself when it already
+    lands on `shard`, else the first ``{base}{sep}{i}`` that does —
+    deterministic, so fixtures and differential runs agree on ids.
+    """
+    if not 0 <= shard < shards:
+        raise ValueError(f"shard {shard} outside [0, {shards})")
+    if shard_of(base, shards) == shard:
+        return base
+    i = 0
+    while True:
+        cand = f"{base}{sep}{i}"
+        if shard_of(cand, shards) == shard:
+            return cand
+        i += 1
+
+
+class ShardedFleetService:
+    """N-shard fleet coordinator with the `FleetService` serving API.
+
+    Every submit routes to ``shards[shard_of(job_id, n)]``; `tick`,
+    `route`, and `snapshot` merge the per-shard answers under the same
+    deterministic orders the single-process service uses, and the
+    optional `IncidentEngine` runs fleet-wide at the coordinator fed by
+    the cross-shard activity reduce (module docstring).  The merged
+    outputs are bit-identical to one `FleetService` ingesting the same
+    packets — property- and differentially-tested.
+    """
+
+    #: the total route order shared with `FleetService.route` — merge
+    #: stability across shard boundaries REQUIRES the full key (score
+    #: ties between jobs on different shards must still order by
+    #: (job_id, rank), never by shard position).
+    _ROUTE_KEY = staticmethod(lambda e: (-e.score, e.job_id, e.rank))
+
+    def __init__(
+        self,
+        *,
+        shards: int = 8,
+        workers: str = "thread",
+        window_capacity: int = 100,
+        evict_after: int = 10,
+        degrade_after: int = 3,
+        max_jobs: int = 100_000,
+        regime_windows: int = 4,
+        incidents: "IncidentEngine | None" = None,
+        fused: bool = True,
+        devices: str | Sequence | None = "auto",
+    ):
+        if shards <= 0:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if workers not in ("thread", "inline"):
+            raise ValueError(f"workers must be thread|inline: {workers!r}")
+        self.n_shards = int(shards)
+        self.workers = workers
+        self.incidents = incidents
+        placements = self._resolve_devices(devices)
+        topo = incidents.topology if incidents is not None else None
+        #: per-shard bound: each worker refuses new registrations past
+        #: `max_jobs`, so the aggregate bound is shards * max_jobs; with
+        #: a balanced hash the unsharded `rejected_total` semantics are
+        #: preserved for any fleet that fits one service's bound.
+        self.shards = [
+            FleetService(
+                window_capacity=window_capacity,
+                evict_after=evict_after,
+                degrade_after=degrade_after,
+                max_jobs=max_jobs,
+                regime_windows=regime_windows,
+                incidents=None,
+                fused=fused,
+                topology=topo,
+                device=placements[i] if placements else None,
+            )
+            for i in range(self.n_shards)
+        ]
+        #: one single-thread lane per shard: work for a shard serializes
+        #: (its state has exactly one writer), work ACROSS shards
+        #: overlaps — decode on lane B runs while lane A's kernel
+        #: dispatch holds no GIL.
+        self._lanes = (
+            [ThreadPoolExecutor(max_workers=1) for _ in self.shards]
+            if workers == "thread"
+            else None
+        )
+        self._tick = 0
+
+    def _resolve_devices(self, devices) -> tuple | None:
+        """Per-shard jax device placements, or None (no pinning).
+
+        ``"auto"``: with >1 visible device (the forced-host CPU rig, or
+        real accelerators), build the 1-D fleet mesh and round-robin the
+        shards onto it; with one device, pinning is a no-op — skip it.
+        An explicit sequence of devices is round-robined as given.
+        """
+        if devices is None:
+            return None
+        if devices == "auto":
+            import jax
+
+            if len(jax.devices()) <= 1:
+                return None
+            from ..distributed.sharding import shard_placements
+            from ..launch.mesh import make_fleet_mesh
+
+            return shard_placements(make_fleet_mesh(), self.n_shards)
+        devices = tuple(devices)
+        if not devices:
+            return None
+        return tuple(
+            devices[i % len(devices)] for i in range(self.n_shards)
+        )
+
+    # -- ingest ------------------------------------------------------------
+
+    @property
+    def current_tick(self) -> int:
+        return self._tick
+
+    @property
+    def evicted_total(self) -> int:
+        return sum(s.evicted_total for s in self.shards)
+
+    def shard_index(self, job_id: str) -> int:
+        """Owning shard index of `job_id` (the stable hash partition)."""
+        return shard_of(job_id, self.n_shards)
+
+    def partition(
+        self, items: Iterable[tuple[str, bytes | EvidencePacket]]
+    ) -> list[list[tuple[str, bytes | EvidencePacket]]]:
+        """Split one tick's ``(job_id, wire)`` batch into per-shard
+        sub-batches, preserving each shard's arrival order.  Public so
+        benchmarks/drivers can measure or ship the per-shard lanes
+        themselves."""
+        parts: list[list] = [[] for _ in range(self.n_shards)]
+        for item in items:
+            parts[shard_of(item[0], self.n_shards)].append(item)
+        return parts
+
+    def submit(
+        self, job_id: str, data: bytes | EvidencePacket
+    ) -> JobState | None:
+        """Ingest one packet on the owning shard (same contract as
+        `FleetService.submit`)."""
+        return self.shards[shard_of(job_id, self.n_shards)].submit(
+            job_id, data
+        )
+
+    def submit_many(
+        self,
+        items: Iterable[tuple[str, bytes | EvidencePacket]],
+        *,
+        refresh: bool = False,
+    ) -> int:
+        """Partition one tick's batch across the shards and ingest each
+        sub-batch on its worker lane; returns total accepted.
+
+        With ``workers="thread"`` the per-shard decode -> fold ->
+        (optional) kernel refresh pipelines run concurrently — the
+        async ingest lane.  The call itself is synchronous: it returns
+        only when every lane drained, so the coordinator's state is
+        quiescent between calls and the API stays drop-in.
+        """
+        parts = self.partition(items)
+        return sum(
+            self._map_shards(
+                lambda s, part: s.submit_many(part, refresh=refresh), parts
+            )
+        )
+
+    def refresh_batched(
+        self, *, min_jobs: int = 1, fused: bool | None = None
+    ) -> int:
+        """Kernel-refresh every shard's dirty jobs; returns total."""
+        return sum(
+            self._map_shards(
+                lambda s, _: s.refresh_batched(min_jobs=min_jobs, fused=fused)
+            )
+        )
+
+    def _map_shards(self, fn, args: Sequence | None = None) -> list:
+        """Run ``fn(shard, arg)`` on every shard — concurrently on the
+        worker lanes, or inline — and return results in shard order."""
+        args = args if args is not None else [None] * self.n_shards
+        if self._lanes is None:
+            return [fn(s, a) for s, a in zip(self.shards, args)]
+        futs = [
+            lane.submit(fn, s, a)
+            for lane, s, a in zip(self._lanes, self.shards, args)
+        ]
+        return [f.result() for f in futs]
+
+    # -- the fleet tick ----------------------------------------------------
+
+    def tick(self) -> list[str]:
+        """Advance the fleet clock on every shard; returns evicted ids.
+
+        With an incident engine attached, the coordinator then runs the
+        fleet-wide fold the single-process `FleetService.tick` runs
+        locally: the merged route answer (every routable job on every
+        shard), the merged evictions, and the cross-shard activity
+        reduce — metadata up, `CorrelationGroup` plan down, host-folded
+        partials up, one `co_activation` scoring pass over the merged
+        host axis.
+        """
+        self._tick += 1
+        evicted: list[str] = []
+        for ev in self._map_shards(lambda s, _: s.tick()):
+            evicted.extend(ev)
+        if self.incidents is not None:
+            entries: list[RouteEntry] = []
+            for part in self._map_shards(
+                lambda s, _: s.route(len(s.registry))
+            ):
+                entries.extend(part)
+            self.incidents.observe(
+                self._tick,
+                entries,
+                evicted=evicted,
+                folded=self._folded_activity(),
+            )
+        return evicted
+
+    def _shard_activity(self, shard: FleetService) -> dict:
+        """One shard's per-job activity series (the engine substrate)."""
+        return {
+            job.job_id: (job.regimes.activity(), job.stages)
+            for job in shard.registry.jobs()
+            if job.regimes is not None and job.regimes.num_steps
+        }
+
+    def _folded_activity(self):
+        """The cross-shard activity reduce, coordinator side.
+
+        1. every shard emits activity METADATA (id -> depth, stages);
+        2. the engine plans `CorrelationGroup`s over the merged view;
+        3. every shard folds its own jobs' activity onto each group's
+           candidate-host axis (the per-(host, stage) partials);
+        4. partials stack in ``group.job_ids`` order — the exact tensor
+           the single-process fold builds — ready for `co_activation`.
+
+        Only host-folded bool series cross the shard boundary: the
+        reduce ships O(steps x candidate hosts x stages) per member, not
+        rank-level state.
+        """
+        from ..incidents.engine import activity_meta, fold_host_activity
+
+        engine = self.incidents
+        activities = self._map_shards(
+            lambda s, _: self._shard_activity(s)
+        )
+        meta: dict = {}
+        for act in activities:
+            meta.update(activity_meta(act))
+        plan = engine.correlation_plan(meta)
+        if not plan:
+            return []
+        partial_sets = self._map_shards(
+            lambda s, act: [
+                fold_host_activity(g, act, engine.topology) for g in plan
+            ],
+            activities,
+        )
+        folded = []
+        for gi, group in enumerate(plan):
+            parts: dict[str, np.ndarray] = {}
+            for per_shard in partial_sets:
+                parts.update(per_shard[gi])
+            folded.append(
+                (group, np.stack([parts[j] for j in group.job_ids]))
+            )
+        return folded
+
+    # -- routing -----------------------------------------------------------
+
+    def route(self, k: int = 10) -> list[RouteEntry]:
+        """Global top-K by persistence-weighted recoverable seconds.
+
+        Each shard answers its local top-K; because the route order is
+        TOTAL, the global top-K is a subset of the union, and one merge
+        under the same ``(-score, job_id, rank)`` key reproduces the
+        unsharded answer bit for bit.  Tie stability across merge
+        boundaries is asserted: two jobs with equal scores on different
+        shards must order by (job_id, rank) exactly as they would inside
+        one service.
+        """
+        merged: list[RouteEntry] = []
+        for part in self._map_shards(lambda s, _: s.route(k)):
+            merged.extend(part)
+        merged.sort(key=self._ROUTE_KEY)
+        out = merged[: max(0, k)]
+        # the tie-order contract, kept active where the differential and
+        # property suites exercise equal-score merges: the merged prefix
+        # must be strictly increasing under the TOTAL key — equal keys
+        # would mean one (job, rank) surfaced from two shards, and a
+        # non-total comparison could order them differently per run.
+        assert all(
+            self._ROUTE_KEY(a) < self._ROUTE_KEY(b)
+            for a, b in zip(out, out[1:])
+        ), "route merge lost total (score, job_id, rank) order"
+        return out
+
+    # -- summaries ---------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """Merged fleet snapshot, field-for-field equal to the unsharded
+        `FleetService.snapshot` on the same traffic: raw counters are
+        per-shard sums and every derived ratio is recomputed from the
+        summed counters (averaging per-shard averages would not be
+        exact)."""
+        shots = self._map_shards(lambda s, _: s.snapshot())
+        regimes: dict[str, int] = {}
+        for shot in shots:
+            for name, c in shot["regimes"].items():
+                regimes[name] = regimes.get(name, 0) + c
+        out = {
+            "tick": self._tick,
+            "jobs": sum(s["jobs"] for s in shots),
+            "degraded_jobs": sum(s["degraded_jobs"] for s in shots),
+            "regimes": regimes,
+            "evicted_total": sum(s["evicted_total"] for s in shots),
+            "rejected_total": sum(s["rejected_total"] for s in shots),
+            "duplicate_total": sum(s["duplicate_total"] for s in shots),
+            "packets": sum(s["packets"] for s in shots),
+            "bytes": sum(s["bytes"] for s in shots),
+            "decode_errors": sum(s["decode_errors"] for s in shots),
+            "predecoded": sum(s["predecoded"] for s in shots),
+            "windows_seen": sum(s["windows_seen"] for s in shots),
+        }
+        wire_packets = out["packets"] - out["predecoded"]
+        out["avg_wire_bytes"] = (
+            out["bytes"] / wire_packets if wire_packets else 0.0
+        )
+        if self.incidents is not None:
+            out["incidents"] = self.incidents.counts()
+        return out
+
+    def __len__(self) -> int:
+        return sum(len(s.registry) for s in self.shards)
+
+    def close(self) -> None:
+        """Shut the worker lanes down (idempotent; inline mode no-op).
+
+        The service stays usable afterwards — subsequent calls run
+        inline on the caller's thread, so a driver may close the lanes
+        when ingest ends and still read `route`/`snapshot`."""
+        if self._lanes is not None:
+            lanes, self._lanes = self._lanes, None
+            for lane in lanes:
+                lane.shutdown(wait=True)
+
+    def __enter__(self) -> "ShardedFleetService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -20,6 +20,7 @@ Layers:
 from .engine import (
     ACTIVE,
     COOLING,
+    CorrelationGroup,
     Incident,
     IncidentEngine,
     IncidentParams,
@@ -27,6 +28,8 @@ from .engine import (
     MERGED,
     OPEN,
     RESOLVED,
+    activity_meta,
+    fold_host_activity,
 )
 from .escalation import EscalationController, ProfilerAction
 from .topology import Topology
@@ -34,6 +37,7 @@ from .topology import Topology
 __all__ = [
     "ACTIVE",
     "COOLING",
+    "CorrelationGroup",
     "EscalationController",
     "Incident",
     "IncidentEngine",
@@ -44,4 +48,6 @@ __all__ = [
     "ProfilerAction",
     "RESOLVED",
     "Topology",
+    "activity_meta",
+    "fold_host_activity",
 ]

@@ -53,6 +53,7 @@ from .topology import Topology
 __all__ = [
     "ACTIVE",
     "COOLING",
+    "CorrelationGroup",
     "Incident",
     "IncidentEngine",
     "IncidentParams",
@@ -60,6 +61,8 @@ __all__ = [
     "MERGED",
     "OPEN",
     "RESOLVED",
+    "activity_meta",
+    "fold_host_activity",
 ]
 
 #: lifecycle states
@@ -99,6 +102,88 @@ class IncidentParams:
     min_coactive_steps: int = 1
     retention: int = 256
     persistence_floor: float = 0.05
+
+
+@dataclasses.dataclass(frozen=True)
+class CorrelationGroup:
+    """One stage-vocabulary cohort of the cross-job correlation.
+
+    The unit of the cross-shard reduce: the coordinator derives groups
+    from fleet-wide activity *metadata* (`IncidentEngine.correlation_plan`),
+    every shard folds its own jobs' rank-level activity onto the group's
+    candidate-host axis (`fold_host_activity` — the per-(host, stage)
+    activity partials), and the coordinator stacks the partials in
+    `job_ids` order and scores them with the co-activation kernel.  The
+    single-process engine runs the exact same plan -> fold -> score
+    pipeline over one local partial set, so sharded and unsharded
+    promotion decisions are bit-identical by construction.
+    """
+
+    #: the group's shared stage vocabulary
+    stages: tuple[str, ...]
+    #: member job ids, sorted — the stacking order of the job axis
+    job_ids: tuple[str, ...]
+    #: aligned history depth: every member's most recent `n_steps` steps
+    n_steps: int
+    #: candidate host axis (hosts >= min_jobs members can touch), sorted
+    hosts: tuple[str, ...]
+
+
+def activity_meta(
+    activity: Mapping[str, tuple[np.ndarray, tuple[str, ...]]],
+) -> dict[str, tuple[int, tuple[str, ...]]]:
+    """Correlation metadata of a per-job activity mapping: job id ->
+    (usable step depth, stage vocabulary).
+
+    Applies the engine's admission rules (3-D series, nonzero steps,
+    stage axis matching the vocabulary) so a `correlation_plan` built
+    from merged per-shard metadata sees exactly the jobs the
+    single-process fold would."""
+    meta: dict[str, tuple[int, tuple[str, ...]]] = {}
+    for job_id in sorted(activity):
+        act, stages = activity[job_id]
+        act = np.asarray(act)
+        if act.ndim != 3 or act.shape[0] == 0:
+            continue
+        if act.shape[2] != len(stages):
+            continue
+        meta[job_id] = (int(act.shape[0]), tuple(stages))
+    return meta
+
+
+def fold_host_activity(
+    group: CorrelationGroup,
+    activity: Mapping[str, tuple[np.ndarray, tuple[str, ...]]],
+    topology: Topology,
+) -> dict[str, np.ndarray]:
+    """Fold rank-level activity onto `group`'s candidate-host axis.
+
+    The shard-side half of the cross-shard reduce: for every group
+    member present in `activity`, collapse its ``act[N, R, S]`` bool
+    series over each host's ranks onto ``[n_steps, H_cand, S]`` (any
+    rank of the host active => the host is active), aligned on the most
+    recent `group.n_steps` steps.  Jobs outside the group (or absent
+    from this shard's `activity`) are simply not emitted — the
+    coordinator stacks partials from every shard in `group.job_ids`
+    order."""
+    hcol = {h: i for i, h in enumerate(group.hosts)}
+    out: dict[str, np.ndarray] = {}
+    for job_id in group.job_ids:
+        if job_id not in activity:
+            continue
+        act, _ = activity[job_id]
+        act = np.asarray(act).astype(bool)
+        job_hosts = topology.hosts_for(job_id)
+        a_host = np.zeros(
+            (group.n_steps, len(group.hosts), len(group.stages)), bool
+        )
+        tail = act[-group.n_steps:]
+        for rank in range(min(act.shape[1], len(job_hosts))):
+            col = hcol.get(job_hosts[rank])
+            if col is not None:
+                a_host[:, col, :] |= tail[:, rank, :]
+        out[job_id] = a_host
+    return out
 
 
 @dataclasses.dataclass
@@ -240,17 +325,30 @@ class IncidentEngine:
         evicted: Sequence[str] = (),
         activity: Mapping[str, tuple[np.ndarray, tuple[str, ...]]]
         | None = None,
+        folded: Sequence[tuple[CorrelationGroup, np.ndarray]] | None = None,
     ) -> list[Incident]:
         """Fold one fleet tick; returns the live incidents (sorted).
 
         `entries` are route-entry-shaped records (``job_id``, ``stage``,
-        ``rank``, ``recoverable_s``, ``persistence``, ``regime``,
+        ``rank``, ``recoverable_s``, ``regime``, ``persistence``,
         ``onset_step``, ``window_index`` — `fleet.service.RouteEntry`
         satisfies this); `activity` maps job_id to its
         ``(act[N, R, S] bool, stage names)`` thresholded activity series
         (see `core.streaming.StreamingRegimes.activity`), the substrate
         of cross-job correlation.
+
+        `folded` is the sharded-coordinator alternative to `activity`:
+        pre-reduced ``(CorrelationGroup, act[J, N, H_cand, S])`` pairs
+        (shard partials from `fold_host_activity`, stacked in
+        ``group.job_ids`` order) — the engine scores them directly
+        instead of folding rank-level series itself.  Passing both is an
+        error: one tick has exactly one correlation substrate.
         """
+        if activity and folded:
+            raise ValueError(
+                "pass either per-job `activity` or pre-reduced `folded` "
+                "partials, not both"
+            )
         for job_id in sorted(set(evicted)):
             self._resolve_job(job_id, tick, reason="evicted")
             self.topology.forget(job_id)
@@ -275,6 +373,8 @@ class IncidentEngine:
         self._sweep(tick)
         if activity:
             self._correlate(tick, activity)
+        elif folded:
+            self.correlate_folded(tick, folded)
         self._refresh_fleet(tick)
         self._prune()
         return self.incidents()
@@ -388,13 +488,12 @@ class IncidentEngine:
 
     # -- cross-job common cause --------------------------------------------
 
-    def _correlate(
-        self,
-        tick: int,
-        activity: Mapping[str, tuple[np.ndarray, tuple[str, ...]]],
-    ) -> None:
-        """Score hosts whose faults appear in >= min_jobs jobs' streams
-        and promote the matching incidents to one fleet incident.
+    def correlation_plan(
+        self, meta: Mapping[str, tuple[int, tuple[str, ...]]]
+    ) -> list[CorrelationGroup]:
+        """Derive the tick's correlation groups from fleet-wide activity
+        METADATA (job id -> (step depth, stage vocabulary) — see
+        `activity_meta`); no activity tensors are touched.
 
         Jobs group by stage vocabulary; within a group they align on
         their most recent COMMON history (regime rings may hold
@@ -402,27 +501,34 @@ class IncidentEngine:
         must still co-activate with its host peers), and the dense host
         axis holds only the hosts that >= min_jobs of the group's jobs
         can touch — the only promotable ones, so per-tick cost scales
-        with *shared* hosts, never the fleet's full host count.
+        with *shared* hosts, never the fleet's full host count.  Groups
+        that cannot promote (too few members, no shared host) are
+        dropped here, before any activity is folded or shipped.
+
+        This is the coordinator half of the cross-shard reduce: the
+        plan is computed once from merged metadata, every shard folds
+        its jobs' activity against it (`fold_host_activity`), and the
+        stacked partials go through `correlate_folded`.
         """
         p = self.params
         if not len(self.topology):
-            return
-        groups: dict[tuple[str, ...], list[tuple[str, np.ndarray]]] = {}
-        for job_id in sorted(activity):
+            return []
+        groups: dict[tuple[str, ...], list[str]] = {}
+        depth: dict[str, int] = {}
+        for job_id in sorted(meta):
             if job_id not in self.topology:
                 continue
-            act, stages = activity[job_id]
-            act = np.asarray(act).astype(bool)
-            if act.ndim != 3 or act.shape[0] == 0:
+            n_steps, stages = meta[job_id]
+            if n_steps <= 0:
                 continue
-            if act.shape[2] != len(stages):
-                continue
-            groups.setdefault(tuple(stages), []).append((job_id, act))
+            groups.setdefault(tuple(stages), []).append(job_id)
+            depth[job_id] = int(n_steps)
+        out: list[CorrelationGroup] = []
         for stages, members in sorted(groups.items()):
             if len(members) < p.min_jobs:
                 continue
             counts: dict[str, int] = {}
-            for job_id, _ in members:
+            for job_id in members:
                 for h in set(self.topology.hosts_for(job_id)):
                     counts[h] = counts.get(h, 0) + 1
             cand_hosts = sorted(
@@ -430,28 +536,59 @@ class IncidentEngine:
             )
             if not cand_hosts:
                 continue
-            hcol = {h: i for i, h in enumerate(cand_hosts)}
-            n_min = min(act.shape[0] for _, act in members)
-            series = []
-            for job_id, act in members:
-                job_hosts = self.topology.hosts_for(job_id)
-                a_host = np.zeros(
-                    (n_min, len(cand_hosts), len(stages)), bool
+            out.append(
+                CorrelationGroup(
+                    stages=stages,
+                    job_ids=tuple(members),
+                    n_steps=min(depth[j] for j in members),
+                    hosts=tuple(cand_hosts),
                 )
-                tail = act[-n_min:]
-                for rank in range(min(act.shape[1], len(job_hosts))):
-                    col = hcol.get(job_hosts[rank])
-                    if col is not None:
-                        a_host[:, col, :] |= tail[:, rank, :]
-                series.append(a_host)
-            stats = self._co_activation(np.stack(series))
+            )
+        return out
+
+    def correlate_folded(
+        self,
+        tick: int,
+        folded: Sequence[tuple[CorrelationGroup, np.ndarray]],
+    ) -> None:
+        """Score pre-reduced host-folded activity and promote matches.
+
+        `folded` pairs each `CorrelationGroup` of the tick's plan with
+        its stacked partials ``act[J, N, H_cand, S]`` (J in
+        ``group.job_ids`` order — across shards, the coordinator
+        reassembles that order before calling).  This is the ONE scoring
+        path: the single-process `activity` route reduces to it, so a
+        sharded fleet's promotion decisions are bit-identical."""
+        p = self.params
+        for group, act in folded:
+            act = np.asarray(act)
+            if act.shape[0] == 0:
+                continue
+            stats = self._co_activation(act)
             jobs = np.asarray(stats.jobs)          # [S, H_cand]
             coact = np.asarray(stats.coact)        # [S, H_cand]
             cand = np.argwhere(
                 (jobs >= p.min_jobs) & (coact >= p.min_coactive_steps)
             )
             for si, hi in cand:
-                self._promote(tick, stages[si], cand_hosts[hi])
+                self._promote(tick, group.stages[si], group.hosts[hi])
+
+    def _correlate(
+        self,
+        tick: int,
+        activity: Mapping[str, tuple[np.ndarray, tuple[str, ...]]],
+    ) -> None:
+        """Single-process correlation: plan -> fold -> score, over one
+        local partial set (the same pipeline a sharded coordinator runs
+        distributed — see `CorrelationGroup`)."""
+        plan = self.correlation_plan(activity_meta(activity))
+        folded = []
+        for group in plan:
+            parts = fold_host_activity(group, activity, self.topology)
+            folded.append(
+                (group, np.stack([parts[j] for j in group.job_ids]))
+            )
+        self.correlate_folded(tick, folded)
 
     def _co_activation(self, act: np.ndarray):
         if self.use_kernel:

@@ -7,8 +7,14 @@ multi-pod mesh adds a leading `pod` axis (2 pods = 512 chips).
 from __future__ import annotations
 
 import jax
+import numpy as np
 
-__all__ = ["make_production_mesh", "make_local_mesh", "HARDWARE"]
+__all__ = [
+    "make_production_mesh",
+    "make_local_mesh",
+    "make_fleet_mesh",
+    "HARDWARE",
+]
 
 #: roofline constants (TPU v5e-class), used by repro.analysis.roofline.
 HARDWARE = {
@@ -40,3 +46,19 @@ def make_local_mesh(data: int | None = None, model: int = 1):
     return jax.make_mesh(
         (data, model), ("data", "model"), **_axis_type_kwargs(2)
     )
+
+
+def make_fleet_mesh(shards: int | None = None):
+    """1-D ``shard`` mesh for the sharded fleet service.
+
+    One mesh slot per worker shard, over the host's devices: on CPU,
+    set ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before
+    the first jax import to expose N devices in one process (the
+    N-shard CPU test rig; see `fleet.shard.ShardedFleetService`).  When
+    fewer devices exist than `shards`, the mesh is built over what
+    exists and `distributed.sharding.shard_placements` round-robins the
+    shards onto it.
+    """
+    devs = jax.devices()
+    n = len(devs) if shards is None else max(1, min(int(shards), len(devs)))
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("shard",))

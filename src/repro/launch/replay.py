@@ -47,6 +47,16 @@ def make_argparser() -> argparse.ArgumentParser:
                    help="kernel refresh route: the fused megakernel or "
                         "the four-dispatch reference (bit-identical; "
                         "four-dispatch is the triage fallback)")
+    p.add_argument("--shards", type=int, default=None,
+                   help="replay through an N-shard ShardedFleetService "
+                        "(stable job-id hash partition; the report is "
+                        "bit-identical to the unsharded replay outside "
+                        "wall-clock fields)")
+    p.add_argument("--shard-workers", default="thread",
+                   choices=["thread", "inline"],
+                   help="per-shard lanes under --shards (thread = "
+                        "overlapped decode/dispatch, inline = "
+                        "sequential reference)")
     # synthetic-trace shape (ignored with --trace)
     p.add_argument("--jobs", type=int, default=12)
     p.add_argument("--ticks", type=int, default=16)
@@ -80,11 +90,13 @@ def run(args) -> dict:
         trace, wire=args.wire, compress=args.compress, top_k=args.top_k,
         evict_after=args.evict_after, incidents=args.incidents,
         fused=args.tick_path == "fused",
+        shards=args.shards, shard_workers=args.shard_workers,
     )
     out = report.as_dict()
     out["wire"] = args.wire
     out["compress"] = args.compress
     out["tick_path"] = args.tick_path
+    out["shards"] = args.shards or 0
     return out
 
 

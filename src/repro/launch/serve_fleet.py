@@ -30,7 +30,7 @@ import json
 import time
 
 from ..core import WindowAggregator
-from ..fleet import FleetService
+from ..fleet import FleetService, ShardedFleetService
 from ..incidents import EscalationController, IncidentEngine
 from ..sim import ClusterSpec, simulate
 from ..sim.scenarios import (
@@ -89,6 +89,22 @@ def make_argparser() -> argparse.ArgumentParser:
                         "state per job (pass-through to FleetRegistry "
                         "regime_windows; default 4).  The knob that "
                         "bounds memory on very long runs")
+    p.add_argument("--shards", type=int, default=None,
+                   help="serve through a ShardedFleetService with this "
+                        "many worker shards (stable job-id hash "
+                        "partition; answers are bit-identical to the "
+                        "default single-process service).  On CPU, set "
+                        "XLA_FLAGS=--xla_force_host_platform_device_"
+                        "count=N before launch to give each shard its "
+                        "own device")
+    p.add_argument("--shard-workers", default="thread",
+                   choices=["thread", "inline"],
+                   help="per-shard execution lanes under --shards: "
+                        "'thread' overlaps wire decode with kernel "
+                        "dispatch across shards; 'inline' runs shards "
+                        "sequentially (deterministic debugging "
+                        "reference — same outputs, only wall-clock "
+                        "differs)")
     return p
 
 
@@ -155,11 +171,19 @@ def run(args) -> dict:
         if engine is not None
         else None
     )
-    service = FleetService(
-        window_capacity=args.window, evict_after=2, degrade_after=2,
-        regime_windows=args.max_windows or 4,
-        incidents=engine,
-    )
+    if args.shards:
+        service = ShardedFleetService(
+            shards=args.shards, workers=args.shard_workers,
+            window_capacity=args.window, evict_after=2, degrade_after=2,
+            regime_windows=args.max_windows or 4,
+            incidents=engine,
+        )
+    else:
+        service = FleetService(
+            window_capacity=args.window, evict_after=2, degrade_after=2,
+            regime_windows=args.max_windows or 4,
+            incidents=engine,
+        )
     jobs = _build_jobs(args)
     packets_sent = 0
     bytes_sent = 0
@@ -210,10 +234,13 @@ def run(args) -> dict:
                 controller.plan(service.current_tick, engine.incidents())
             )
     elapsed = time.perf_counter() - t0
+    if args.shards:
+        service.close()
 
     out = {
         "jobs": args.jobs,
         "rounds": args.rounds,
+        "shards": args.shards or 0,
         "wire": args.wire,
         "compress": args.compress,
         "packets_sent": packets_sent,

@@ -234,6 +234,8 @@ def replay_trace(
     incidents: bool = False,
     service: FleetService | None = None,
     fused: bool = True,
+    shards: int | None = None,
+    shard_workers: str = "thread",
 ) -> ReplayReport:
     """Replay `trace` through a `FleetService`; see the module docstring.
 
@@ -247,7 +249,11 @@ def replay_trace(
     `fused` picks the kernel refresh path (megakernel vs the
     four-dispatch reference — bit-identical by contract, so the
     resulting reports differ only in wall-clock fields); it is ignored
-    when `service` is caller-owned.
+    when `service` is caller-owned.  `shards` replays through an
+    N-shard `fleet.shard.ShardedFleetService` instead (also ignored
+    with a caller-owned service) — reports differ from the unsharded
+    replay only in wall-clock fields, the second bit-identity contract
+    the replay front end validates.
     """
     report = ReplayReport(
         trace_name=trace.name,
@@ -260,18 +266,31 @@ def replay_trace(
             "skip_reasons": dict(trace.stats.skip_reasons),
         },
     )
+    owned = service is None
     if service is None:
         engine: "IncidentEngine | None" = None
         if incidents:
             from ..incidents import IncidentEngine
 
             engine = IncidentEngine()
-        service = FleetService(
-            window_capacity=trace.window_steps,
-            evict_after=evict_after,
-            incidents=engine,
-            fused=fused,
-        )
+        if shards:
+            from ..fleet import ShardedFleetService
+
+            service = ShardedFleetService(
+                shards=shards,
+                workers=shard_workers,
+                window_capacity=trace.window_steps,
+                evict_after=evict_after,
+                incidents=engine,
+                fused=fused,
+            )
+        else:
+            service = FleetService(
+                window_capacity=trace.window_steps,
+                evict_after=evict_after,
+                incidents=engine,
+                fused=fused,
+            )
 
     live: dict[str, _LiveJob] = {}
     ever_seen: set[str] = set()
@@ -406,4 +425,6 @@ def replay_trace(
     report.elapsed_s = time.perf_counter() - t0
     report.evictions = service.evicted_total
     report.snapshot = service.snapshot()
+    if owned and shards:
+        service.close()
     return report

@@ -396,6 +396,7 @@ def shared_host_fleet(
     family: str = "step",
     distractor_family: str | None = "blip",
     sync=DDP_SYNC,
+    shard_split: int | None = None,
 ) -> SharedHostFleet:
     """Simulated fleet where `shared_jobs` of `jobs` share one faulted host.
 
@@ -407,15 +408,27 @@ def shared_host_fleet(
     incident must be active, not healed).  Non-sharing jobs optionally
     carry a `distractor_family` blip on a private host: a correlator that
     merely clusters "any fault anywhere" would wrongly promote it.
+
+    `shard_split=N` derives each job's id with
+    `fleet.shard.job_id_for_shard` so job j hashes to shard ``j % N`` of
+    an N-shard `ShardedFleetService` — with ``N >= shared_jobs`` every
+    host-sharing job is GUARANTEED to live on a different shard, the
+    placement that forces common-cause promotion through the cross-shard
+    activity reduce (no lucky co-location).
     """
     if not 0 <= shared_jobs <= jobs:
         raise ValueError(f"shared_jobs={shared_jobs} outside [0, {jobs}]")
+    if shard_split is not None:
+        # lazy: sim stays importable without the fleet tier loaded
+        from ..fleet.shard import job_id_for_shard
     shared_host = f"shared-{seed}"
     scenarios: dict[str, Scenario] = {}
     shared_ids: list[str] = []
     fault_ranks: dict[str, int] = {}
     for j in range(jobs):
         job_id = f"job-{j:03d}"
+        if shard_split is not None:
+            job_id = job_id_for_shard(job_id, j % shard_split, shard_split)
         rank = regime_fault_rank(seed + j, world_size)
         hosts = list(
             ClusterSpec.uniform(

@@ -3,8 +3,55 @@
 Deliberately does NOT set --xla_force_host_platform_device_count: smoke
 tests and benches must see the real single CPU device; only
 repro.launch.dryrun forces 512 placeholder devices (and only in its own
-process).
+process), and the N-shard fleet rig (`shard_rig_env` below) forces 8 in
+a SUBPROCESS pytest it spawns — never in this interpreter.
 """
 import os
+import sys
+
+import pytest
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+#: marker env var: set in the subprocess the shard rig spawns, so the
+#: tests in tests/test_sharded_fleet.py know they run on the forced
+#: 8-device topology (device-pinning assertions activate there).
+SHARD_RIG_VAR = "REPRO_SHARD_RIG"
+SHARD_RIG_DEVICES = 8
+
+
+@pytest.fixture(scope="session")
+def shard_rig_env() -> dict:
+    """Environment for the N-device CPU shard rig subprocess.
+
+    jax fixes its device topology at first import, so the only way to
+    test N-shard-on-N-device behavior from a single-device test session
+    is a fresh interpreter with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` exported
+    BEFORE jax loads.  The rig launcher (`tests/test_sharded_fleet.py::
+    test_rig_subprocess_eight_devices`) runs ``python -m pytest`` on the
+    sharded-fleet suite under this env; the suite's own tests read
+    `REPRO_SHARD_RIG` to switch on the device-pinning assertions.
+    """
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count="
+        f"{SHARD_RIG_DEVICES}"
+    ).strip()
+    env[SHARD_RIG_VAR] = "1"
+    env["JAX_PLATFORMS"] = "cpu"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(root, "src")
+    env["PYTHONPATH"] = (
+        src + os.pathsep + env["PYTHONPATH"]
+        if env.get("PYTHONPATH")
+        else src
+    )
+    return env
+
+
+@pytest.fixture(scope="session")
+def shard_rig_python() -> str:
+    """Interpreter for the rig subprocess (the running one)."""
+    return sys.executable

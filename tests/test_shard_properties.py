@@ -1,0 +1,194 @@
+"""Property-based tests (hypothesis) for the sharded fleet service.
+
+Three invariants a hash-partitioned coordinator can silently break:
+
+  1. **shard-count invariance** — routes, snapshots, and the incident
+     table are functions of the traffic, never of N: any shard count
+     answers exactly like the unsharded `FleetService`;
+  2. **interleaving invariance** — permuting one tick's batch (at most
+     one packet per job per batch, so permutation is semantics-
+     preserving by construction) changes nothing: the partition
+     preserves per-shard arrival order and every output is sorted under
+     a total key, so batch order must be unobservable;
+  3. **churn-counter exactness** — `windows_seen` / `duplicate_total`
+     stay exact (vs an independent model) under ANY interleaving of
+     arrival, eviction, and same-id re-arrival, with the jobs split
+     across shards — per-shard counters sum to the fleet truth, never
+     double- or under-count across the partition.
+
+Scores are drawn from a tiny value set so equal-score ties across
+shards occur constantly — every run exercises the route-merge tie
+order, not just the happy path.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.fleet import FleetService, ShardedFleetService
+from repro.telemetry.packets import EvidencePacket
+
+STAGES = ("s0", "s1")
+R, W = 2, 4
+JOB_IDS = ("a", "b", "c", "d", "e", "f")
+SHARD_COUNTS = (1, 2, 3, 5)
+
+
+def mk_packet(window_index: int, gain: float = 0.1) -> EvidencePacket:
+    """Predecoded packet (no wire round-trip, no window tensor): churn
+    and routing behavior without kernel work, so hypothesis can afford
+    many examples.  `gain` sets the routing score — drawn from a small
+    set so cross-job (and cross-shard) score ties are common."""
+    return EvidencePacket(
+        window_index=window_index,
+        schema_hash="h0",
+        stages=STAGES,
+        steps=W,
+        world_size=R,
+        gather_ok=True,
+        labels=(),
+        routing_stages=("s0",),
+        shares=(0.6, 0.4),
+        gains=(gain, 0.0),
+        co_critical_stages=(),
+        downgrade_reasons=(),
+        leader_rank=0,
+        exposed_total=float(W * 0.02),
+    )
+
+
+def observable(svc) -> tuple:
+    """Everything the parity contract covers, as one comparable value."""
+    return (
+        [
+            (e.job_id, e.stage, e.rank, e.score)
+            for e in svc.route(len(JOB_IDS) + 2)
+        ],
+        svc.snapshot(),
+    )
+
+
+def run_service(svc, batches, *, close=False) -> list:
+    out = []
+    for batch in batches:
+        svc.submit_many(batch)
+        svc.tick()
+        out.append(observable(svc))
+    if close:
+        svc.close()
+    return out
+
+
+# -- strategies -------------------------------------------------------------
+
+#: one tick's batch: at most one packet per job (unique_by), each with a
+#: window index and a score-determining gain.
+batch = st.lists(
+    st.tuples(
+        st.sampled_from(JOB_IDS),
+        st.integers(0, 3),
+        st.sampled_from([0.1, 0.2]),
+    ),
+    max_size=len(JOB_IDS),
+    unique_by=lambda t: t[0],
+)
+batches_strategy = st.lists(batch, min_size=1, max_size=5)
+
+
+def materialize(raw) -> list:
+    return [
+        [(job, mk_packet(wi, gain)) for job, wi, gain in tick_batch]
+        for tick_batch in raw
+    ]
+
+
+# -- 1. shard-count invariance ----------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(batches_strategy, st.sampled_from(SHARD_COUNTS))
+def test_outputs_invariant_to_shard_count(raw, shards):
+    batches = materialize(raw)
+    ref = run_service(FleetService(evict_after=2), batches)
+    got = run_service(
+        ShardedFleetService(shards=shards, workers="inline", evict_after=2),
+        batches,
+        close=True,
+    )
+    assert got == ref
+
+
+# -- 2. interleaving invariance ---------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    batches_strategy.filter(lambda bs: any(len(b) > 1 for b in bs)),
+    st.randoms(use_true_random=False),
+    st.sampled_from(SHARD_COUNTS),
+)
+def test_outputs_invariant_to_submission_interleaving(raw, rng, shards):
+    batches = materialize(raw)
+    shuffled = [list(b) for b in batches]
+    for b in shuffled:
+        rng.shuffle(b)
+    ref = run_service(
+        ShardedFleetService(shards=shards, workers="inline", evict_after=2),
+        batches,
+        close=True,
+    )
+    got = run_service(
+        ShardedFleetService(shards=shards, workers="inline", evict_after=2),
+        shuffled,
+        close=True,
+    )
+    assert got == ref
+
+
+# -- 3. churn counters exact across the partition ---------------------------
+
+#: one op: deliver (job, window_index) or advance the fleet clock one
+#: tick (evictions fire) — arrivals, evictions, and same-id re-arrivals
+#: interleave arbitrarily, and the jobs hash across all shards.
+churn_op = st.one_of(
+    st.tuples(
+        st.just("pkt"), st.sampled_from(JOB_IDS), st.integers(0, 3)
+    ),
+    st.tuples(st.just("tick"), st.none(), st.none()),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(churn_op, min_size=1, max_size=40),
+       st.sampled_from(SHARD_COUNTS))
+def test_churn_counters_exact_across_shards(ops, shards):
+    svc = ShardedFleetService(
+        shards=shards, workers="inline", evict_after=2
+    )
+    # independent model of the counters (mirrors the unsharded churn
+    # property in test_churn_properties.py — same eviction window)
+    tick = 0
+    last_wi: dict[str, int] = {}
+    last_seen: dict[str, int] = {}
+    expected_windows = 0
+    packets_sent = 0
+    for kind, job, wi in ops:
+        if kind == "tick":
+            svc.tick()
+            tick += 1
+            for j in [j for j, t in last_seen.items() if tick - t >= 2]:
+                del last_seen[j], last_wi[j]
+        else:
+            svc.submit(job, mk_packet(wi))
+            packets_sent += 1
+            if job not in last_wi or last_wi[job] != wi:
+                expected_windows += 1
+                last_wi[job] = wi
+            last_seen[job] = tick
+        snap = svc.snapshot()
+        assert snap["windows_seen"] == expected_windows
+        assert snap["duplicate_total"] == packets_sent - expected_windows
+    # the partition never loses or double-counts: per-shard sums equal
+    # the model AND the per-shard registries partition the live set
+    assert sum(len(s.registry) for s in svc.shards) == len(svc)
+    assert len(svc) == len(last_seen)
+    svc.close()

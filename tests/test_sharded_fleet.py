@@ -1,0 +1,401 @@
+"""Sharded fleet service: the N-shard differential + CPU device rig.
+
+The `ShardedFleetService` contract is bit-identity: any shard count,
+any worker mode, any job->shard placement must answer `route`,
+`snapshot`, and the incident table EXACTLY like one `FleetService`
+ingesting the same packets.  These tests run the same wire traffic
+through both and compare — per scenario family, per shard count
+(N=1,2,3,8), with fleets smaller and larger than N, and with the
+host-sharing jobs forced onto different shards so common-cause
+promotion must cross the shard boundary (the cross-shard activity
+reduce, not lucky co-location).
+
+The suite runs twice:
+  * in tier-1 on the single real CPU device (device pinning inactive —
+    every shard dispatches to the one device);
+  * inside the N-device CPU rig: `test_rig_subprocess_eight_devices`
+    (slow) re-runs this whole file in a subprocess with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` exported
+    before jax loads, where the `requires_rig` tests additionally pin
+    the 8 shards to 8 distinct devices and re-check parity.
+"""
+import functools
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import WindowAggregator
+from repro.fleet import FleetService, ShardedFleetService
+from repro.fleet.shard import job_id_for_shard, shard_of
+from repro.incidents import IncidentEngine
+from repro.sim import simulate
+from repro.sim.scenarios import shared_host_fleet
+from repro.telemetry.packets import encode_packet, from_diagnosis
+
+IN_RIG = os.environ.get("REPRO_SHARD_RIG") == "1"
+requires_rig = pytest.mark.skipif(
+    not IN_RIG, reason="needs the 8-device rig subprocess"
+)
+
+WINDOW = 20
+SHARD_SWEEP = (1, 2, 3, 8)
+
+
+# -- traffic ----------------------------------------------------------------
+# Packets depend only on the scenario, never on the service under test:
+# build each fleet's wire batches ONCE and replay the same bytes through
+# every (shards, workers) configuration — that is what makes the
+# comparison a differential rather than two runs that merely resemble
+# each other.
+
+@functools.lru_cache(maxsize=None)
+def wire_batches(
+    family: str,
+    jobs: int = 4,
+    shared_jobs: int = 2,
+    windows: int = 2,
+    seed: int = 1,
+    shard_split: int | None = None,
+    drop_after: tuple = (),
+) -> tuple:
+    """`drop_after` is a tuple of (job_id, last_window) pairs: the job
+    stops reporting after that window (the eviction path)."""
+    drops = dict(drop_after)
+    fl = shared_host_fleet(
+        jobs=jobs, shared_jobs=shared_jobs, steps=windows * WINDOW,
+        seed=seed, family=family, shard_split=shard_split,
+    )
+    sims = {j: simulate(sc) for j, sc in fl.scenarios.items()}
+    aggs = {
+        j: WindowAggregator(sc.schema(), window_steps=WINDOW)
+        for j, sc in fl.scenarios.items()
+    }
+    out = []
+    for w in range(windows):
+        batch = []
+        for jid, sc in fl.scenarios.items():
+            if w > drops.get(jid, w):
+                continue  # job stopped reporting: the eviction path
+            block = sims[jid].durations[w * WINDOW:(w + 1) * WINDOW]
+            report = None
+            for t in range(WINDOW):
+                report = aggs[jid].add_step(
+                    block[t], block[t].sum(-1)
+                ) or report
+            pkt = from_diagnosis(
+                report.diagnosis, sc.stages, report.steps,
+                sc.world_size, report.window_index,
+                window=report.durations, sync_stages=sc.sync_stages,
+                first_step=w * WINDOW, hosts=sc.hosts,
+            )
+            batch.append((jid, encode_packet(pkt, compress="int8")))
+        out.append(tuple(batch))
+    return tuple(out)
+
+
+def drive(svc, eng, batches, *, extra_ticks: int = 0):
+    """Replay `batches` (+ `extra_ticks` empty ticks) and collect every
+    externally observable answer the parity contract covers."""
+    routes, snaps = [], []
+    for batch in batches:
+        svc.submit_many(list(batch), refresh=True)
+        svc.tick()
+        routes.append(svc.route(10))
+        snaps.append(svc.snapshot())
+    for _ in range(extra_ticks):
+        svc.submit_many([])
+        svc.tick()
+        routes.append(svc.route(10))
+        snaps.append(svc.snapshot())
+    incs = (
+        tuple(
+            (i.incident_id, i.scope, i.state, i.host, i.stage,
+             i.member_jobs)
+            for i in eng.incidents()
+        )
+        if eng is not None
+        else ()
+    )
+    return routes, snaps, incs
+
+
+def run_unsharded(batches, *, incidents=True, extra_ticks=0):
+    eng = IncidentEngine() if incidents else None
+    svc = FleetService(
+        window_capacity=WINDOW, evict_after=2, incidents=eng
+    )
+    return drive(svc, eng, batches, extra_ticks=extra_ticks)
+
+
+def run_sharded(
+    batches, shards, *, workers="inline", incidents=True, extra_ticks=0
+):
+    eng = IncidentEngine() if incidents else None
+    svc = ShardedFleetService(
+        shards=shards, workers=workers, window_capacity=WINDOW,
+        evict_after=2, incidents=eng,
+    )
+    try:
+        return drive(svc, eng, batches, extra_ticks=extra_ticks)
+    finally:
+        svc.close()
+
+
+# -- the hash partition -----------------------------------------------------
+
+def test_shard_of_is_stable_and_in_range():
+    # CRC-32 is process-stable: pin concrete assignments so any change
+    # to the partition function (which would orphan all live registry
+    # state on a rolling restart) fails loudly.
+    assert shard_of("job-000", 8) == 3
+    assert shard_of("job-001", 8) == 5
+    for shards in (1, 2, 3, 8, 11):
+        for j in range(50):
+            assert 0 <= shard_of(f"job-{j:03d}", shards) < shards
+    with pytest.raises(ValueError):
+        shard_of("x", 0)
+
+
+def test_job_id_for_shard_hits_requested_shard():
+    for shards in (2, 3, 8):
+        for target in range(shards):
+            jid = job_id_for_shard("job-007", target, shards)
+            assert shard_of(jid, shards) == target
+            # deterministic: same request, same id
+            assert jid == job_id_for_shard("job-007", target, shards)
+    # a base already on the target is returned unchanged
+    base = "job-000"
+    assert job_id_for_shard(base, shard_of(base, 8), 8) == base
+    with pytest.raises(ValueError):
+        job_id_for_shard("x", 5, 3)
+
+
+def test_partition_preserves_per_shard_order():
+    svc = ShardedFleetService(shards=3, workers="inline")
+    items = [(f"j{i}", b"") for i in range(20)]
+    parts = svc.partition(items)
+    assert sum(len(p) for p in parts) == len(items)
+    for si, part in enumerate(parts):
+        assert [shard_of(j, 3) for j, _ in part] == [si] * len(part)
+    # arrival order within a shard is the original order
+    flat_positions = {j: i for i, (j, _) in enumerate(items)}
+    for part in parts:
+        pos = [flat_positions[j] for j, _ in part]
+        assert pos == sorted(pos)
+
+
+# -- the differential -------------------------------------------------------
+
+@pytest.mark.parametrize("shards", SHARD_SWEEP)
+@pytest.mark.parametrize("family", ["step", "drift", "intermittent", "blip"])
+def test_bit_identical_per_family(family, shards):
+    """Every scenario family, every shard count: routes, snapshots, and
+    the incident table match the unsharded service exactly."""
+    batches = wire_batches(family)
+    r1, s1, i1 = run_unsharded(batches)
+    r2, s2, i2 = run_sharded(batches, shards)
+    assert r1 == r2
+    assert s1 == s2
+    assert i1 == i2
+
+
+@pytest.mark.parametrize("workers", ["inline", "thread"])
+def test_worker_modes_agree(workers):
+    """Thread lanes (overlapped decode/dispatch) change wall-clock
+    only — outputs are identical to the inline reference."""
+    batches = wire_batches("step")
+    assert run_sharded(batches, 3, workers=workers) == run_unsharded(
+        batches
+    )
+
+
+@pytest.mark.parametrize("jobs,shards", [(2, 8), (12, 3)])
+def test_jobs_below_and_above_shard_count(jobs, shards):
+    """J < N leaves shards empty; J > N packs several jobs per shard —
+    both must be invisible in the answers."""
+    batches = wire_batches("step", jobs=jobs, shared_jobs=2)
+    assert run_sharded(batches, shards) == run_unsharded(batches)
+
+
+def test_eviction_differential():
+    """A job that stops reporting evicts on ITS shard at the same tick
+    (and with the same downstream incident resolution) as unsharded."""
+    batches = wire_batches(
+        "step", jobs=4, windows=3, drop_after=(("job-000", 0),)
+    )
+    r1, s1, i1 = run_unsharded(batches, extra_ticks=3)
+    for shards in (2, 8):
+        r2, s2, i2 = run_sharded(batches, shards, extra_ticks=3)
+        assert (r1, s1, i1) == (r2, s2, i2)
+    assert s1[-1]["evicted_total"] >= 1
+
+
+# -- route-merge tie order (the latent hazard) ------------------------------
+
+def test_route_merge_tie_order_across_shards():
+    """Two jobs with IDENTICAL traffic on different shards produce
+    equal scores; the merged route must order them by (job_id, rank) —
+    exactly as the unsharded sort does — not by shard position.
+
+    This is the latent hazard the coordinator asserts against: a merge
+    that concatenated per-shard answers and stable-sorted on score
+    alone would order equal-score jobs by shard index instead.
+    """
+    fl = shared_host_fleet(
+        jobs=1, shared_jobs=0, steps=2 * WINDOW, seed=7,
+        distractor_family="step",
+    )
+    (base_id, sc), = fl.scenarios.items()
+    res = simulate(sc)
+    # the same windows under several ids, placed on DIFFERENT shards of
+    # a 3-shard service (and deliberately not in id order per shard)
+    clones = [job_id_for_shard(f"tie-{c}", c % 3, 3) for c in range(4)]
+    assert len({shard_of(j, 3) for j in clones}) == 3
+    batches = []
+    for w in range(2):
+        agg_by_id = {}
+        batch = []
+        for jid in clones:
+            agg = WindowAggregator(sc.schema(), window_steps=WINDOW)
+            agg_by_id[jid] = agg
+            block = res.durations[w * WINDOW:(w + 1) * WINDOW]
+            report = None
+            for t in range(WINDOW):
+                report = agg.add_step(block[t], block[t].sum(-1)) or report
+            pkt = from_diagnosis(
+                report.diagnosis, sc.stages, report.steps, sc.world_size,
+                report.window_index, window=report.durations,
+                sync_stages=sc.sync_stages, first_step=w * WINDOW,
+            )
+            batch.append((jid, encode_packet(pkt, compress="int8")))
+        batches.append(tuple(batch))
+
+    r1, s1, _ = run_unsharded(tuple(batches), incidents=False)
+    r2, s2, _ = run_sharded(tuple(batches), 3, incidents=False)
+    assert r1 == r2
+    assert s1 == s2
+    final = r2[-1]
+    assert len(final) == len(clones)
+    scores = {e.score for e in final}
+    assert len(scores) == 1, "clones must tie for the test to bite"
+    assert [e.job_id for e in final] == sorted(e.job_id for e in final)
+
+
+# -- cross-shard incidents --------------------------------------------------
+
+def test_cross_shard_common_cause_promotes_once():
+    """Host-sharing jobs forced onto DIFFERENT shards still promote
+    exactly one fleet-scoped incident on the shared host — through the
+    cross-shard activity reduce, bit-identical to unsharded."""
+    batches = wire_batches("step", shard_split=3)
+    eng = IncidentEngine()
+    svc = ShardedFleetService(
+        shards=3, workers="inline", window_capacity=WINDOW,
+        evict_after=2, incidents=eng,
+    )
+    # precondition: the sharing jobs really straddle shards
+    fl = shared_host_fleet(
+        jobs=4, shared_jobs=2, steps=2 * WINDOW, seed=1, family="step",
+        shard_split=3,
+    )
+    owners = {shard_of(j, 3) for j in fl.shared_job_ids}
+    assert len(owners) == len(fl.shared_job_ids) >= 2
+    drive(svc, eng, batches)
+    svc.close()
+    fleet = [i for i in eng.incidents() if i.scope == "fleet"]
+    assert len(fleet) == 1
+    assert fleet[0].host == fl.shared_host
+    assert fleet[0].member_jobs == tuple(sorted(fl.shared_job_ids))
+    # and the whole table matches the unsharded engine
+    _, _, i1 = run_unsharded(batches)
+    _, _, i2 = run_sharded(batches, 3)
+    assert i1 == i2
+
+
+def test_eviction_on_one_shard_never_resurrects_anothers_incident():
+    """Shard A's job departs and evicts; shard B's incident must keep
+    its own lifecycle — stay live on ITS evidence, not resolve or churn
+    on A's eviction tick (table identical to unsharded)."""
+    # both host-sharing jobs are faulted and on different shards; the
+    # first stops reporting after window 1 and evicts, the second keeps
+    # reporting through window 2
+    fl = shared_host_fleet(
+        jobs=4, shared_jobs=2, steps=3 * WINDOW, seed=1, family="step",
+        shard_split=3,
+    )
+    a, b = fl.shared_job_ids[:2]
+    assert shard_of(a, 3) != shard_of(b, 3)
+    dropped = wire_batches(
+        "step", jobs=4, windows=3, shard_split=3, drop_after=((a, 1),)
+    )
+    r1, s1, i1 = run_unsharded(dropped)
+    r2, s2, i2 = run_sharded(dropped, 3)
+    assert (r1, s1, i1) == (r2, s2, i2)
+    assert s2[-1]["evicted_total"] == 1  # a, and only a
+    # b's incident survives a's eviction on the other shard, still live
+    b_states = {st for iid, _, st, *_ in i2
+                if iid.startswith(f"ij:{b}:")}
+    assert "active" in b_states or "open" in b_states, i2
+
+
+# -- the N-device rig -------------------------------------------------------
+
+@requires_rig
+def test_rig_exposes_eight_devices():
+    import jax
+
+    assert len(jax.devices()) == 8
+    assert all(d.platform == "cpu" for d in jax.devices())
+
+
+@requires_rig
+def test_rig_pins_each_shard_to_its_own_device():
+    import jax
+
+    svc = ShardedFleetService(shards=8, workers="inline")
+    devices = [s.device for s in svc.shards]
+    assert all(d is not None for d in devices)
+    assert len(set(devices)) == 8
+    assert set(devices) == set(jax.devices())
+    svc.close()
+
+
+@requires_rig
+def test_rig_parity_with_device_pinning():
+    """The full differential again, now with each shard's kernel
+    refresh dispatched onto its own forced-host device."""
+    batches = wire_batches("step", shard_split=3)
+    r1, s1, i1 = run_unsharded(batches)
+    for shards in (3, 8):
+        for workers in ("inline", "thread"):
+            r2, s2, i2 = run_sharded(batches, shards, workers=workers)
+            assert (r1, s1, i1) == (r2, s2, i2)
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(IN_RIG, reason="already inside the rig")
+def test_rig_subprocess_eight_devices(shard_rig_env, shard_rig_python):
+    """Launch the 8-device rig: this file, fresh interpreter, forced
+    device count exported before jax loads."""
+    proc = subprocess.run(
+        [shard_rig_python, "-m", "pytest", "-v", "-p", "no:cacheprovider",
+         os.path.abspath(__file__)],
+        env=shard_rig_env,
+        capture_output=True,
+        text=True,
+        timeout=1200,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert proc.returncode == 0, (
+        f"rig pytest failed\n--- stdout ---\n{proc.stdout[-4000:]}"
+        f"\n--- stderr ---\n{proc.stderr[-2000:]}"
+    )
+    # the rig-only tests must have RUN in there, not skipped
+    for name in (
+        "test_rig_exposes_eight_devices",
+        "test_rig_pins_each_shard_to_its_own_device",
+        "test_rig_parity_with_device_pinning",
+    ):
+        assert f"{name} PASSED" in proc.stdout, f"{name} did not run"
