@@ -1,0 +1,266 @@
+"""Fabric attribution: tier-correct promotion, tiered kernel parity.
+
+The hierarchical topology refactor (rank -> host -> switch -> pod)
+claims the incident engine attributes a fabric fault to the NARROWEST
+tier that explains the cross-job co-activation — a shared host stays a
+host incident, an oversubscribed uplink over distinct hosts becomes ONE
+switch incident (never per-host duplicates), pod-wide congestion over
+distinct switches becomes one pod incident.  This benchmark gates:
+
+  1. **tier attribution** — for every fabric fault family
+     (`sim.scenarios.FABRIC_FAMILIES`: shared_host / oversub_uplink /
+     flapping_switch / pod_congestion), wire-drive a FleetService +
+     IncidentEngine over the labelled `fabric_fleet` and require the
+     single fleet incident to name the injected tier AND node with the
+     right member jobs in >= 90% of seeded trials per family;
+  2. **tiered kernel parity** — `kernels.frontier.tiered_co_activation`
+     (host + every fabric tier scored in ONE Pallas dispatch over the
+     concatenated node axis) must equal `tiered_co_activation_ref`
+     EXACTLY per tier on every shape group, including -1 grouping holes
+     and degenerate single-node tiers (integer statistics: any mismatch
+     is a bug, not a tolerance);
+  3. **trace-front-end tier scoring** — the shared-switch synthetic
+     trace (`replay.generate_trace(shared_switch=True)`) replayed
+     through a caller-owned service must surface the switch-tier fleet
+     incident on the shared uplink, proving SFP2-v3 placement survives
+     the full trace -> wire -> engine path;
+  4. one-dispatch tiered scoring must not lose to scoring each tier
+     with its own dispatch (printed, not gated: CI timing is noisy).
+
+Run:  PYTHONPATH=src python -m benchmarks.fabric_attribution [--smoke]
+(`--smoke` shrinks trial counts/shapes for CI; every correctness gate
+still applies — only the throughput ratio is printed-not-enforced.)
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import WindowAggregator
+from repro.fleet import FleetService
+from repro.incidents import IncidentEngine
+from repro.kernels.frontier import (
+    TierAxes,
+    co_activation,
+    tiered_co_activation,
+    tiered_co_activation_ref,
+)
+from repro.sim import simulate
+from repro.sim.scenarios import FABRIC_FAMILIES, fabric_fleet
+from repro.telemetry.packets import encode_packet, from_diagnosis
+
+from . import common
+from .common import emit, time_us
+
+
+# ---------------------------------------------------------------------------
+# 1. tier attribution across the fabric fault families
+# ---------------------------------------------------------------------------
+
+
+def drive_fabric(family: str, seed: int, *, jobs: int = 6, shared: int = 3,
+                 steps: int = 60, window: int = 20) -> tuple:
+    """One trial: wire-drive a FleetService+IncidentEngine over the
+    labelled fabric fleet; returns (fleet_incidents, truth, engine)."""
+    fleet = fabric_fleet(
+        family, jobs=jobs, shared_jobs=shared, steps=steps, seed=seed
+    )
+    engine = IncidentEngine()
+    svc = FleetService(
+        window_capacity=window, incidents=engine,
+        fused=common.fused_tick_path(),
+    )
+    sims = {j: simulate(sc) for j, sc in fleet.scenarios.items()}
+    aggs = {
+        j: WindowAggregator(sc.schema(), window_steps=window)
+        for j, sc in fleet.scenarios.items()
+    }
+    for w in range(steps // window):
+        batch = []
+        for jid, sc in fleet.scenarios.items():
+            block = sims[jid].durations[w * window:(w + 1) * window]
+            report = None
+            for t in range(block.shape[0]):
+                report = aggs[jid].add_step(
+                    block[t], block[t].sum(-1)
+                ) or report
+            pkt = from_diagnosis(
+                report.diagnosis, sc.stages, report.steps, sc.world_size,
+                report.window_index, window=report.durations,
+                sync_stages=sc.sync_stages, first_step=w * window,
+                hosts=sc.hosts, switches=sc.switches, pods=sc.pods,
+            )
+            batch.append((jid, encode_packet(pkt, compress="int8")))
+        svc.submit_many(batch, refresh=True)
+        svc.tick()
+    fleet_incs = [i for i in engine.incidents() if i.scope == "fleet"]
+    return fleet_incs, fleet, engine
+
+
+def validate_attribution(trials: int = 5) -> dict:
+    """Per-family fraction of trials whose ONE fleet incident names the
+    injected tier + node with the right member jobs."""
+    acc = {}
+    for family in FABRIC_FAMILIES:
+        correct = 0
+        for seed in range(trials):
+            fleet_incs, truth, _ = drive_fabric(family, seed)
+            # exactly one fleet incident per trial: the narrowest tier
+            # claims the members, so no wider duplicate may coexist
+            assert len(fleet_incs) == 1, (
+                f"{family} seed {seed}: expected exactly 1 fleet "
+                f"incident, got {[i.incident_id for i in fleet_incs]}"
+            )
+            inc = fleet_incs[0]
+            if (
+                inc.tier == truth.tier
+                and inc.host == truth.node
+                and tuple(sorted(inc.member_jobs))
+                == tuple(sorted(truth.member_job_ids))
+            ):
+                correct += 1
+        acc[family] = correct / trials
+        emit(f"fabric_attribution/{family}", 0.0,
+             f"tier={FABRIC_FAMILIES[family][0]} "
+             f"correct={correct}/{trials}")
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# 2. tiered co-activation kernel parity (exact, all shape groups)
+# ---------------------------------------------------------------------------
+
+#: (J, N, H, S) shape groups; tier axes are derived per shape below.
+SHAPE_GROUPS = [
+    (1, 1, 1, 1),       # degenerate minimum, single-node tiers
+    (2, 5, 4, 6),       # tiny fleet
+    (6, 60, 16, 6),     # the attribution fleet's own shape
+    (3, 12, 130, 6),    # combined host+tier axis spills past 128 lanes
+    (4, 8, 64, 9),      # stages past the 8-sublane pad
+]
+
+
+def _tiers_for(h: int, rng: np.random.Generator) -> tuple:
+    """Derived switch + pod axes with holes (-1 = host off-fabric)."""
+    n_sw = max(1, h // 3)
+    n_pod = max(1, h // 7)
+    sw = rng.integers(-1, n_sw, size=h)
+    pod = rng.integers(-1, n_pod, size=h)
+    return (
+        TierAxes("switch", n_sw, tuple(int(g) for g in sw)),
+        TierAxes("pod", n_pod, tuple(int(g) for g in pod)),
+    )
+
+
+def validate_kernel(shapes=SHAPE_GROUPS) -> None:
+    rng = np.random.default_rng(0)
+    for shape in shapes:
+        act = rng.random(shape) < 0.3
+        for tiers in ((), _tiers_for(shape[2], rng)[:1],
+                      _tiers_for(shape[2], rng)):
+            ref = tiered_co_activation_ref(act, tiers)
+            got = tiered_co_activation(act, tiers)
+            assert len(got) == len(ref) == 1 + len(tiers)
+            for t, (g, r) in enumerate(zip(got, ref)):
+                for field in ("jobs", "coact", "active"):
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(g, field)),
+                        getattr(r, field),
+                        err_msg=f"{shape} tier#{t} {field}",
+                    )
+    emit("fabric_attribution/kernel_parity", 0.0,
+         f"groups={len(shapes)} x tiersets=3 exact")
+
+
+# ---------------------------------------------------------------------------
+# 3. tier scoring through the trace-replay front end (SFP2-v3 path)
+# ---------------------------------------------------------------------------
+
+
+def validate_trace_tier() -> None:
+    from repro.replay import generate_trace, parse_trace, replay_trace
+
+    text = generate_trace(
+        jobs=6, ticks=8, window_steps=8, world_size=8, seed=0,
+        fault_every=3, fabric=True, shared_switch=True,
+    )
+    engine = IncidentEngine()
+    svc = FleetService(
+        window_capacity=8, evict_after=3, incidents=engine,
+        fused=common.fused_tick_path(),
+    )
+    report = replay_trace(parse_trace(text, name="fabric"), service=svc)
+    fleet = [r for r in report.incidents if r["scope"] == "fleet"]
+    assert any(
+        r["tier"] == "switch" and r["host"] == "fab-sw0" for r in fleet
+    ), f"no switch-tier incident through the trace front end: {fleet}"
+    assert not any(
+        r["tier"] == "host" and r["host"].startswith("fabh") for r in fleet
+    ), f"per-host duplicate alongside the switch incident: {fleet}"
+    emit("fabric_attribution/trace_tier", 0.0,
+         f"switch@fab-sw0 windows={report.windows_replayed}")
+
+
+# ---------------------------------------------------------------------------
+# 4. one fused dispatch vs one dispatch per tier
+# ---------------------------------------------------------------------------
+
+
+def _collapse(act: np.ndarray, axes: TierAxes) -> np.ndarray:
+    out = np.zeros(
+        (act.shape[0], act.shape[1], axes.n_nodes, act.shape[3]), bool
+    )
+    for h, g in enumerate(axes.grouping):
+        if g >= 0:
+            out[:, :, g, :] |= act[:, :, h, :]
+    return out
+
+
+def bench_tiered(jn: int = 16, n: int = 10, h: int = 64, s: int = 6) -> float:
+    rng = np.random.default_rng(1)
+    act = rng.random((jn, n, h, s)) < 0.2
+    tiers = _tiers_for(h, rng)
+
+    def fused():
+        return [np.asarray(p.jobs) for p in tiered_co_activation(act, tiers)]
+
+    def per_tier():
+        outs = [np.asarray(co_activation(act).jobs)]
+        for axes in tiers:
+            outs.append(np.asarray(co_activation(_collapse(act, axes)).jobs))
+        return outs
+
+    fused(); per_tier()  # warm both jit caches before timing
+    fused_us = time_us(fused, repeat=3)
+    loop_us = time_us(per_tier, repeat=3)
+    speedup = loop_us / fused_us
+    emit(
+        f"fabric_attribution/tiered_{jn}jx{n}x{h}x{s}",
+        fused_us,
+        f"per_tier_us={loop_us:.0f} fused_speedup={speedup:.2f}x",
+    )
+    return speedup
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trial counts/shapes for CI; correctness "
+                         "gates still enforced, throughput ratio printed "
+                         "but not gated")
+    args, _ = ap.parse_known_args()
+    trials = 2 if args.smoke else 5
+    shapes = SHAPE_GROUPS[:3] if args.smoke else SHAPE_GROUPS
+    acc = validate_attribution(trials)
+    validate_kernel(shapes)
+    validate_trace_tier()
+    bench_tiered(jn=4 if args.smoke else 16, n=5 if args.smoke else 10)
+    # acceptance: >= 90% of seeded trials attribute the fault to the
+    # correct tier + node in EVERY fabric family.
+    for family, a in acc.items():
+        assert a >= 0.9, f"{family}: tier attribution below 90%: {a:.3f}"
+
+
+if __name__ == "__main__":
+    main()

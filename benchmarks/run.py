@@ -32,6 +32,7 @@ MODULES = [
     ("whatif_matrix", "counterfactual what-if matrix vs per-candidate loop"),
     ("regime_detection", "temporal regime classification + batched route"),
     ("incident_engine", "common-cause attribution + escalation budget law"),
+    ("fabric_attribution", "tiered fabric attribution + tiered-kernel parity"),
     ("trace_replay", "trace-driven fleet replay: scale + routing accuracy"),
     ("fused_tick", "fused fleet-tick megakernel vs four-dispatch + parity"),
     ("fleet_shard", "sharded fleet aggregate ingest scaling + parity gate"),

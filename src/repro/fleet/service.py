@@ -145,13 +145,19 @@ class FleetService:
     def _declare_hosts(self, job_id: str, pkt: EvidencePacket) -> None:
         """Land a packet's declared placement in the fleet topology —
         the attached engine's, or the coordinator sink when this service
-        is one shard of a sharded fleet."""
+        is one shard of a sharded fleet.  SFP2-v3 packets also carry the
+        fabric tiers (per-rank switch/pod ids); v2's host-only placement
+        declares just the host tier, never erasing a prior fabric claim."""
         if not pkt.hosts:
             return
         if self.incidents is not None:
-            self.incidents.topology.declare(job_id, pkt.hosts)
+            self.incidents.topology.declare(
+                job_id, pkt.hosts, switches=pkt.switches, pods=pkt.pods
+            )
         elif self._topology is not None:
-            self._topology.declare(job_id, pkt.hosts)
+            self._topology.declare(
+                job_id, pkt.hosts, switches=pkt.switches, pods=pkt.pods
+            )
 
     def submit_many(
         self,
@@ -383,4 +389,7 @@ class FleetService:
         if self.incidents is not None:
             # live incidents per lifecycle state (+ lifetime resolved)
             out["incidents"] = self.incidents.counts()
+            # conflicting-claim re-homings (last-writer-wins topology
+            # churn) — operators watch this to catch placement drift.
+            out["rehomed"] = self.incidents.topology.rehomed
         return out

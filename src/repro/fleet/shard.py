@@ -285,8 +285,9 @@ class ShardedFleetService:
         locally: the merged route answer (every routable job on every
         shard), the merged evictions, and the cross-shard activity
         reduce — metadata up, `CorrelationGroup` plan down, host-folded
-        partials up, one `co_activation` scoring pass over the merged
-        host axis.
+        partials up, one tiered co-activation scoring pass over the
+        merged host axis (fabric tiers OR-collapse from the same
+        partials on the coordinator).
         """
         self._tick += 1
         evicted: list[str] = []
@@ -326,7 +327,12 @@ class ShardedFleetService:
 
         Only host-folded bool series cross the shard boundary: the
         reduce ships O(steps x candidate hosts x stages) per member, not
-        rank-level state.
+        rank-level state.  The fabric tiers ride the same partials —
+        each group's plan carries the host-column -> switch/pod-column
+        groupings, and the scoring side OR-collapses the stacked host
+        partials onto them (`tiered_co_activation`), so tier promotion
+        is bit-identical to unsharded without any tier-shaped wire
+        format.
         """
         from ..incidents.engine import activity_meta, fold_host_activity
 
@@ -418,6 +424,10 @@ class ShardedFleetService:
         )
         if self.incidents is not None:
             out["incidents"] = self.incidents.counts()
+            # topology churn counter lives on the coordinator engine
+            # (shards declare into its sink, never their own) — no
+            # per-shard summing, or re-homings would double-count.
+            out["rehomed"] = self.incidents.topology.rehomed
         return out
 
     def __len__(self) -> int:

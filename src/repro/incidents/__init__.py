@@ -11,11 +11,13 @@ in >= 2 jobs on one host promote to a fleet-level common-cause incident
 profiler attachments per tick, with hysteresis.
 
 Layers:
-  topology    the (job, rank) -> host map (static or learned from
-              SFP2-v2 packets' host-id section)
+  topology    the tiered rank -> host -> switch -> pod placement map
+              (static, or learned from SFP2-v2/v3 packets' placement
+              sections)
   engine      incident identity, lifecycle, exposure accumulation,
-              cross-job common-cause promotion
-  escalation  budgeted, hysteretic profiler-attachment planning
+              cross-job promotion to the narrowest explaining tier
+  escalation  budgeted, hysteretic profiler-attachment planning (fleet
+              before job, wider tier before narrower)
 """
 from .engine import (
     ACTIVE,
@@ -28,11 +30,12 @@ from .engine import (
     MERGED,
     OPEN,
     RESOLVED,
+    TIER_RANK,
     activity_meta,
     fold_host_activity,
 )
 from .escalation import EscalationController, ProfilerAction
-from .topology import Topology
+from .topology import TIERS, Topology
 
 __all__ = [
     "ACTIVE",
@@ -47,6 +50,8 @@ __all__ = [
     "OPEN",
     "ProfilerAction",
     "RESOLVED",
+    "TIERS",
+    "TIER_RANK",
     "Topology",
     "activity_meta",
     "fold_host_activity",

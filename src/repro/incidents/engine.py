@@ -34,12 +34,18 @@ permutation of one tick's submissions yields the identical incident set
 (property-tested in ``tests/test_incident_properties.py``).
 
 Cross-job correlation: given per-job activity series and a `Topology`,
-the engine scores hosts whose faults appear in >= `min_jobs` jobs'
-incident streams (`co_activation_ref`, or the batched Pallas route
-`kernels.frontier.co_activation` — one dispatch over host x stage tiles
-folding every job's series) and promotes the matching single-job
-incidents into one fleet-level incident that outranks any single-job
-entry in escalation.
+the engine scores every topology tier whose nodes appear in >=
+`min_jobs` jobs' incident streams (`tiered_co_activation_ref`, or the
+batched Pallas route `kernels.frontier.tiered_co_activation` — ONE
+dispatch over the concatenated host + switch + pod axes folding every
+job's series) and promotes each co-activation set to the NARROWEST tier
+that explains it: host candidates claim their member incidents first,
+then switch candidates gather only still-unclaimed members, then pod
+candidates — so three jobs sharing one faulted host are one host
+incident, while three faulted hosts under one switch are ONE switch
+incident, never three host incidents plus a duplicate switch view.
+Fleet incidents outrank single-job entries in escalation, and wider
+fabric tiers outrank narrower ones (`TIER_RANK`).
 """
 from __future__ import annotations
 
@@ -48,7 +54,7 @@ from typing import Any, Iterable, Mapping, Sequence
 
 import numpy as np
 
-from .topology import Topology
+from .topology import TIERS, Topology
 
 __all__ = [
     "ACTIVE",
@@ -61,6 +67,7 @@ __all__ = [
     "MERGED",
     "OPEN",
     "RESOLVED",
+    "TIER_RANK",
     "activity_meta",
     "fold_host_activity",
 ]
@@ -72,6 +79,12 @@ MERGED = "merged"
 COOLING = "cooling"
 RESOLVED = "resolved"
 LIVE_STATES = frozenset({OPEN, ACTIVE, MERGED, COOLING})
+
+#: escalation precedence of the attribution tiers: a wider blast radius
+#: outranks a narrower one (a pod incident explains more of the fleet
+#: than a switch incident, which explains more than a host incident).
+#: Job-scoped incidents carry the host tier.
+TIER_RANK = {tier: rank for rank, tier in enumerate(TIERS)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +130,13 @@ class CorrelationGroup:
     single-process engine runs the exact same plan -> fold -> score
     pipeline over one local partial set, so sharded and unsharded
     promotion decisions are bit-identical by construction.
+
+    The fabric tiers ride the SAME host-folded partials: the plan
+    carries each candidate switch/pod axis plus the host-column ->
+    node-column groupings (`tier_axes`), and the scoring side
+    OR-collapses the stacked host partials onto them — nothing
+    tier-shaped ever crosses a shard boundary, so the sharded reduce is
+    tier-aware by construction and stays bit-identical to unsharded.
     """
 
     #: the group's shared stage vocabulary
@@ -125,8 +145,33 @@ class CorrelationGroup:
     job_ids: tuple[str, ...]
     #: aligned history depth: every member's most recent `n_steps` steps
     n_steps: int
-    #: candidate host axis (hosts >= min_jobs members can touch), sorted
+    #: candidate host axis, sorted: hosts touched by a member job that
+    #: sit under ANY candidate node (their own host tier, their switch,
+    #: or their pod) — a host whose switch is shared by >= min_jobs
+    #: members folds in even when the host itself is private to one job.
     hosts: tuple[str, ...]
+    #: candidate switch axis (switches >= min_jobs members touch), sorted
+    switches: tuple[str, ...] = ()
+    #: per host column: index into `switches`, -1 = not a candidate
+    switch_of: tuple[int, ...] = ()
+    #: candidate pod axis (pods >= min_jobs members touch), sorted
+    pods: tuple[str, ...] = ()
+    #: per host column: index into `pods`, -1 = not a candidate
+    pod_of: tuple[int, ...] = ()
+
+    def tier_axes(self) -> list:
+        """The fabric tiers as kernel `TierAxes` (empty axes dropped) —
+        the aggregation maps `tiered_co_activation` scores over."""
+        from ..kernels.frontier import TierAxes
+
+        axes = []
+        if self.switches:
+            axes.append(
+                TierAxes("switch", len(self.switches), self.switch_of)
+            )
+        if self.pods:
+            axes.append(TierAxes("pod", len(self.pods), self.pod_of))
+        return axes
 
 
 def activity_meta(
@@ -165,7 +210,12 @@ def fold_host_activity(
     recent `group.n_steps` steps.  Jobs outside the group (or absent
     from this shard's `activity`) are simply not emitted — the
     coordinator stacks partials from every shard in `group.job_ids`
-    order."""
+    order.
+
+    Fabric tiers need nothing extra here: switch/pod activity is
+    derivable from these host partials (`group.tier_axes` OR-collapse,
+    applied scoring-side), so the shard wire format is tier-agnostic
+    and sharded tier promotion stays bit-identical to unsharded."""
     hcol = {h: i for i, h in enumerate(group.hosts)}
     out: dict[str, np.ndarray] = {}
     for job_id in group.job_ids:
@@ -195,10 +245,15 @@ class Incident:
     job_id: str                   # "" for fleet scope
     stage: str
     ranks: tuple[int, ...]        # sorted rank-set (job scope; () fleet)
-    host: str                     # common-cause host; "" when undeclared
+    host: str                     # common-cause node name; "" undeclared
     state: str
     opened_tick: int
     last_seen_tick: int
+    #: attribution tier of `host` — "host" | "switch" | "pod" (see
+    #: `topology.TIERS`).  Job-scoped incidents are always host-tier;
+    #: a fleet incident carries the NARROWEST tier that explains its
+    #: co-activation set.
+    tier: str = "host"
     onset_step: int = -1          # job-global onset from the first entry
     last_window_index: int = -1
     windows_seen: int = 0
@@ -231,6 +286,7 @@ class Incident:
             "stage": self.stage,
             "ranks": list(self.ranks),
             "host": self.host,
+            "tier": self.tier,
             "state": self.state,
             "exposure_s": round(self.exposure_s, 4),
             "regime": self.regime,
@@ -277,13 +333,16 @@ class IncidentEngine:
     # -- reads -------------------------------------------------------------
 
     def incidents(self, *, live_only: bool = True) -> list[Incident]:
-        """All incidents, fleet scope first, then deterministic order."""
+        """All incidents: fleet scope first, wider fabric tiers before
+        narrower (pod > switch > host — `TIER_RANK`), then score, then
+        id — the same total order `EscalationController` ranks by."""
         out = [i for i in self._iter_live()]
         if not live_only:
             out.extend(self._resolved)
         out.sort(
             key=lambda i: (
                 i.scope != "fleet",
+                -TIER_RANK.get(i.tier, 0),
                 -i.score(self.params.persistence_floor),
                 i.incident_id,
             )
@@ -300,11 +359,13 @@ class IncidentEngine:
         return None
 
     def counts(self) -> dict[str, int]:
-        """Live incidents per state (+ lifetime resolved)."""
+        """Live incidents per state (+ lifetime resolved, + lifetime
+        topology re-homings — the conflicting-claims counter)."""
         out = {OPEN: 0, ACTIVE: 0, MERGED: 0, COOLING: 0, RESOLVED: 0}
         for inc in self._iter_live():
             out[inc.state] += 1
         out[RESOLVED] = self.resolved_total
+        out["rehomed"] = self.topology.rehomed
         return out
 
     def table(self, *, live_only: bool = True) -> list[dict]:
@@ -527,21 +588,58 @@ class IncidentEngine:
         for stages, members in sorted(groups.items()):
             if len(members) < p.min_jobs:
                 continue
-            counts: dict[str, int] = {}
+            # per-tier membership counts: how many member jobs touch
+            # each host / switch / pod (a job counts once per node).
+            counts: dict[str, dict[str, int]] = {t: {} for t in TIERS}
+            touched: set[str] = set()
             for job_id in members:
-                for h in set(self.topology.hosts_for(job_id)):
-                    counts[h] = counts.get(h, 0) + 1
+                job_hosts = set(self.topology.hosts_for(job_id))
+                touched |= job_hosts
+                for tier in TIERS:
+                    for node in {
+                        n
+                        for h in job_hosts
+                        if (n := self.topology.node_of(tier, h))
+                    }:
+                        counts[tier][node] = counts[tier].get(node, 0) + 1
+            cand_sw = sorted(
+                n for n, c in counts["switch"].items() if c >= p.min_jobs
+            )
+            cand_pod = sorted(
+                n for n, c in counts["pod"].items() if c >= p.min_jobs
+            )
+            # candidate hosts: touched hosts that sit under ANY
+            # candidate node — shared directly, or privately held but
+            # under a shared switch/pod (those must fold in so the
+            # wider tier can see their activity).
+            sw_set, pod_set = set(cand_sw), set(cand_pod)
             cand_hosts = sorted(
-                h for h, c in counts.items() if c >= p.min_jobs
+                h
+                for h in touched
+                if counts["host"].get(h, 0) >= p.min_jobs
+                or self.topology.switch_of(h) in sw_set
+                or self.topology.pod_of(h) in pod_set
             )
             if not cand_hosts:
                 continue
+            sw_col = {n: i for i, n in enumerate(cand_sw)}
+            pod_col = {n: i for i, n in enumerate(cand_pod)}
             out.append(
                 CorrelationGroup(
                     stages=stages,
                     job_ids=tuple(members),
                     n_steps=min(depth[j] for j in members),
                     hosts=tuple(cand_hosts),
+                    switches=tuple(cand_sw),
+                    switch_of=tuple(
+                        sw_col.get(self.topology.switch_of(h), -1)
+                        for h in cand_hosts
+                    ),
+                    pods=tuple(cand_pod),
+                    pod_of=tuple(
+                        pod_col.get(self.topology.pod_of(h), -1)
+                        for h in cand_hosts
+                    ),
                 )
             )
         return out
@@ -564,14 +662,33 @@ class IncidentEngine:
             act = np.asarray(act)
             if act.shape[0] == 0:
                 continue
-            stats = self._co_activation(act)
-            jobs = np.asarray(stats.jobs)          # [S, H_cand]
-            coact = np.asarray(stats.coact)        # [S, H_cand]
-            cand = np.argwhere(
-                (jobs >= p.min_jobs) & (coact >= p.min_coactive_steps)
-            )
-            for si, hi in cand:
-                self._promote(tick, group.stages[si], group.hosts[hi])
+            tiers = group.tier_axes()
+            stats = self._co_activation(act, tiers)
+            # narrowest tier first: host candidates claim their member
+            # incidents, then switch candidates gather only
+            # still-unclaimed members, then pod — three faulted hosts
+            # under one switch become ONE switch incident; a genuinely
+            # shared host never re-appears as a duplicate switch view.
+            claimed: set[str] = set()
+            node_axis = {"switch": group.switches, "pod": group.pods}
+            scored = [(stats[0], "host", group.hosts)] + [
+                (pkt, axes.tier, node_axis[axes.tier])
+                for pkt, axes in zip(stats[1:], tiers)
+            ]
+            for pkt, tier, nodes in scored:
+                jobs = np.asarray(pkt.jobs)        # [S, nodes]
+                coact = np.asarray(pkt.coact)      # [S, nodes]
+                cand = np.argwhere(
+                    (jobs >= p.min_jobs) & (coact >= p.min_coactive_steps)
+                )
+                for si, ni in cand:
+                    self._promote(
+                        tick,
+                        group.stages[si],
+                        nodes[ni],
+                        tier=tier,
+                        claimed=claimed,
+                    )
 
     def _correlate(
         self,
@@ -590,45 +707,70 @@ class IncidentEngine:
             )
         self.correlate_folded(tick, folded)
 
-    def _co_activation(self, act: np.ndarray):
+    def _co_activation(self, act: np.ndarray, tiers: Sequence[Any] = ()):
+        """Per-tier co-activation packets, host tier first (exact
+        integer statistics on both routes — kernel == ref, bit-for-bit)."""
         if self.use_kernel:
-            from ..kernels.frontier import co_activation
+            from ..kernels.frontier import tiered_co_activation
 
-            return co_activation(act)
-        from ..kernels.frontier import co_activation_ref
+            return tiered_co_activation(act, tiers)
+        from ..kernels.frontier import tiered_co_activation_ref
 
-        return co_activation_ref(act)
+        return tiered_co_activation_ref(act, tiers)
 
-    def _promote(self, tick: int, stage: str, host: str) -> None:
-        """Merge the live single-job incidents on (host, stage) into one
-        fleet-level incident (>= min_jobs distinct jobs required)."""
+    def _promote(
+        self,
+        tick: int,
+        stage: str,
+        node: str,
+        *,
+        tier: str = "host",
+        claimed: set[str] | None = None,
+    ) -> None:
+        """Merge the live single-job incidents under (`tier`, `node`,
+        `stage`) into one fleet-level incident (>= min_jobs distinct
+        jobs required).
+
+        `claimed` is the narrowest-tier guard: member ids a narrower
+        tier already merged this tick are skipped, and on success this
+        candidate's members are added — so a switch candidate only
+        forms from hosts no host candidate explained, and a pod only
+        from what no switch explained.  A candidate whose unclaimed
+        members fall below quorum simply never opens."""
         members: list[Incident] = []
         for (job_id, inc_stage), incs in sorted(
             self._job_incidents.items()
         ):
             if inc_stage != stage:
                 continue
-            on_host = set(self.topology.ranks_on(job_id, host))
+            under = set(self.topology.ranks_under(tier, job_id, node))
             for inc in incs:
-                if inc.live and (
-                    set(inc.ranks) & on_host or inc.host == host
+                if not inc.live:
+                    continue
+                if claimed is not None and inc.incident_id in claimed:
+                    continue
+                if set(inc.ranks) & under or (
+                    inc.host
+                    and self.topology.node_of(tier, inc.host) == node
                 ):
                     members.append(inc)
         if len({m.job_id for m in members}) < self.params.min_jobs:
             return
-        key = (host, stage)
+        key = (tier, node, stage)
         fleet = self._fleet_incidents.get(key)
         if fleet is None or not fleet.live:
+            prefix = "if" if tier == "host" else f"if:{tier}"
             fleet = Incident(
-                incident_id=f"if:{host}:{stage}:t{tick}",
+                incident_id=f"{prefix}:{node}:{stage}:t{tick}",
                 scope="fleet",
                 job_id="",
                 stage=stage,
                 ranks=(),
-                host=host,
+                host=node,
                 state=OPEN,
                 opened_tick=tick,
                 last_seen_tick=tick,
+                tier=tier,
             )
             self._fleet_incidents[key] = fleet
             self.merged_total += 1
@@ -636,6 +778,8 @@ class IncidentEngine:
             if m.merged_into != fleet.incident_id:
                 m.merged_into = fleet.incident_id
             m.state = MERGED
+        if claimed is not None:
+            claimed.update(m.incident_id for m in members)
         fleet.members = tuple(sorted(m.incident_id for m in members))
         fleet.member_jobs = tuple(sorted({m.job_id for m in members}))
         fleet.last_seen_tick = tick

@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from .engine import ACTIVE, Incident, OPEN
+from .engine import ACTIVE, Incident, OPEN, TIER_RANK
 
 __all__ = ["EscalationController", "ProfilerAction"]
 
@@ -111,6 +111,7 @@ class EscalationController:
         eligible.sort(
             key=lambda i: (
                 i.scope != "fleet",                   # fleet outranks job
+                -TIER_RANK.get(i.tier, 0),            # pod > switch > host
                 -i.score(self.persistence_floor),
                 i.incident_id,
             )

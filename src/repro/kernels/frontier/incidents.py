@@ -25,11 +25,20 @@ VMEM-resident across the job fold (the output block index depends only
 on the host tile).  One dispatch covers every job; all statistics are
 integer reductions, so the route matches `co_activation_ref` EXACTLY
 (asserted per shape group in `benchmarks/incident_engine.py`).
+
+Fabric tiers ride the same dispatch: `tiered_co_activation` OR-collapses
+the host axis onto each declared tier's node axis (switch, pod — see
+`incidents.Topology`), concatenates host + node columns into ONE
+combined axis, and scores it with the unchanged kernel — the tiers
+share the folded activity series, only the aggregation axis changes, so
+scoring every tier costs one dispatch instead of one per tier (and each
+tier's slice equals `co_activation_ref` on that tier's collapsed series
+exactly — gated in `benchmarks/fabric_attribution.py`).
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -38,9 +47,12 @@ from jax.experimental import pallas as pl
 
 __all__ = [
     "CoActivationPacket",
+    "TierAxes",
     "co_activation",
     "co_activation_loop",
     "co_activation_ref",
+    "tiered_co_activation",
+    "tiered_co_activation_ref",
 ]
 
 _SUBLANE = 8
@@ -181,6 +193,112 @@ def co_activation(
         coact=(stepsum >= 2).sum(axis=0, dtype=jnp.int32)[sl],
         active=stepsum.sum(axis=0, dtype=jnp.int32)[sl],
     )
+
+
+class TierAxes(NamedTuple):
+    """One fabric tier's aggregation axis over the folded host series.
+
+    `grouping[h]` maps host column h onto this tier's node column
+    (values in [0, n_nodes); -1 = the host has no node at this tier and
+    contributes nowhere).  The activity series itself is SHARED across
+    tiers — only this aggregation axis changes.
+    """
+
+    tier: str                 # "switch" | "pod" (host tier is implicit)
+    n_nodes: int
+    grouping: tuple[int, ...]  # per host column, len == H
+
+
+def _collapse_tier(a: jax.Array, axes: TierAxes) -> jax.Array:
+    """OR-collapse ``act[J, N, H, S]`` host columns onto one tier's node
+    columns -> ``[J, N, n_nodes, S]`` (any member host active => the
+    node is active).  Integer max == boolean OR, so the collapse is
+    exact and the downstream statistics stay integer."""
+    group = jnp.asarray(axes.grouping, jnp.int32)
+    # unmapped hosts (-1) route to a scratch node that is sliced away
+    seg = jnp.where(group < 0, axes.n_nodes, group)
+    j, n, h, s = a.shape
+    out = jnp.zeros((j, n, axes.n_nodes + 1, s), a.dtype)
+    out = out.at[:, :, seg, :].max(a)
+    return out[:, :, : axes.n_nodes, :]
+
+
+def tiered_co_activation_ref(
+    act: np.ndarray, tiers: Sequence[TierAxes]
+) -> tuple[CoActivationPacket, ...]:
+    """NumPy oracle of the tiered route: per tier, collapse the SAME
+    host-folded series onto that tier's node axis and score it with
+    `co_activation_ref` — packet 0 is the host tier itself, packet i+1
+    tier ``tiers[i]``.  The fused route must match EXACTLY per tier."""
+    a = np.asarray(act).astype(bool)
+    if a.ndim != 4:
+        raise ValueError(f"expected act [J,N,H,S], got {a.shape}")
+    out = [co_activation_ref(a)]
+    for axes in tiers:
+        if len(axes.grouping) != a.shape[2]:
+            raise ValueError(
+                f"tier {axes.tier!r} grouping covers "
+                f"{len(axes.grouping)} hosts, series has {a.shape[2]}"
+            )
+        coll = np.zeros(
+            (a.shape[0], a.shape[1], axes.n_nodes, a.shape[3]), bool
+        )
+        for h, g in enumerate(axes.grouping):
+            if g >= 0:
+                coll[:, :, g, :] |= a[:, :, h, :]
+        out.append(co_activation_ref(coll))
+    return tuple(out)
+
+
+def tiered_co_activation(
+    act: jax.Array,
+    tiers: Sequence[TierAxes],
+    *,
+    h_tile: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[CoActivationPacket, ...]:
+    """Score the host tier AND every fabric tier in ONE Pallas dispatch.
+
+    The tiers share the folded activity series ``act[J, N, H, S]`` —
+    only the aggregation axis changes — so the jnp prolog OR-collapses
+    the host axis onto each tier's node axis (`TierAxes.grouping`,
+    exact: integer max), concatenates host + node columns into one
+    combined axis of size ``H + sum(n_nodes)``, and runs the unchanged
+    co-activation kernel once over it.  The outputs split back per
+    tier: packet 0 is the host tier, packet i+1 tier ``tiers[i]`` —
+    each EXACTLY equal to `co_activation_ref` on that tier's collapsed
+    series (`tiered_co_activation_ref`; gated per shape group in
+    `benchmarks/fabric_attribution.py`).
+
+    With no fabric tiers declared this is exactly `co_activation`.
+    """
+    jn, n, h, s = act.shape
+    a = jnp.asarray(act).astype(jnp.int32)
+    segments = [a]
+    for axes in tiers:
+        if len(axes.grouping) != h:
+            raise ValueError(
+                f"tier {axes.tier!r} grouping covers "
+                f"{len(axes.grouping)} hosts, series has {h}"
+            )
+        segments.append(_collapse_tier(a, axes))
+    combined = (
+        jnp.concatenate(segments, axis=2) if len(segments) > 1 else a
+    )
+    packet = co_activation(combined, h_tile=h_tile, interpret=interpret)
+    out = []
+    lo = 0
+    for seg in segments:
+        hi = lo + seg.shape[2]
+        out.append(
+            CoActivationPacket(
+                jobs=packet.jobs[:, lo:hi],
+                coact=packet.coact[:, lo:hi],
+                active=packet.active[:, lo:hi],
+            )
+        )
+        lo = hi
+    return tuple(out)
 
 
 def co_activation_loop(

@@ -66,6 +66,16 @@ def make_argparser() -> argparse.ArgumentParser:
     p.add_argument("--delay-ms", type=float, default=150.0)
     p.add_argument("--fault-every", type=int, default=3,
                    help="every K-th job gets an injected fault (0 = none)")
+    p.add_argument("--fabric", action="store_true",
+                   help="with --synth: emit per-rank switch/pod fabric "
+                        "placement on every arrive/resize row (ships as "
+                        "SFP2-v3 topology sections)")
+    p.add_argument("--shared-switch", action="store_true",
+                   help="with --synth: tier-attribution trace — the "
+                        "faulted ranks land on distinct hosts under ONE "
+                        "shared switch with concurrent data stalls "
+                        "(implies --fabric; pair with --incidents to see "
+                        "the switch-tier fleet incident)")
     p.add_argument("--save-trace", default="",
                    help="with --synth: also write the generated trace here")
     p.add_argument("--out", default="",
@@ -80,7 +90,8 @@ def run(args) -> dict:
         text = generate_trace(
             jobs=args.jobs, ticks=args.ticks, window_steps=args.window,
             world_size=args.ranks, seed=args.seed, delay_ms=args.delay_ms,
-            fault_every=args.fault_every,
+            fault_every=args.fault_every, fabric=args.fabric,
+            shared_switch=args.shared_switch,
         )
         if args.save_trace:
             with open(args.save_trace, "w") as f:

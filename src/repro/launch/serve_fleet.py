@@ -14,13 +14,16 @@ routing entry carries the estimated recoverable seconds a fix at its
 (stage, rank) is worth, plus the fault's temporal regime
 (transient/recurring/persistent), persistence weight and onset step.
 
-With `--topology private|shared` the packets additionally declare each
-job's rank->host placement (SFP2-v2 host section) and the incident tier
-runs on top: the summary gains a durable `incidents` table (lifecycle,
-exposure since onset, fleet-level common-cause incidents on shared
-hosts) and an `escalations` list (the budgeted profiler-attachment
-plan; at most `--budget` per tick).  `--max-windows` bounds each job's
-retained temporal history (memory knob for very long runs).
+With `--topology private|shared|fabric` the packets additionally
+declare each job's rank->host placement (SFP2-v2 host section; `fabric`
+adds the per-rank switch/pod tiers as SFP2-v3 sections) and the
+incident tier runs on top: the summary gains a durable `incidents`
+table (lifecycle, exposure since onset, fleet-level common-cause
+incidents promoted to the narrowest explaining tier — `shared` yields a
+host incident, `fabric` a switch incident on the shared uplink) and an
+`escalations` list (the budgeted profiler-attachment plan; at most
+`--budget` per tick).  `--max-windows` bounds each job's retained
+temporal history (memory knob for very long runs).
 """
 from __future__ import annotations
 
@@ -54,6 +57,13 @@ SYNC_PROFILES = {
 #: --topology shared (the injected common cause).
 SHARED_HOST = "shared-0"
 
+#: fabric nodes shared by every faulted job's faulted rank under
+#: --topology fabric: each faulted rank keeps its own PRIVATE host, but
+#: all those hosts hang under one switch (the oversubscribed-uplink
+#: shape) — the incident engine must promote ONE switch-tier incident.
+SHARED_SWITCH = "fab-sw0"
+SHARED_POD = "fab-pod0"
+
 
 def make_argparser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(description=__doc__)
@@ -71,7 +81,7 @@ def make_argparser() -> argparse.ArgumentParser:
                    help="wire framing (sfp1 = legacy back-compat route; "
                         "int8.delta requires sfp2)")
     p.add_argument("--topology", default="none",
-                   choices=["none", "private", "shared"],
+                   choices=["none", "private", "shared", "fabric"],
                    help="declare per-job host placement in the packets "
                         "(SFP2-v2 host section) and run the incident "
                         "tier: 'private' packs 2 ranks/host per job; "
@@ -79,7 +89,12 @@ def make_argparser() -> argparse.ArgumentParser:
                         "job's faulted rank onto one fleet-shared host "
                         "(and pins faulted jobs to the 'data' family, "
                         "so the common cause is a single host+stage "
-                        "the incident engine must promote)")
+                        "the incident engine must promote); 'fabric' "
+                        "keeps each faulted rank on its own host but "
+                        "hangs all those hosts under one shared switch "
+                        "(per-rank switch/pod SFP2-v3 sections) — the "
+                        "engine must promote ONE switch-tier incident, "
+                        "never per-host duplicates")
     p.add_argument("--budget", type=int, default=2,
                    help="profiler escalations per tick "
                         "(EscalationController token budget)")
@@ -119,7 +134,26 @@ def _cluster_for(args, j: int, faulted: bool) -> ClusterSpec | None:
         # the faulted rank of every faulted job sits on ONE shared host:
         # the injected common cause the incident tier must promote
         hosts[hidden_fault_rank(j, args.ranks)] = SHARED_HOST
-    return ClusterSpec(world_size=args.ranks, hosts=tuple(hosts))
+    if args.topology != "fabric":
+        return ClusterSpec(world_size=args.ranks, hosts=tuple(hosts))
+    # fabric: private switch+pod per host, then the shared uplink over
+    # the faulted rank's (still private) host — no host is shared, so
+    # the narrowest explaining tier is the switch.
+    switches = [f"{h}.sw" for h in hosts]
+    pods = [f"{h}.pod" for h in hosts]
+    if faulted:
+        # the switch is a HOST attribute: every rank of the faulted
+        # rank's host must agree, else last-writer-wins re-homes the
+        # host back onto its private uplink
+        fault_host = hosts[hidden_fault_rank(j, args.ranks)]
+        for r, h in enumerate(hosts):
+            if h == fault_host:
+                switches[r] = SHARED_SWITCH
+                pods[r] = SHARED_POD
+    return ClusterSpec(
+        world_size=args.ranks, hosts=tuple(hosts),
+        switches=tuple(switches), pods=tuple(pods),
+    )
 
 
 def _build_jobs(args) -> list[dict]:
@@ -131,8 +165,8 @@ def _build_jobs(args) -> list[dict]:
         profile_name, sync = profiles[j % len(profiles)]
         faulted = args.fault_every > 0 and j % args.fault_every == 0
         family = E3_FAMILIES[j % len(E3_FAMILIES)]
-        if args.topology == "shared" and faulted:
-            # a shared HOST fault surfaces in the same stage in every
+        if args.topology in ("shared", "fabric") and faulted:
+            # a shared-node fault surfaces in the same stage in every
             # sharing job: pin the family (data.next_wait, non-sync in
             # every profile) so the common cause is promotable
             family = "data"
@@ -220,6 +254,8 @@ def run(args) -> dict:
                 sync_stages=job["scenario"].sync_stages,
                 first_step=w * args.window,
                 hosts=job["scenario"].hosts,
+                switches=job["scenario"].switches,
+                pods=job["scenario"].pods,
             )
             wire = encode_packet(pkt, compress=args.compress, wire=args.wire)
             batch.append((job["job_id"], wire))

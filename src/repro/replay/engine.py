@@ -82,6 +82,8 @@ class _LiveJob:
     hosts: tuple[str, ...]
     seed: int
     aggregator: WindowAggregator
+    switches: tuple[str, ...] = ()
+    pods: tuple[str, ...] = ()
     global_step: int = 0
     faults: list = dataclasses.field(default_factory=list)
 
@@ -91,6 +93,8 @@ class _LiveJob:
         self.world_size = ev.world_size
         self.roles = ev.roles()
         self.hosts = ev.hosts
+        self.switches = ev.switches
+        self.pods = ev.pods
         sc = self._scenario(steps=1, faults=(), seed=0)
         self.aggregator = WindowAggregator(
             sc.schema(), window_steps=self.aggregator.window_steps
@@ -193,6 +197,9 @@ class ReplayReport:
     # provenance + service
     loader: dict = dataclasses.field(default_factory=dict)
     snapshot: dict = dataclasses.field(default_factory=dict)
+    #: durable incident table (engine rows) when the incident tier is
+    #: attached — empty list otherwise
+    incidents: list = dataclasses.field(default_factory=list)
     elapsed_s: float = 0.0
 
     @property
@@ -320,6 +327,8 @@ def replay_trace(
                     world_size=ev.world_size,
                     roles=ev.roles(),
                     hosts=ev.hosts,
+                    switches=ev.switches,
+                    pods=ev.pods,
                     seed=ev.seed,
                     aggregator=None,  # type: ignore[arg-type]
                 )
@@ -376,7 +385,7 @@ def replay_trace(
                 rep.window_index, window=rep.durations,
                 present_ranks=tuple(range(job.world_size)),
                 sync_stages=job.sync_stages, first_step=first_step,
-                hosts=job.hosts,
+                hosts=job.hosts, switches=job.switches, pods=job.pods,
             )
             data = encode_packet(pkt, compress=compress, wire=wire)
             batch.append((job_id, data))
@@ -425,6 +434,8 @@ def replay_trace(
     report.elapsed_s = time.perf_counter() - t0
     report.evictions = service.evicted_total
     report.snapshot = service.snapshot()
+    if getattr(service, "incidents", None) is not None:
+        report.incidents = service.incidents.table()
     if owned and shards:
         service.close()
     return report

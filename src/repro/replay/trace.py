@@ -16,10 +16,14 @@ Row kinds (all rows carry ``"v": 1`` and ``"kind"``):
            ``stages`` (the job's stage vocabulary — jobs may disagree),
            ``sync_stages``, ``tasks`` (Alibaba task taxonomy: a list of
            ``{"role": ps|worker|chief|evaluator, "ranks": [...]}``),
-           ``hosts`` (optional per-rank placement), ``seed``
+           ``hosts`` (optional per-rank placement), ``switches`` /
+           ``pods`` (optional per-rank fabric tiers above each host —
+           switches require hosts, pods require switches, all aligned
+           per rank, mirroring the SFP2-v3 wire layout), ``seed``
   resize   the job's rank set changes mid-run: ``tick``, ``job_id``,
-           ``world_size``, optional new ``tasks``/``hosts`` — the fleet
-           tier must treat this as a schema break (stream restart)
+           ``world_size``, optional new ``tasks``/``hosts``/
+           ``switches``/``pods`` — the fleet tier must treat this as a
+           schema break (stream restart)
   depart   the job leaves: ``tick``, ``job_id`` — it simply stops
            reporting, exercising the registry's eviction path
   fault    injected ground truth: ``tick``, ``job_id``, ``family``
@@ -128,6 +132,9 @@ class TraceEvent:
     sync_stages: tuple[str, ...] = ()
     tasks: tuple[TraceTask, ...] = ()
     hosts: tuple[str, ...] = ()
+    #: per-rank fabric placement above `hosts` (optional, aligned)
+    switches: tuple[str, ...] = ()
+    pods: tuple[str, ...] = ()
     seed: int = 0
     family: str = ""
     rank: int = -1
@@ -191,6 +198,22 @@ def _as_int(v, lo: int, hi: int) -> int:
     return v
 
 
+def _parse_placement(row: dict, ws: int) -> dict:
+    """Validate the optional placement sections of an arrive/resize row
+    (hosts, switches, pods): per-rank, aligned, tiered — switches need
+    hosts, pods need switches, matching the SFP2-v3 wire contract."""
+    hosts = _as_str_tuple(row.get("hosts", []))
+    if hosts and len(hosts) != ws:
+        raise ValueError("bad_hosts")
+    switches = _as_str_tuple(row.get("switches", []))
+    if switches and (not hosts or len(switches) != ws):
+        raise ValueError("bad_switches")
+    pods = _as_str_tuple(row.get("pods", []))
+    if pods and (not switches or len(pods) != ws):
+        raise ValueError("bad_pods")
+    return {"hosts": hosts, "switches": switches, "pods": pods}
+
+
 def _parse_tasks(raw, world_size: int) -> tuple[TraceTask, ...]:
     if raw is None:
         return ()
@@ -240,23 +263,19 @@ def _parse_row(row: dict) -> TraceEvent:
         sync = _as_str_tuple(row.get("sync_stages", []))
         if not set(sync) <= set(stages):
             raise ValueError("sync_not_in_stages")
-        hosts = _as_str_tuple(row.get("hosts", []))
-        if hosts and len(hosts) != ws:
-            raise ValueError("bad_hosts")
         return TraceEvent(
             kind="arrive", tick=tick, job_id=job_id, world_size=ws,
             stages=stages, sync_stages=sync,
-            tasks=_parse_tasks(row.get("tasks"), ws), hosts=hosts,
+            tasks=_parse_tasks(row.get("tasks"), ws),
             seed=_as_int(row.get("seed", 0), 0, 2**31 - 1),
+            **_parse_placement(row, ws),
         )
     if kind == "resize":
         ws = _as_int(row.get("world_size"), 1, 4096)
-        hosts = _as_str_tuple(row.get("hosts", []))
-        if hosts and len(hosts) != ws:
-            raise ValueError("bad_hosts")
         return TraceEvent(
             kind="resize", tick=tick, job_id=job_id, world_size=ws,
-            tasks=_parse_tasks(row.get("tasks"), ws), hosts=hosts,
+            tasks=_parse_tasks(row.get("tasks"), ws),
+            **_parse_placement(row, ws),
         )
     if kind == "depart":
         return TraceEvent(kind="depart", tick=tick, job_id=job_id)
@@ -436,6 +455,8 @@ def generate_trace(
     fault_every: int = 3,
     elastic: bool = True,
     hosts: bool = True,
+    fabric: bool = False,
+    shared_switch: bool = False,
     name: str | None = None,
 ) -> str:
     """Deterministic synthetic trace (JSONL text), same seed -> same bytes.
@@ -454,7 +475,24 @@ def generate_trace(
     "lanes" so at most two rank-attributable faults are live at any
     tick: the fleet's top-2 routing answer can and must contain every
     scored fault.
+
+    `fabric` adds per-rank ``switches``/``pods`` placement to every
+    arrive/resize row (private fabric per job).  `shared_switch`
+    (implies `fabric`) turns the trace into a tier-attribution row: the
+    faulted jobs' faulted ranks are re-homed onto DISTINCT private
+    hosts that all sit under the shared switch ``fab-sw0`` (pod
+    ``fab-pod0``), their family is pinned to ``data``, and their fault
+    intervals all run concurrently from tick 1 — the ground truth is
+    ONE switch-tier fleet incident on ``fab-sw0``, never a host
+    incident (no host is shared) and never a pod one (the evidence
+    needs only the switch).  Note the concurrent faults break the
+    two-lane top-2 containment guarantee by design: a shared-switch
+    trace scores tier attribution, not top-2 routing.
     """
+    if shared_switch:
+        fabric = True
+    if fabric:
+        hosts = True
     rng = np.random.default_rng(seed)
     rows: list[dict] = [{
         "v": TRACE_VERSION, "kind": "meta",
@@ -498,17 +536,37 @@ def generate_trace(
         host_list = (
             [f"t{j}h{r // 2}" for r in range(ws)] if hosts else []
         )
+        switch_list = (
+            [f"t{j}sw{r // 4}" for r in range(ws)] if fabric else []
+        )
+        pod_list = [f"t{j}pod0" for _ in range(ws)] if fabric else []
+        if shared_switch and j in faulted:
+            # own host, shared switch: the tier-attribution placement
+            fr = _fault_rank(j, spec)
+            host_list[fr] = f"fabh{j}"
+            switch_list[fr] = "fab-sw0"
+            pod_list[fr] = "fab-pod0"
         add(arrive, {
             "kind": "arrive", "job_id": f"job-{j:03d}", "world_size": ws,
             "stages": list(spec["stages"]),
             "sync_stages": list(spec["sync"]),
             "tasks": spec["tasks"], "hosts": host_list,
+            **({"switches": switch_list, "pods": pod_list} if fabric else {}),
             "seed": seed * 10_000 + j,
         })
         if depart < ticks:
             add(depart, {"kind": "depart", "job_id": f"job-{j:03d}"})
         if j in faulted:
             i = faulted.index(j)
+            if shared_switch:
+                # concurrent steady data stalls: the switch-tier common
+                # cause must co-activate across every member job
+                add(1, {
+                    "kind": "fault", "job_id": f"job-{j:03d}",
+                    "family": "data", "rank": _fault_rank(j, spec),
+                    "delay_ms": float(delay_ms), "until_tick": -1,
+                })
+                continue
             lane, slot = i % 2, i // 2
             f0 = min(max(arrive + 1, 1 + slot * stride + lane), ticks - 2)
             f1 = min(f0 + flen, depart, ticks)

@@ -69,24 +69,46 @@ __all__ = ["ClusterSpec", "Fault", "Scenario", "SimResult", "simulate"]
 
 @dataclasses.dataclass(frozen=True)
 class ClusterSpec:
-    """Physical placement of a job's ranks: which host serves each rank.
+    """Physical placement of a job's ranks: which host serves each rank,
+    and (optionally) which fabric node sits above each host.
 
     The simulator itself is placement-blind (delay is injected per rank),
     but the incident tier (`repro.incidents`) correlates faults ACROSS
-    jobs by host, so scenarios must state their topology explicitly
-    instead of implying it in scenario code.  `hosts[r]` is the host name
-    of rank r; several ranks on the same name share that host (and a
-    host-level fault hits all of them).
+    jobs by topology node, so scenarios must state their topology
+    explicitly instead of implying it in scenario code.  `hosts[r]` is
+    the host name of rank r; several ranks on the same name share that
+    host (and a host-level fault hits all of them).  `switches[r]` /
+    `pods[r]` name the fabric tiers above rank r's host — per-rank and
+    aligned with `hosts`, matching the SFP2-v3 wire layout, so a
+    scenario's placement feeds `telemetry.from_diagnosis` verbatim.
+    Empty tuples mean that tier is undeclared (host-only placement).
     """
 
     world_size: int
     hosts: tuple[str, ...]           # per-rank host name, len == world_size
+    #: per-rank switch name above each host (() = fabric undeclared)
+    switches: tuple[str, ...] = ()
+    #: per-rank pod name above each switch (() = undeclared; requires
+    #: `switches` — a pod hangs from a switch, never from a bare host)
+    pods: tuple[str, ...] = ()
 
     def __post_init__(self):
         if len(self.hosts) != self.world_size:
             raise ValueError(
                 f"hosts must name every rank: expected {self.world_size}, "
                 f"got {len(self.hosts)}"
+            )
+        if self.switches and len(self.switches) != self.world_size:
+            raise ValueError(
+                f"switches must align with hosts: expected "
+                f"{self.world_size}, got {len(self.switches)}"
+            )
+        if self.pods and not self.switches:
+            raise ValueError("pods require switches (tiered placement)")
+        if self.pods and len(self.pods) != self.world_size:
+            raise ValueError(
+                f"pods must align with hosts: expected {self.world_size}, "
+                f"got {len(self.pods)}"
             )
 
     @staticmethod
@@ -100,6 +122,35 @@ class ClusterSpec:
             world_size=world_size,
             hosts=tuple(
                 f"{prefix}-{r // ranks_per_host}" for r in range(world_size)
+            ),
+        )
+
+    @staticmethod
+    def fabric(
+        world_size: int,
+        ranks_per_host: int,
+        *,
+        hosts_per_switch: int = 4,
+        switches_per_pod: int = 4,
+        prefix: str = "host",
+    ) -> "ClusterSpec":
+        """Contiguous TIERED packing: ranks pack onto hosts
+        (`uniform`), hosts onto switches (`{prefix}-sw-k`), switches
+        onto pods (`{prefix}-pod-k`) — the full rank -> host -> switch
+        -> pod hierarchy for fabric-aware scenarios and drivers."""
+        if hosts_per_switch < 1 or switches_per_pod < 1:
+            raise ValueError(
+                "hosts_per_switch and switches_per_pod must be >= 1"
+            )
+        base = ClusterSpec.uniform(world_size, ranks_per_host, prefix=prefix)
+        host_idx = [r // ranks_per_host for r in range(world_size)]
+        sw_idx = [h // hosts_per_switch for h in host_idx]
+        return ClusterSpec(
+            world_size=world_size,
+            hosts=base.hosts,
+            switches=tuple(f"{prefix}-sw-{s}" for s in sw_idx),
+            pods=tuple(
+                f"{prefix}-pod-{s // switches_per_pod}" for s in sw_idx
             ),
         )
 
@@ -181,6 +232,16 @@ class Scenario:
     def hosts(self) -> tuple[str, ...]:
         """Per-rank host names (() when the topology is undeclared)."""
         return self.cluster.hosts if self.cluster is not None else ()
+
+    @property
+    def switches(self) -> tuple[str, ...]:
+        """Per-rank switch names (() when the fabric is undeclared)."""
+        return self.cluster.switches if self.cluster is not None else ()
+
+    @property
+    def pods(self) -> tuple[str, ...]:
+        """Per-rank pod names (() when the fabric is undeclared)."""
+        return self.cluster.pods if self.cluster is not None else ()
 
 
 @dataclasses.dataclass(frozen=True)

@@ -463,6 +463,168 @@ def shared_host_fleet(
     )
 
 
+# ---------------------------------------------------------------------------
+# Multi-job FABRIC fault families (ground truth for tier attribution)
+# ---------------------------------------------------------------------------
+#
+# "When Scaling Fails" attributes many production slowdowns to the fabric
+# tiers ABOVE the host: an oversubscribed uplink degrades every host
+# under one switch, a flapping switch does so intermittently, pod-wide
+# congestion degrades hosts under every switch of one pod.  Each family
+# here realizes one such fault with the affected jobs' placements
+# declared per rank (`ClusterSpec` switches/pods — the SFP2-v3 layout)
+# and the ground-truth (tier, node) known by construction, so the
+# incident engine's narrowest-tier promotion can be scored: the fleet
+# incident must land on exactly that tier and node — never on three
+# separate host incidents, never on a wider tier than the evidence
+# needs.
+
+#: fabric family -> (ground-truth attribution tier, temporal family of
+#: the injected fault).  `shared_host` is the control: fabric declared,
+#: but the narrowest explaining tier is still the host.
+FABRIC_FAMILIES = {
+    "shared_host": ("host", "step"),
+    "oversub_uplink": ("switch", "step"),
+    "flapping_switch": ("switch", "intermittent"),
+    "pod_congestion": ("pod", "step"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricFleet:
+    """One labelled multi-job fabric-attribution row.
+
+    `scenarios` maps job id -> Scenario (each carrying a tiered
+    `ClusterSpec`); ground truth: every job in `member_job_ids` has one
+    faulted rank under the fabric node `node` at tier `tier`, and the
+    incident engine must promote exactly ONE fleet incident there —
+    `tier` is the narrowest tier explaining the co-activation (for
+    ``oversub_uplink``, the faulted hosts are distinct, so no host-tier
+    candidate reaches quorum and the switch is the answer).  Distractor
+    jobs carry an unrelated self-healing blip on private fabric.
+    """
+
+    scenarios: dict[str, Scenario]
+    tier: str
+    node: str
+    member_job_ids: tuple[str, ...]
+    family: str                       # fabric family name
+    regime_family: str                # temporal family of the fault
+    #: job id -> the rank that sits under the faulted node
+    fault_ranks: dict[str, int]
+
+
+def fabric_fleet(
+    family: str = "oversub_uplink",
+    *,
+    jobs: int = 6,
+    shared_jobs: int = 3,
+    world_size: int = 8,
+    ranks_per_host: int = 2,
+    steps: int = 60,
+    seed: int = 0,
+    delay_ms: float = 150.0,
+    distractor_family: str | None = "blip",
+    sync=DDP_SYNC,
+    shard_split: int | None = None,
+) -> FabricFleet:
+    """Simulated fleet with one fabric fault of `family` affecting the
+    first `shared_jobs` jobs.
+
+    Placement of the faulted rank (seed-derived, `regime_fault_rank`)
+    per family — the NODE is shared, everything narrower is private:
+
+      shared_host     all affected ranks on ONE host (under one switch/
+                      pod) -> the host is the narrowest explaining tier;
+      oversub_uplink  each affected rank on its OWN host, all hosts
+                      under ONE switch -> no host reaches quorum, the
+                      switch does (persistent ``step`` fault);
+      flapping_switch same placement, ``intermittent`` fault — the
+                      bursts co-activate across jobs in the same steps;
+      pod_congestion  own host AND own switch per job, all switches
+                      under ONE pod -> only the pod reaches quorum.
+
+    Every other rank lives on private fabric (`uniform` hosts, one
+    switch+pod per private host), so nothing outside the seeded node can
+    promote.  `shard_split` works as in `shared_host_fleet`: with
+    ``N >= shared_jobs`` every affected job lands on a different shard,
+    forcing tier promotion through the cross-shard reduce.
+    """
+    if family not in FABRIC_FAMILIES:
+        raise ValueError(
+            f"unknown fabric family {family!r}: {sorted(FABRIC_FAMILIES)}"
+        )
+    if not 0 <= shared_jobs <= jobs:
+        raise ValueError(f"shared_jobs={shared_jobs} outside [0, {jobs}]")
+    if shard_split is not None:
+        from ..fleet.shard import job_id_for_shard
+    tier, regime_family = FABRIC_FAMILIES[family]
+    fab_host = f"fab-host-{seed}"
+    fab_sw = f"fab-sw-{seed}"
+    fab_pod = f"fab-pod-{seed}"
+    node = {"host": fab_host, "switch": fab_sw, "pod": fab_pod}[tier]
+    scenarios: dict[str, Scenario] = {}
+    member_ids: list[str] = []
+    fault_ranks: dict[str, int] = {}
+    for j in range(jobs):
+        job_id = f"job-{j:03d}"
+        if shard_split is not None:
+            job_id = job_id_for_shard(job_id, j % shard_split, shard_split)
+        rank = regime_fault_rank(seed + j, world_size)
+        hosts = list(
+            ClusterSpec.uniform(
+                world_size, ranks_per_host, prefix=f"h{j}"
+            ).hosts
+        )
+        faults: tuple[Fault, ...] = ()
+        if j < shared_jobs:
+            if tier == "host":
+                hosts[rank] = fab_host
+            else:
+                hosts[rank] = f"fab-h{j}-{seed}"
+            faults = regime_faults(
+                regime_family, rank, delay_ms / 1e3, steps
+            )
+            member_ids.append(job_id)
+            fault_ranks[job_id] = rank
+        elif distractor_family is not None:
+            faults = regime_faults(
+                distractor_family, rank, delay_ms / 1e3, steps
+            )
+            fault_ranks[job_id] = rank
+        # private fabric everywhere, then the shared node over the
+        # faulted rank's placement
+        switches = [f"{h}.sw" for h in hosts]
+        pods = [f"{h}.pod" for h in hosts]
+        if j < shared_jobs:
+            switches[rank] = (
+                fab_sw if tier in ("host", "switch") else f"fab-swj{j}-{seed}"
+            )
+            pods[rank] = fab_pod
+        scenarios[job_id] = ddp_scenario(
+            world_size=world_size,
+            steps=steps,
+            seed=seed * 1000 + j,
+            faults=faults,
+            sync=sync,
+            cluster=ClusterSpec(
+                world_size=world_size,
+                hosts=tuple(hosts),
+                switches=tuple(switches),
+                pods=tuple(pods),
+            ),
+        )
+    return FabricFleet(
+        scenarios=scenarios,
+        tier=tier,
+        node=node,
+        member_job_ids=tuple(member_ids),
+        family=family,
+        regime_family=regime_family,
+        fault_ranks=fault_ranks,
+    )
+
+
 def aba_windows(
     *, world_size: int = 8, steps: int = 200, seed: int = 0, delay_ms: float = 120.0
 ):

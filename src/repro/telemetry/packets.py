@@ -54,10 +54,15 @@ _MAGIC2 = b"SFP2"
 #: SFP2 wire versions this decoder accepts.  v1 is the base framing; v2
 #: appends an optional binary host-id section (per-rank host names, the
 #: incident tier's topology source) between the present-ranks section
-#: and the window payload.  The encoder emits v1 — byte-identical to
-#: every pre-hosts emitter — unless the packet actually declares hosts.
+#: and the window payload; v3 appends an optional topology section after
+#: the host section — per-rank switch and pod names, the fabric tiers
+#: the incident engine promotes over.  The encoder emits the LOWEST
+#: version that carries the packet's declared placement: hostless
+#: packets stay byte-identical v1, host-only packets byte-identical v2
+#: (golden fixtures in `tests/golden/` pin all three framings).
 _SFP2_VERSION = 1
 _SFP2_VERSION_HOSTS = 2
+_SFP2_VERSION_FABRIC = 3
 _FLAG_WINDOW = 0x01
 #: compress= -> (meta dtype tag, optional payload codec tag)
 _COMPRESSIONS = ("none", "int8", "int8.delta")
@@ -104,6 +109,14 @@ class EvidencePacket:
     #: (pre-incident emitters decode with this default, and packets
     #: without hosts still encode as byte-identical SFP2 v1).
     hosts: tuple[str, ...] = ()
+    #: per-rank switch names (the fabric tier above each rank's host).
+    #: Ships in the binary SFP2-v3 topology section; () = undeclared
+    #: (host-only packets still encode as byte-identical SFP2 v2).
+    #: Requires `hosts` and must align with it per rank.
+    switches: tuple[str, ...] = ()
+    #: per-rank pod names (the fabric tier above each rank's switch).
+    #: Same v3 section and discipline; requires `switches`.
+    pods: tuple[str, ...] = ()
     #: full [N, R, S] matrix (None in compact mode)
     window: np.ndarray | None = None
 
@@ -123,6 +136,8 @@ def from_diagnosis(
     sync_stages: tuple[str, ...] = (),
     first_step: int = -1,
     hosts: tuple[str, ...] = (),
+    switches: tuple[str, ...] = (),
+    pods: tuple[str, ...] = (),
 ) -> EvidencePacket:
     return EvidencePacket(
         window_index=window_index,
@@ -143,6 +158,8 @@ def from_diagnosis(
         sync_stages=tuple(sync_stages),
         first_step=first_step,
         hosts=tuple(hosts),
+        switches=tuple(switches),
+        pods=tuple(pods),
         window=window,
     )
 
@@ -267,6 +284,38 @@ def _decode_window(
 # ---------------------------------------------------------------------------
 
 
+def _pack_names(names: tuple[str, ...], what: str) -> list[Any]:
+    """Binary name-list section: u32 count + per-name u16 length + utf8.
+    The ONE layout shared by the v2 host section and both v3 fabric
+    lists (byte-compatible with the original v2 host encoding)."""
+    parts: list[Any] = [struct.pack("<I", len(names))]
+    for n in names:
+        nb = str(n).encode()
+        if len(nb) > 0xFFFF:
+            raise ValueError(f"{what} name exceeds 65535 bytes")
+        parts.append(struct.pack("<H", len(nb)))
+        parts.append(nb)
+    return parts
+
+
+def _validate_placement(p: EvidencePacket) -> None:
+    """The placement alignment contract, enforced on encode: fabric
+    tiers hang off the tier below them, per rank."""
+    if p.switches and not p.hosts:
+        raise ValueError("switches declared without hosts")
+    if p.switches and len(p.switches) != len(p.hosts):
+        raise ValueError(
+            f"switches must align with hosts: {len(p.switches)} != "
+            f"{len(p.hosts)}"
+        )
+    if p.pods and not p.switches:
+        raise ValueError("pods declared without switches")
+    if p.pods and len(p.pods) != len(p.hosts):
+        raise ValueError(
+            f"pods must align with hosts: {len(p.pods)} != {len(p.hosts)}"
+        )
+
+
 def encode_packet(
     p: EvidencePacket, *, compress: str = "none", wire: str = "sfp2"
 ) -> bytes:
@@ -277,8 +326,9 @@ def encode_packet(
     `repro.distributed.compression`); `"int8.delta"` additionally
     step-deltas and zigzag-varints the quantized stream.  `wire="sfp1"`
     emits the legacy framing (back-compat emitters; no `"int8.delta"`,
-    and no host-id section — a packet's declared `hosts` only travel on
-    SFP2, where they promote the frame to version 2).
+    and no placement sections — a packet's declared `hosts` /
+    `switches` / `pods` only travel on SFP2, where they promote the
+    frame to version 2 / 3).
     """
     if compress not in _COMPRESSIONS:
         raise ValueError(f"unknown compression {compress!r}")
@@ -295,9 +345,17 @@ def encode_packet(
     head = json.dumps(header, default=list).encode()
     ranks = np.asarray(p.present_ranks, np.dtype("<u4"))
     flags = _FLAG_WINDOW if payload is not None else 0
-    # hosts promote the frame to v2; hostless packets stay byte-identical
-    # v1 (pre-incident decoders keep accepting them unchanged).
-    version = _SFP2_VERSION_HOSTS if p.hosts else _SFP2_VERSION
+    # the LOWEST version that carries the declared placement: hosts
+    # promote the frame to v2, fabric tiers (switches/pods) to v3 —
+    # hostless packets stay byte-identical v1 and host-only packets
+    # byte-identical v2 (pre-fabric decoders keep accepting them
+    # unchanged; goldens pin all three).
+    _validate_placement(p)
+    version = _SFP2_VERSION
+    if p.hosts:
+        version = (
+            _SFP2_VERSION_FABRIC if p.switches else _SFP2_VERSION_HOSTS
+        )
     parts: list[Any] = [
         struct.pack("<4sBBI", _MAGIC2, version, flags, len(head)),
         head,
@@ -305,13 +363,10 @@ def encode_packet(
         ranks.tobytes(),
     ]
     if p.hosts:
-        parts.append(struct.pack("<I", len(p.hosts)))
-        for h in p.hosts:
-            hb = str(h).encode()
-            if len(hb) > 0xFFFF:
-                raise ValueError("host name exceeds 65535 bytes")
-            parts.append(struct.pack("<H", len(hb)))
-            parts.append(hb)
+        parts.extend(_pack_names(p.hosts, "host"))
+    if p.switches:
+        parts.extend(_pack_names(p.switches, "switch"))
+        parts.extend(_pack_names(p.pods, "pod"))
     if payload is not None:
         parts.append(struct.pack("<II", len(payload), zlib.adler32(payload)))
         parts.append(payload)
@@ -351,6 +406,25 @@ def _need(data, off: int, n: int, what: str) -> int:
     return end
 
 
+def _read_names(
+    mv: memoryview, off: int, what: str
+) -> tuple[list[str], int]:
+    """Decode one binary name-list section (see `_pack_names`); returns
+    (names, new offset).  Bounds-checked per field like every section."""
+    end = _need(mv, off, 4, f"{what} count")
+    (count,) = struct.unpack_from("<I", mv, off)
+    off = end
+    if count > 1 << 24:
+        raise ValueError(f"{what} count exceeds size cap")
+    names: list[str] = []
+    for _ in range(count):
+        end = _need(mv, off, 2, f"{what}-name length")
+        (nl,) = struct.unpack_from("<H", mv, off)
+        off = _need(mv, end, nl, f"{what} name")
+        names.append(str(mv[end:off], "utf-8"))
+    return names, off
+
+
 def _finish_header(header: Any, window: np.ndarray | None) -> EvidencePacket:
     if not isinstance(header, dict):
         raise ValueError("packet header is not an object")
@@ -359,6 +433,8 @@ def _finish_header(header: Any, window: np.ndarray | None) -> EvidencePacket:
     header.setdefault("sync_stages", [])
     header.setdefault("first_step", -1)
     header.setdefault("hosts", [])
+    header.setdefault("switches", [])
+    header.setdefault("pods", [])
     try:
         for key in (
             "stages",
@@ -371,6 +447,8 @@ def _finish_header(header: Any, window: np.ndarray | None) -> EvidencePacket:
             "present_ranks",
             "sync_stages",
             "hosts",
+            "switches",
+            "pods",
         ):
             header[key] = tuple(header[key])
         return EvidencePacket(window=window, **header)
@@ -400,7 +478,9 @@ def _decode_sfp2(data: bytes) -> EvidencePacket:
     mv = memoryview(data)
     off = _need(mv, 0, 10, "fixed header")
     _, version, flags, hlen = struct.unpack_from("<4sBBI", mv, 0)
-    if version not in (_SFP2_VERSION, _SFP2_VERSION_HOSTS):
+    if version not in (
+        _SFP2_VERSION, _SFP2_VERSION_HOSTS, _SFP2_VERSION_FABRIC
+    ):
         raise ValueError(f"unsupported SFP2 wire version {version}")
     end = _need(mv, off, hlen, "header")
     header = json.loads(str(mv[off:end], "utf-8"))
@@ -415,24 +495,26 @@ def _decode_sfp2(data: bytes) -> EvidencePacket:
         np.frombuffer(mv[end:off], np.dtype("<u4")).tolist() if nranks else []
     )
 
-    # the binary v2 section is the ONLY source of host ids: a JSON
-    # header claiming the key is malformed on EVERY route (a v1 frame
-    # must not smuggle a placement past the v2 section's rules).
-    if isinstance(header, dict) and "hosts" in header:
+    # the binary v2/v3 sections are the ONLY source of placement ids: a
+    # JSON header claiming any of the keys is malformed on EVERY route
+    # (a v1 frame must not smuggle a placement past the sections' rules).
+    if "hosts" in header or "switches" in header or "pods" in header:
         raise ValueError("invalid packet header")
     if version >= _SFP2_VERSION_HOSTS:
-        end = _need(mv, off, 4, "host count")
-        (nhosts,) = struct.unpack_from("<I", mv, off)
-        off = end
-        if nhosts > 1 << 24:
-            raise ValueError("host count exceeds size cap")
-        hosts = []
-        for _ in range(nhosts):
-            end = _need(mv, off, 2, "host-name length")
-            (hl,) = struct.unpack_from("<H", mv, off)
-            off = _need(mv, end, hl, "host name")
-            hosts.append(str(mv[end:off], "utf-8"))
+        hosts, off = _read_names(mv, off, "host")
         header["hosts"] = hosts
+    if version >= _SFP2_VERSION_FABRIC:
+        switches, off = _read_names(mv, off, "switch")
+        pods, off = _read_names(mv, off, "pod")
+        # the alignment contract the encoder enforces, re-checked on the
+        # wire: each fabric list is per-rank (aligned with hosts) or
+        # absent, and pods hang off switches.
+        if switches and len(switches) != len(header["hosts"]):
+            raise ValueError("switch section does not align with hosts")
+        if pods and (not switches or len(pods) != len(header["hosts"])):
+            raise ValueError("pod section does not align with switches")
+        header["switches"] = switches
+        header["pods"] = pods
 
     window = None
     meta = header.pop("window", None)
@@ -466,9 +548,11 @@ def _decode_sfp1(data: bytes) -> EvidencePacket:
     end = _need(mv, off, hlen, "header")
     header = json.loads(bytes(mv[off:end]))
     off = end
-    if isinstance(header, dict) and "hosts" in header:
-        # SFP1 never carried hosts; only the SFP2-v2 binary section may
-        # declare a placement (see _decode_sfp2)
+    if isinstance(header, dict) and (
+        "hosts" in header or "switches" in header or "pods" in header
+    ):
+        # SFP1 never carried a placement; only the SFP2 v2/v3 binary
+        # sections may declare one (see _decode_sfp2)
         raise ValueError("invalid packet header")
     end = _need(mv, off, 4, "meta length")
     mlen = int.from_bytes(mv[off:end], "little")

@@ -409,6 +409,52 @@ class TestFleetService:
                 ref.registry.get(f"j{j}").kernel_shares,
             )
 
+    def test_wire_learned_topology_and_rehoming(self):
+        """SFP2-v3 packets teach the engine the full fabric hierarchy;
+        a later conflicting placement re-homes last-writer-wins and the
+        churn count surfaces in snapshot() (never silent drift)."""
+        from repro.incidents import IncidentEngine
+        from repro.sim import ClusterSpec
+
+        eng = IncidentEngine()
+        svc = FleetService(window_capacity=12, incidents=eng)
+        cs = ClusterSpec.fabric(8, 2, prefix="n")
+        sc = ddp_scenario(world_size=8, steps=12, cluster=cs)
+        res = simulate(sc)
+        agg = WindowAggregator(sc.schema(), window_steps=12)
+        report = None
+        for t in range(12):
+            report = agg.add_step(
+                res.durations[t], res.durations[t].sum(-1)
+            ) or report
+        pkt = from_diagnosis(
+            report.diagnosis, sc.stages, report.steps, 8,
+            report.window_index, window=report.durations,
+            hosts=sc.hosts, switches=sc.switches, pods=sc.pods,
+        )
+        assert svc.submit("j0", encode_packet(pkt, compress="int8"))
+        topo = eng.topology
+        assert topo.hosts_for("j0") == cs.hosts
+        for h in set(cs.hosts):
+            assert topo.switch_of(h) and topo.pod_of(h)
+        assert svc.snapshot()["rehomed"] == 0
+        # the same job re-arrives with rank 0 on a different host
+        moved = ClusterSpec(
+            world_size=8,
+            hosts=("elsewhere",) + cs.hosts[1:],
+            switches=("elsewhere.sw",) + cs.switches[1:],
+            pods=("elsewhere.pod",) + cs.pods[1:],
+        )
+        pkt2 = from_diagnosis(
+            report.diagnosis, sc.stages, report.steps, 8,
+            report.window_index + 1, window=report.durations,
+            hosts=moved.hosts, switches=moved.switches, pods=moved.pods,
+        )
+        assert svc.submit("j0", encode_packet(pkt2, compress="int8"))
+        assert topo.host_of("j0", 0) == "elsewhere"
+        assert svc.snapshot()["rehomed"] == 1
+        assert eng.counts()["rehomed"] == 1
+
     def test_route_tie_order_fully_deterministic(self):
         """Two jobs with byte-identical windows tie exactly on score;
         the order must be job-id ascending regardless of submission

@@ -89,6 +89,63 @@ class TestClusterSpec:
         sc = regime_scenario("step", cluster=cs)
         assert sc.cluster is cs and sc.hosts == cs.hosts
 
+    def test_fabric_packing(self):
+        cs = ClusterSpec.fabric(
+            16, 2, hosts_per_switch=2, switches_per_pod=2, prefix="m"
+        )
+        assert cs.hosts[:4] == ("m-0", "m-0", "m-1", "m-1")
+        assert cs.switches[2] == "m-sw-0" and cs.switches[4] == "m-sw-1"
+        assert cs.pods[7] == "m-pod-0" and cs.pods[8] == "m-pod-1"
+        # per-host consistency: one switch per host, one pod per switch
+        for attr in ("switches", "pods"):
+            seen = {}
+            for h, n in zip(cs.hosts, getattr(cs, attr)):
+                assert seen.setdefault(h, n) == n
+
+    def test_rejects_misaligned_fabric(self):
+        with pytest.raises(ValueError, match="switches"):
+            ClusterSpec(world_size=4, hosts=("a",) * 4, switches=("s",))
+        with pytest.raises(ValueError, match="pods"):
+            ClusterSpec(world_size=4, hosts=("a",) * 4, pods=("p",) * 4)
+
+    def test_scenario_exposes_fabric_tiers(self):
+        cs = ClusterSpec.fabric(8, 2)
+        sc = ddp_scenario(world_size=8, cluster=cs)
+        assert sc.switches == cs.switches and sc.pods == cs.pods
+        assert ddp_scenario(world_size=8).switches == ()
+
+    @pytest.mark.parametrize(
+        "family,tier",
+        [("shared_host", "host"), ("oversub_uplink", "switch"),
+         ("pod_congestion", "pod")],
+    )
+    def test_fabric_fleet_ground_truth(self, family, tier):
+        from repro.sim.scenarios import fabric_fleet
+
+        fl = fabric_fleet(family, jobs=5, shared_jobs=2, seed=3)
+        assert fl.tier == tier and len(fl.scenarios) == 5
+        placements = {}          # member -> (host, switch, pod) of fault
+        for jid in fl.member_job_ids:
+            sc = fl.scenarios[jid]
+            rank = fl.fault_ranks[jid]
+            placements[jid] = (
+                sc.hosts[rank], sc.switches[rank], sc.pods[rank]
+            )
+            assert placements[jid][("host", "switch", "pod").index(tier)] \
+                == fl.node
+            assert sc.faults and sc.faults[0].rank == rank
+        # everything NARROWER than the shared tier is private per job —
+        # the narrowest explaining tier really is fl.tier
+        for i, narrower in enumerate(("host", "switch")):
+            if narrower == tier:
+                break
+            nodes = [p[i] for p in placements.values()]
+            assert len(set(nodes)) == len(nodes)
+        # distractors never touch the shared node at any tier
+        for jid, sc in fl.scenarios.items():
+            if jid not in fl.member_job_ids:
+                assert fl.node not in sc.hosts + sc.switches + sc.pods
+
     def test_shared_host_fleet_ground_truth(self):
         fl = shared_host_fleet(jobs=5, shared_jobs=2, seed=3)
         assert len(fl.scenarios) == 5
@@ -125,6 +182,77 @@ class TestTopology:
         t.declare("a", ("h0",))
         t.declare("a", ())          # hostless packet must not erase
         assert t.hosts_for("a") == ("h0",)
+
+
+class TestTieredTopology:
+    def tiered(self):
+        return Topology.from_jobs(
+            {"a": ("h0", "h0", "h1", "h1"), "b": ("h2", "h2", "h3", "h3")},
+            switches={"a": ("s0", "s0", "s0", "s0"),
+                      "b": ("s0", "s0", "s1", "s1")},
+            pods={"a": ("p0",) * 4, "b": ("p0", "p0", "p1", "p1")},
+        )
+
+    def test_fabric_reads(self):
+        t = self.tiered()
+        assert t.switch_of("h0") == "s0" and t.switch_of("h3") == "s1"
+        assert t.switch_of("unknown") == ""
+        assert t.pod_of("h2") == "p0" and t.pod_of_switch("s1") == "p1"
+        assert t.node_of("host", "h1") == "h1"
+        assert t.node_of("switch", "h1") == "s0"
+        assert t.node_of("pod", "h3") == "p1"
+        assert t.tier_of("switch", "b", 0) == "s0"
+        with pytest.raises(ValueError, match="unknown tier"):
+            t.node_of("rack", "h0")
+
+    def test_tier_axes_sorted_and_reachable_only(self):
+        t = self.tiered()
+        assert t.nodes("switch") == ("s0", "s1")
+        assert t.nodes("pod") == ("p0", "p1")
+        assert t.hosts_under("switch", "s0") == ("h0", "h1", "h2")
+        assert t.jobs_under("switch", "s0") == ("a", "b")
+        assert t.jobs_under("pod", "p1") == ("b",)
+        assert t.ranks_under("switch", "b", "s0") == (0, 1)
+        # forgetting the only job reaching a node drops it from the axis
+        t.forget("b")
+        assert t.nodes("switch") == ("s0",)
+        assert t.nodes("pod") == ("p0",)
+
+    def test_rehomed_counts_every_tier_conflict(self):
+        t = Topology()
+        t.declare("a", ("h0", "h1"), switches=("s0", "s0"), pods=("p0", "p0"))
+        assert t.rehomed == 0
+        # same placement again: no churn
+        t.declare("a", ("h0", "h1"), switches=("s0", "s0"), pods=("p0", "p0"))
+        assert t.rehomed == 0
+        # rank 1 re-homed to a different host
+        t.declare("a", ("h0", "h2"), switches=("s0", "s0"))
+        assert t.rehomed == 1
+        # host re-cabled under a different switch (last writer wins)
+        t.declare_fabric("h0", switch="s9")
+        assert t.rehomed == 2 and t.switch_of("h0") == "s9"
+        # first pod claim for s9 is no conflict; CHANGING it is
+        t.declare_fabric("h0", switch="s9", pod="p0")
+        assert t.rehomed == 2
+        t.declare_fabric("h0", switch="s9", pod="p9")
+        assert t.rehomed == 3 and t.pod_of("h0") == "p9"
+
+    def test_v2_declare_never_erases_v3_fabric(self):
+        t = Topology()
+        t.declare("a", ("h0",), switches=("s0",), pods=("p0",))
+        t.declare("a", ("h0",))              # host-only (v2) packet
+        assert t.switch_of("h0") == "s0" and t.pod_of("h0") == "p0"
+        assert t.rehomed == 0
+
+    def test_rejects_misaligned_and_floating_pod(self):
+        t = Topology()
+        with pytest.raises(ValueError, match="switches must align"):
+            t.declare("a", ("h0", "h1"), switches=("s0",))
+        with pytest.raises(ValueError, match="pods must align"):
+            t.declare("a", ("h0", "h1"),
+                      switches=("s0", "s0"), pods=("p0",))
+        with pytest.raises(ValueError, match="without a switch"):
+            t.declare_fabric("h0", pod="p0")
 
 
 # ---------------------------------------------------------------------------
@@ -362,6 +490,153 @@ class TestCommonCause:
 
 
 # ---------------------------------------------------------------------------
+# Narrowest-tier promotion (the fabric hierarchy)
+# ---------------------------------------------------------------------------
+
+#: per-job faulted rank in the three-job fabric fixtures below.
+FAB_RANK = {"a": 2, "b": 1, "c": 0}
+
+
+def uplink_topology(shared_tier: str = "switch") -> Topology:
+    """Three jobs; each faulted rank on its OWN host, those hosts
+    correlated at `shared_tier`: "switch" hangs all three under one
+    uplink (sw-up, pod p-up); "pod" gives each its own switch under one
+    pod.  Every other rank lives on fully private fabric."""
+    hosts = {
+        "a": ("a0", "a0", "ha", "a1"),
+        "b": ("b0", "hb", "b1", "b1"),
+        "c": ("hc", "c0", "c0", "c1"),
+    }
+    faulted = {"a": "ha", "b": "hb", "c": "hc"}
+    switches, pods = {}, {}
+    for j, hs in hosts.items():
+        sw = [f"{h}.sw" for h in hs]
+        pd = [f"{h}.pod" for h in hs]
+        for r, h in enumerate(hs):
+            if h == faulted[j] and shared_tier in ("switch", "pod"):
+                if shared_tier == "switch":
+                    sw[r] = "sw-up"
+                pd[r] = "p-up"
+        switches[j] = tuple(sw)
+        pods[j] = tuple(pd)
+    return Topology.from_jobs(hosts, switches=switches, pods=pods)
+
+
+def fab_entries():
+    return [
+        E(j, "s0", FAB_RANK[j], 1.0, window_index=1) for j in sorted(FAB_RANK)
+    ]
+
+
+def fab_activity():
+    return {j: (shared_activity(r), STAGES) for j, r in FAB_RANK.items()}
+
+
+class TestTierPromotion:
+    def test_three_hosts_one_switch_incident(self):
+        """The tentpole case: three faulted hosts under ONE switch are
+        one switch-tier incident — never three host incidents."""
+        eng = IncidentEngine(topology=uplink_topology("switch"))
+        live = eng.observe(1, fab_entries(), activity=fab_activity())
+        fleet = [i for i in live if i.scope == "fleet"]
+        assert len(fleet) == 1
+        f = fleet[0]
+        assert f.tier == "switch" and f.host == "sw-up"
+        assert f.incident_id == "if:switch:sw-up:s0:t1"
+        assert f.member_jobs == ("a", "b", "c")
+        assert f.exposure_s == pytest.approx(3.0)
+        members = [i for i in live if i.scope == "job"]
+        assert all(m.state == "merged" for m in members)
+        assert all(m.merged_into == f.incident_id for m in members)
+        # the pod above sw-up ALSO reaches quorum, but the narrower
+        # switch claimed every member first: no wider duplicate
+        assert not any(i.tier == "pod" for i in fleet)
+
+    def test_shared_host_claims_before_its_switch(self):
+        """Narrowest first the other way: jobs sharing a HOST (itself
+        under a shared switch) promote at the host tier only."""
+        hosts = {"a": ("h0", "h0", "shared", "h1"),
+                 "b": ("g0", "shared", "g1", "g1")}
+        topo = Topology.from_jobs(
+            hosts,
+            switches={j: ("sw-up",) * 4 for j in hosts},
+            pods={j: ("p-up",) * 4 for j in hosts},
+        )
+        eng = IncidentEngine(topology=topo)
+        live = eng.observe(
+            1,
+            [E("a", "s0", 2, 1.0, window_index=1),
+             E("b", "s0", 1, 1.0, window_index=1)],
+            activity={"a": (shared_activity(2), STAGES),
+                      "b": (shared_activity(1), STAGES)},
+        )
+        fleet = [i for i in live if i.scope == "fleet"]
+        assert len(fleet) == 1
+        assert fleet[0].tier == "host" and fleet[0].host == "shared"
+        assert fleet[0].incident_id.startswith("if:shared:")
+
+    def test_pod_is_the_last_resort_tier(self):
+        """Distinct hosts AND distinct switches under one pod: only the
+        pod explains the co-activation."""
+        eng = IncidentEngine(topology=uplink_topology("pod"))
+        live = eng.observe(1, fab_entries(), activity=fab_activity())
+        fleet = [i for i in live if i.scope == "fleet"]
+        assert len(fleet) == 1
+        assert fleet[0].tier == "pod" and fleet[0].host == "p-up"
+        assert fleet[0].member_jobs == ("a", "b", "c")
+
+    def test_no_shared_fabric_no_fleet_incident(self):
+        """Fully private fabric: same entries, same activity, nothing
+        to correlate at any tier."""
+        eng = IncidentEngine(topology=uplink_topology("none"))
+        live = eng.observe(1, fab_entries(), activity=fab_activity())
+        assert [i for i in live if i.scope == "fleet"] == []
+
+    def test_wider_tier_leads_deterministic_order(self):
+        """Two independent fleet incidents at different tiers: the
+        wider (pod > switch > host) sorts first at equal score."""
+        eng = IncidentEngine(topology=uplink_topology("switch"))
+        # d + e share a host on otherwise-private fabric -> host tier
+        eng.topology.declare("d", ("x0", "x0", "hs", "x1"))
+        eng.topology.declare("e", ("y0", "hs", "y1", "y1"))
+        entries = fab_entries() + [
+            E("d", "s0", 2, 1.0, window_index=1),
+            E("e", "s0", 1, 1.0, window_index=1),
+        ]
+        act = dict(fab_activity())
+        act["d"] = (shared_activity(2), STAGES)
+        act["e"] = (shared_activity(1), STAGES)
+        live = eng.observe(1, entries, activity=act)
+        fleet = [i for i in live if i.scope == "fleet"]
+        assert [i.tier for i in fleet] == ["switch", "host"]
+        # and the fleet block leads the whole listing
+        assert live[0].scope == "fleet"
+
+    def test_kernel_route_matches_ref_across_tiers(self):
+        for shared_tier in ("switch", "pod"):
+            results = []
+            for use_kernel in (False, True):
+                eng = IncidentEngine(
+                    topology=uplink_topology(shared_tier),
+                    use_kernel=use_kernel,
+                )
+                live = eng.observe(
+                    1, fab_entries(), activity=fab_activity()
+                )
+                results.append(
+                    sorted((i.incident_id, i.tier, i.state) for i in live)
+                )
+            assert results[0] == results[1]
+
+    def test_rehomed_surfaces_in_counts(self):
+        eng = IncidentEngine()
+        eng.topology.declare("a", ("h0", "h1"))
+        assert eng.counts()["rehomed"] == 0
+        eng.topology.declare("a", ("h0", "h2"))
+        assert eng.counts()["rehomed"] == 1
+
+
+# ---------------------------------------------------------------------------
 # Escalation controller
 # ---------------------------------------------------------------------------
 
@@ -418,6 +693,30 @@ class TestEscalation:
         fleet = _mk_inc(1, scope="fleet", exposure=1.0)
         (act,) = ctl.plan(1, [job, fleet])
         assert act.incident_id == "inc-01" and act.jobs == ("x", "y")
+
+    def test_wider_tier_outranks_at_equal_score(self):
+        """Fleet incidents at different tiers: the wider tier (more
+        blast radius) wins the budget even when scores tie and the
+        narrower id sorts first."""
+        ctl = EscalationController(budget_per_tick=1)
+        host_f = _mk_inc(0, scope="fleet", exposure=5.0)
+        sw_f = _mk_inc(1, scope="fleet", exposure=5.0)
+        sw_f.tier = "switch"
+        (act,) = ctl.plan(1, [host_f, sw_f])
+        assert act.incident_id == "inc-01"
+
+    def test_tier_order_is_pod_switch_host_then_jobs(self):
+        ctl = EscalationController(budget_per_tick=4, bucket_cap=4)
+        job = _mk_inc(0, exposure=100.0)
+        host_f = _mk_inc(1, scope="fleet", exposure=1.0)
+        sw_f = _mk_inc(2, scope="fleet", exposure=1.0)
+        sw_f.tier = "switch"
+        pod_f = _mk_inc(3, scope="fleet", exposure=1.0)
+        pod_f.tier = "pod"
+        acts = ctl.plan(1, [job, host_f, sw_f, pod_f])
+        assert [a.incident_id for a in acts] == [
+            "inc-03", "inc-02", "inc-01", "inc-00"
+        ]
 
     def test_merged_and_cooling_never_escalate(self):
         ctl = EscalationController(budget_per_tick=4)
@@ -491,6 +790,68 @@ class TestCoActivation:
     def test_ref_rejects_bad_rank(self):
         with pytest.raises(ValueError):
             co_activation_ref(np.zeros((2, 3, 4)))
+
+
+class TestTieredCoActivation:
+    def _tiers(self, h, rng):
+        from repro.kernels.frontier import TierAxes
+
+        n_sw, n_pod = max(1, h // 3), max(1, h // 7)
+        return (
+            TierAxes("switch", n_sw,
+                     tuple(int(g) for g in rng.integers(-1, n_sw, h))),
+            TierAxes("pod", n_pod,
+                     tuple(int(g) for g in rng.integers(-1, n_pod, h))),
+        )
+
+    @pytest.mark.parametrize(
+        "shape", [(1, 1, 1, 1), (2, 5, 4, 6), (3, 7, 130, 6)]
+    )
+    def test_one_dispatch_matches_ref_per_tier(self, shape):
+        from repro.kernels.frontier import (
+            tiered_co_activation,
+            tiered_co_activation_ref,
+        )
+
+        rng = np.random.default_rng(0)
+        act = rng.random(shape) < 0.3
+        for tiers in ((), self._tiers(shape[2], rng)):
+            ref = tiered_co_activation_ref(act, tiers)
+            got = tiered_co_activation(act, tiers)
+            assert len(got) == len(ref) == 1 + len(tiers)
+            for t, (g, r) in enumerate(zip(got, ref)):
+                for field in ("jobs", "coact", "active"):
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(g, field)),
+                        getattr(r, field),
+                        err_msg=f"{shape} tier#{t} {field}",
+                    )
+
+    def test_no_tiers_is_plain_co_activation(self):
+        from repro.kernels.frontier import tiered_co_activation
+
+        act = np.random.default_rng(1).random((2, 6, 5, 3)) < 0.4
+        (only,) = tiered_co_activation(act, ())
+        plain = co_activation(act)
+        for field in ("jobs", "coact", "active"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(only, field)),
+                np.asarray(getattr(plain, field)),
+            )
+
+    def test_rejects_misaligned_grouping(self):
+        from repro.kernels.frontier import (
+            TierAxes,
+            tiered_co_activation,
+            tiered_co_activation_ref,
+        )
+
+        act = np.zeros((1, 2, 4, 2), bool)
+        bad = (TierAxes("switch", 2, (0, 1)),)     # covers 2 of 4 hosts
+        with pytest.raises(ValueError, match="grouping covers"):
+            tiered_co_activation(act, bad)
+        with pytest.raises(ValueError, match="grouping covers"):
+            tiered_co_activation_ref(act, bad)
 
 
 # ---------------------------------------------------------------------------

@@ -88,6 +88,46 @@ class TestTraceSchema:
             assert f.delay_ms > 0 and f.rank >= 0
             assert f.until_tick == -1 or f.until_tick > f.tick
 
+    def test_fabric_generator_emits_tiered_placement(self):
+        """--fabric arrive rows carry aligned switch/pod tiers; resize
+        and re-arrival rows stay host-only (mixed v2/v3 on purpose)."""
+        tr = parse_trace(generate_trace(**PARAMS, fabric=True))
+        assert tr.stats.skipped == 0
+        first_arrivals = {}
+        for e in tr.events:
+            if e.kind == "arrive" and e.job_id not in first_arrivals:
+                first_arrivals[e.job_id] = e
+        assert first_arrivals
+        for e in first_arrivals.values():
+            assert len(e.switches) == len(e.pods) == e.world_size
+        # determinism: same seed, same bytes
+        assert generate_trace(**PARAMS, fabric=True) == generate_trace(
+            **PARAMS, fabric=True
+        )
+
+    def test_shared_switch_ground_truth(self):
+        """--shared-switch: every faulted job's faulted rank lands on
+        its OWN host under the one shared uplink, with a concurrent
+        persistent data stall — the switch tier is the answer."""
+        tr = parse_trace(generate_trace(
+            jobs=6, ticks=8, window_steps=8, world_size=8, seed=0,
+            fault_every=3, shared_switch=True,
+        ))
+        arrivals = {
+            e.job_id: e for e in tr.events if e.kind == "arrive"
+        }
+        faults = [e for e in tr.events if e.kind == "fault"]
+        assert len(faults) >= 2
+        fault_hosts = set()
+        for f in faults:
+            arr = arrivals[f.job_id]
+            assert f.family == "data" and f.until_tick == -1
+            assert arr.switches[f.rank] == "fab-sw0"
+            assert arr.pods[f.rank] == "fab-pod0"
+            fault_hosts.add(arr.hosts[f.rank])
+        # distinct hosts: nothing narrower than the switch can explain
+        assert len(fault_hosts) == len(faults)
+
     def test_load_trace_from_file(self, tmp_path):
         p = tmp_path / "t.jsonl"
         p.write_text(generate_trace(**PARAMS))
@@ -140,6 +180,46 @@ class TestLoaderDefensiveness:
         assert len(tr.events) == 1
         assert tr.stats.skip_reasons["bad_json"] == 1
         assert tr.stats.skip_reasons["missing_meta"] == 1
+
+    def test_tiered_placement_validation(self):
+        """The SFP2-v3 discipline holds at the trace boundary too:
+        switches need hosts, pods need switches, all per-rank aligned —
+        each violation is a counted skip with its own reason."""
+        good = self.row(
+            kind="arrive", tick=0, job_id="j", world_size=2,
+            stages=["a"], hosts=["h0", "h1"], switches=["s0", "s0"],
+            pods=["p0", "p0"],
+        )
+        bad = [
+            self.row(kind="arrive", tick=0, job_id="k", world_size=2,
+                     stages=["a"], switches=["s0", "s0"]),  # no hosts
+            self.row(kind="arrive", tick=0, job_id="k", world_size=2,
+                     stages=["a"], hosts=["h0", "h1"],
+                     switches=["s0"]),                      # misaligned
+            self.row(kind="arrive", tick=0, job_id="k", world_size=2,
+                     stages=["a"], hosts=["h0", "h1"],
+                     pods=["p0", "p0"]),                    # no switches
+            self.row(kind="resize", tick=1, job_id="j", world_size=2,
+                     hosts=["h0", "h1"], switches=["s0", "s0"],
+                     pods=["p0"]),                          # pods misaligned
+        ]
+        tr = parse_trace("\n".join([good] + bad))
+        assert tr.stats.accepted == 1
+        assert tr.stats.skip_reasons["bad_switches"] == 2
+        assert tr.stats.skip_reasons["bad_pods"] == 2
+        (ev,) = tr.events
+        assert ev.switches == ("s0", "s0") and ev.pods == ("p0", "p0")
+
+    def test_host_only_placement_still_accepted(self):
+        """v2-shaped rows (hosts, no fabric) parse exactly as before
+        the tier fields existed."""
+        tr = parse_trace(self.row(
+            kind="arrive", tick=0, job_id="j", world_size=2,
+            stages=["a"], hosts=["h0", "h1"],
+        ))
+        (ev,) = tr.events
+        assert ev.hosts == ("h0", "h1")
+        assert ev.switches == () and ev.pods == ()
 
     def test_duplicate_meta_counted(self):
         meta = json.dumps({"v": 1, "kind": "meta", "name": "x",
@@ -258,6 +338,25 @@ class TestReplayEngine:
         for k in stable:
             assert a[k] == b[k], k
         assert a["per_family"] == b["per_family"]
+
+    def test_shared_switch_replay_promotes_switch_tier(self):
+        """End to end through the trace front end: SFP2-v3 placement
+        survives generate -> parse -> wire -> engine, and the durable
+        incident table in the report names the shared uplink at the
+        switch tier (never per-host duplicates)."""
+        tr = parse_trace(generate_trace(
+            jobs=4, ticks=6, window_steps=8, world_size=8, seed=0,
+            fault_every=3, shared_switch=True,
+        ))
+        rep = replay_trace(tr, incidents=True)
+        fleet = [r for r in rep.incidents if r["scope"] == "fleet"]
+        assert len(fleet) == 1
+        assert fleet[0]["tier"] == "switch"
+        assert fleet[0]["host"] == "fab-sw0"
+        assert not any(
+            r["host"].startswith("fabh") for r in fleet
+        )
+        json.dumps(rep.as_dict())   # tier rows stay JSON-clean
 
     def test_sfp1_wire_also_replays(self):
         tr = parse_trace(generate_trace(

@@ -111,7 +111,7 @@ def drive(svc, eng, batches, *, extra_ticks: int = 0):
         snaps.append(svc.snapshot())
     incs = (
         tuple(
-            (i.incident_id, i.scope, i.state, i.host, i.stage,
+            (i.incident_id, i.scope, i.tier, i.state, i.host, i.stage,
              i.member_jobs)
             for i in eng.incidents()
         )
@@ -141,6 +141,50 @@ def run_sharded(
         return drive(svc, eng, batches, extra_ticks=extra_ticks)
     finally:
         svc.close()
+
+
+@functools.lru_cache(maxsize=None)
+def fabric_wire_batches(
+    family: str = "oversub_uplink",
+    jobs: int = 4,
+    shared_jobs: int = 2,
+    windows: int = 2,
+    seed: int = 1,
+    shard_split: int | None = None,
+) -> tuple:
+    """Like `wire_batches`, but over the tiered `fabric_fleet`: packets
+    carry the full SFP2-v3 placement (hosts + switches + pods)."""
+    from repro.sim.scenarios import fabric_fleet
+
+    fl = fabric_fleet(
+        family, jobs=jobs, shared_jobs=shared_jobs,
+        steps=windows * WINDOW, seed=seed, shard_split=shard_split,
+    )
+    sims = {j: simulate(sc) for j, sc in fl.scenarios.items()}
+    aggs = {
+        j: WindowAggregator(sc.schema(), window_steps=WINDOW)
+        for j, sc in fl.scenarios.items()
+    }
+    out = []
+    for w in range(windows):
+        batch = []
+        for jid, sc in fl.scenarios.items():
+            block = sims[jid].durations[w * WINDOW:(w + 1) * WINDOW]
+            report = None
+            for t in range(WINDOW):
+                report = aggs[jid].add_step(
+                    block[t], block[t].sum(-1)
+                ) or report
+            pkt = from_diagnosis(
+                report.diagnosis, sc.stages, report.steps,
+                sc.world_size, report.window_index,
+                window=report.durations, sync_stages=sc.sync_stages,
+                first_step=w * WINDOW, hosts=sc.hosts,
+                switches=sc.switches, pods=sc.pods,
+            )
+            batch.append((jid, encode_packet(pkt, compress="int8")))
+        out.append(tuple(batch))
+    return tuple(out)
 
 
 # -- the hash partition -----------------------------------------------------
@@ -314,6 +358,51 @@ def test_cross_shard_common_cause_promotes_once():
     assert i1 == i2
 
 
+@pytest.mark.parametrize("shards", SHARD_SWEEP)
+@pytest.mark.parametrize(
+    "family,tier", [("oversub_uplink", "switch"), ("pod_congestion", "pod")]
+)
+def test_fabric_tier_bit_identical(family, tier, shards):
+    """Tier promotion through the cross-shard reduce: every shard count
+    must produce the SAME fabric-tier fleet incident as unsharded —
+    only host-folded partials cross the shard boundary, the tier
+    collapse happens coordinator-side."""
+    batches = fabric_wire_batches(family)
+    r1, s1, i1 = run_unsharded(batches)
+    r2, s2, i2 = run_sharded(batches, shards)
+    assert (r1, s1, i1) == (r2, s2, i2)
+    fleet = [row for row in i1 if row[1] == "fleet"]
+    assert len(fleet) == 1 and fleet[0][2] == tier
+
+
+def test_cross_shard_switch_promotes_once():
+    """The uplink-sharing jobs forced onto DIFFERENT shards still
+    promote exactly one switch-tier incident on the shared uplink."""
+    from repro.sim.scenarios import fabric_fleet
+
+    batches = fabric_wire_batches("oversub_uplink", shard_split=3)
+    fl = fabric_fleet(
+        "oversub_uplink", jobs=4, shared_jobs=2, steps=2 * WINDOW,
+        seed=1, shard_split=3,
+    )
+    owners = {shard_of(j, 3) for j in fl.member_job_ids}
+    assert len(owners) == len(fl.member_job_ids) >= 2
+    eng = IncidentEngine()
+    svc = ShardedFleetService(
+        shards=3, workers="inline", window_capacity=WINDOW,
+        evict_after=2, incidents=eng,
+    )
+    drive(svc, eng, batches)
+    svc.close()
+    fleet = [i for i in eng.incidents() if i.scope == "fleet"]
+    assert len(fleet) == 1
+    assert fleet[0].tier == "switch" and fleet[0].host == fl.node
+    assert fleet[0].member_jobs == tuple(sorted(fl.member_job_ids))
+    _, _, i1 = run_unsharded(batches)
+    _, _, i2 = run_sharded(batches, 3)
+    assert i1 == i2
+
+
 def test_eviction_on_one_shard_never_resurrects_anothers_incident():
     """Shard A's job departs and evicts; shard B's incident must keep
     its own lifecycle — stay live on ITS evidence, not resolve or churn
@@ -335,7 +424,7 @@ def test_eviction_on_one_shard_never_resurrects_anothers_incident():
     assert (r1, s1, i1) == (r2, s2, i2)
     assert s2[-1]["evicted_total"] == 1  # a, and only a
     # b's incident survives a's eviction on the other shard, still live
-    b_states = {st for iid, _, st, *_ in i2
+    b_states = {st for iid, _scope, _tier, st, *_ in i2
                 if iid.startswith(f"ij:{b}:")}
     assert "active" in b_states or "open" in b_states, i2
 

@@ -1,10 +1,14 @@
 """Wire-boundary tests: SFP2 format, strict SFP1 route, byte-level fuzz,
 golden fixtures, and the no-window-copy encode regression.
 
-Golden fixtures (`tests/golden/*.bin`) pin the SFP1 byte format: they are
-checked-in bytes from the legacy encoder, so the format can never drift
-silently.  Regenerate (only after a deliberate, versioned format change)
-with:
+Golden fixtures (`tests/golden/*.bin`) pin the wire byte formats: the
+`sfp1_*` fixtures are checked-in bytes from the legacy encoder, the
+`sfp2_*` fixtures pin SFP2 at each frame version (v1 hostless, v2
+host-only, v3 full fabric topology) — so no format, and in particular
+no already-shipped LOWER version, can drift silently when a new section
+is added.  Every fixture must decode to the expected packet AND
+re-encode byte-for-byte.  Regenerate (only after a deliberate,
+versioned format change) with:
 
     PYTHONPATH=src python tests/test_wire.py --regen
 """
@@ -63,6 +67,43 @@ GOLDEN_CASES = {
     "sfp1_int8.bin": dict(window=True, compress="int8"),
     "sfp1_compact.bin": dict(window=False, compress="none"),
 }
+
+#: SFP2 fixtures: `tiers` counts the topology sections present (0 = no
+#: placement -> frame v1, 1 = hosts only -> v2, 3 = hosts + switches +
+#: pods -> v3); `version` pins the expected frame-version byte, so a
+#: hostless packet silently promoting to v2/v3 is a test failure, not
+#: just a fixture diff.
+SFP2_GOLDEN_CASES = {
+    "sfp2_v1_f64.bin": dict(window=True, compress="none", tiers=0, version=1),
+    "sfp2_v1_delta.bin": dict(
+        window=True, compress="int8.delta", tiers=0, version=1
+    ),
+    "sfp2_v2_hosts.bin": dict(window=True, compress="int8", tiers=1, version=2),
+    "sfp2_v3_fabric.bin": dict(
+        window=False, compress="none", tiers=3, version=3
+    ),
+    "sfp2_v3_fabric_int8.bin": dict(
+        window=True, compress="int8", tiers=3, version=3
+    ),
+}
+
+
+def sfp2_golden_packet(case: dict) -> EvidencePacket:
+    """The deterministic packet behind an SFP2 fixture: golden_packet
+    plus as many topology tiers as the case declares."""
+    pkt = golden_packet(window=case["window"])
+    r = pkt.world_size
+    if case["tiers"] >= 1:
+        pkt = dataclasses.replace(
+            pkt, hosts=tuple(f"host-{i // 2}" for i in range(r))
+        )
+    if case["tiers"] >= 3:
+        pkt = dataclasses.replace(
+            pkt,
+            switches=tuple(f"sw-{i // 4}" for i in range(r)),
+            pods=tuple("pod-0" for _ in range(r)),
+        )
+    return pkt
 
 
 def assert_packets_equal(a: EvidencePacket, b: EvidencePacket) -> None:
@@ -436,6 +477,43 @@ class TestGoldenSfp1:
             )
 
 
+class TestGoldenSfp2:
+    """Byte-pinned SFP2 fixtures at every frame version.
+
+    The v1/v2 fixtures are the back-compat contract of the v3 topology
+    sections: adding switches/pods to the format must leave hostless
+    and host-only packets byte-identical to what pre-fabric decoders
+    already parse.
+    """
+
+    @pytest.mark.parametrize("name", sorted(SFP2_GOLDEN_CASES))
+    def test_golden_bytes_decode_and_reencode(self, name):
+        blob = (GOLDEN_DIR / name).read_bytes()
+        case = SFP2_GOLDEN_CASES[name]
+        assert blob[4] == case["version"]
+        expect = sfp2_golden_packet(case)
+        got = decode_packet(blob)
+        if case["compress"] != "none":
+            # int8 routes decode to the dequantized window; reconstruct
+            # the exact expectation through the shared quantizer
+            q, s = quantize_i8(np.asarray(expect.window, np.float64), axis=-1)
+            expect = dataclasses.replace(
+                expect, window=q.astype(np.float64) * np.asarray(s)
+            )
+        assert_packets_equal(expect, got)
+        # re-encoding reproduces the exact checked-in bytes — and in
+        # particular re-encodes at the SAME frame version (lowest that
+        # carries the packet's sections)
+        assert encode_packet(got, compress=case["compress"]) == blob
+
+    def test_goldens_exist(self):
+        for name in SFP2_GOLDEN_CASES:
+            assert (GOLDEN_DIR / name).is_file(), (
+                f"missing fixture {name}; regenerate with "
+                f"PYTHONPATH=src python tests/test_wire.py --regen"
+            )
+
+
 # ---------------------------------------------------------------------------
 # SFP2-v2 host-id section (the incident tier's topology on the wire)
 # ---------------------------------------------------------------------------
@@ -583,6 +661,11 @@ def _regen() -> None:
     for name, case in GOLDEN_CASES.items():
         pkt = golden_packet(window=case["window"])
         blob = encode_packet(pkt, compress=case["compress"], wire="sfp1")
+        (GOLDEN_DIR / name).write_bytes(blob)
+        print(f"wrote {GOLDEN_DIR / name} ({len(blob)} bytes, "
+              f"adler32={zlib.adler32(blob):08x})")
+    for name, case in SFP2_GOLDEN_CASES.items():
+        blob = encode_packet(sfp2_golden_packet(case), compress=case["compress"])
         (GOLDEN_DIR / name).write_bytes(blob)
         print(f"wrote {GOLDEN_DIR / name} ({len(blob)} bytes, "
               f"adler32={zlib.adler32(blob):08x})")
