@@ -36,6 +36,7 @@ MODULES = [
     ("trace_replay", "trace-driven fleet replay: scale + routing accuracy"),
     ("fused_tick", "fused fleet-tick megakernel vs four-dispatch + parity"),
     ("fleet_shard", "sharded fleet aggregate ingest scaling + parity gate"),
+    ("obs_overhead", "self-observability overhead gate + obs-on/off parity"),
 ]
 
 

@@ -23,12 +23,14 @@ pin memory).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import TYPE_CHECKING, Iterable
 
 import numpy as np
 
 from ..core.streaming import WindowStager
+from ..obs import FleetObs
 from ..telemetry.packets import EvidencePacket
 from .ingest import FleetIngest
 from .registry import FleetRegistry, JobState
@@ -85,6 +87,8 @@ class FleetService:
         fused: bool = True,
         topology: "Topology | None" = None,
         device=None,
+        obs: bool = True,
+        obs_name: str = "service",
     ):
         self.ingest = FleetIngest()
         self.registry = FleetRegistry(
@@ -120,8 +124,22 @@ class FleetService:
         #: forced-host CPU device (`launch.mesh.make_fleet_mesh`), so N
         #: shards dispatch onto N devices.  None = jax's default device.
         self.device = device
+        #: always-on self-observability (`repro.obs`): the tick pipeline
+        #: timed as an ordered stage vector (decode -> stage -> kernel ->
+        #: epilog -> regimes -> correlate -> route), counters/histograms,
+        #: and a flight-recorder ring — surfaced as `snapshot()["obs"]`.
+        #: `obs=False` exists only for the overhead benchmark's control
+        #: arm and for parity triage; route()/snapshot() outputs are
+        #: bit-identical either way (the "obs" section aside).
+        self.obs = FleetObs(name=obs_name) if obs else None
         self._tick = 0
         self.evicted_total = 0
+
+    def _phase(self, name: str):
+        """Tick-phase span (no-op context when obs is disabled)."""
+        if self.obs is None:
+            return contextlib.nullcontext()
+        return self.obs.phase(name)
 
     # -- ingest ------------------------------------------------------------
 
@@ -134,11 +152,19 @@ class FleetService:
     ) -> JobState | None:
         """Ingest one packet for `job_id`; returns the job state, or None
         if the payload was undecodable (counted, never raised)."""
-        pkt = self.ingest.decode(data)
+        with self._phase("tick.decode"):
+            pkt = self.ingest.decode(data)
+        if self.obs is not None:
+            self.obs.metrics.counter("packets").inc()
         if pkt is None:
+            if self.obs is not None:
+                self.obs.metrics.counter("decode_errors").inc()
             return None
-        job = self.registry.update(job_id, pkt, self._tick)
+        with self._phase("tick.regimes"):
+            job = self.registry.update(job_id, pkt, self._tick)
         if job is not None:
+            if self.obs is not None:
+                self.obs.metrics.counter("packets_accepted").inc()
             self._declare_hosts(job_id, pkt)
         return job
 
@@ -178,14 +204,23 @@ class FleetService:
         single float32 cast).
         """
         pairs = list(items)
-        pkts = self.ingest.decode_many(data for _, data in pairs)
+        with self._phase("tick.decode"):
+            pkts = self.ingest.decode_many(data for _, data in pairs)
         accepted = 0
-        for (job_id, _), pkt in zip(pairs, pkts):
-            if pkt is None:
-                continue
-            if self.registry.update(job_id, pkt, self._tick) is not None:
-                accepted += 1
-                self._declare_hosts(job_id, pkt)
+        with self._phase("tick.regimes"):
+            for (job_id, _), pkt in zip(pairs, pkts):
+                if pkt is None:
+                    continue
+                if self.registry.update(job_id, pkt, self._tick) is not None:
+                    accepted += 1
+                    self._declare_hosts(job_id, pkt)
+        if self.obs is not None:
+            m = self.obs.metrics
+            m.counter("packets").inc(len(pairs))
+            m.counter("packets_accepted").inc(accepted)
+            m.counter("decode_errors").inc(
+                sum(1 for p in pkts if p is None)
+            )
         if refresh:
             self.refresh_batched()
         return accepted
@@ -199,19 +234,30 @@ class FleetService:
         stateless per-window answer becomes durable incidents.
         """
         self._tick += 1
-        evicted = self.registry.evict_stale(self._tick)
-        self.evicted_total += len(evicted)
+        with self._phase("tick.regimes"):
+            evicted = self.registry.evict_stale(self._tick)
+            self.evicted_total += len(evicted)
+            activity = None
+            if self.incidents is not None:
+                activity = {
+                    job.job_id: (job.regimes.activity(), job.stages)
+                    for job in self.registry.jobs()
+                    if job.regimes is not None and job.regimes.num_steps
+                }
         if self.incidents is not None:
-            activity = {
-                job.job_id: (job.regimes.activity(), job.stages)
-                for job in self.registry.jobs()
-                if job.regimes is not None and job.regimes.num_steps
-            }
-            self.incidents.observe(
+            routes = self.route(len(self.registry))
+            with self._phase("tick.correlate"):
+                self.incidents.observe(
+                    self._tick,
+                    routes,
+                    evicted=evicted,
+                    activity=activity,
+                )
+        if self.obs is not None:
+            self.obs.on_tick(
                 self._tick,
-                self.route(len(self.registry)),
-                evicted=evicted,
-                activity=activity,
+                evicted=len(evicted),
+                live=len(self.registry),
             )
         return evicted
 
@@ -261,42 +307,50 @@ class FleetService:
             # grid dimension, so the first-J outputs are unchanged; the
             # padded rows are sliced away below.
             j_live = len(jobs)
-            stacked = self._stager.stage([j.last_window for j in jobs])
-            if self.device is not None:
-                # shard-pinned refresh: commit the staged tensor to this
-                # service's device so the dispatch runs there (same
-                # compiled program on every CPU device — bit-identical
-                # outputs, see tests/test_sharded_fleet.py).
-                import jax
+            with self._phase("tick.stage"):
+                stacked = self._stager.stage([j.last_window for j in jobs])
+                if self.device is not None:
+                    # shard-pinned refresh: commit the staged tensor to
+                    # this service's device so the dispatch runs there
+                    # (same compiled program on every CPU device —
+                    # bit-identical outputs, tests/test_sharded_fleet.py).
+                    import jax
 
-                stacked = jax.device_put(stacked, self.device)
-            if use_fused:
-                # one dispatch, one HBM read; the device input buffer is
-                # donated — consumed by the kernel, never copied back.
-                tick = fused_fleet_tick(
-                    stacked, sync_stages=sync_idx,
-                    with_regimes=False, donate=True,
-                )
-            else:
-                tick = four_dispatch_tick(
-                    stacked, sync_stages=sync_idx, with_regimes=False,
-                )
-            pkt, wif = tick.frontier, tick.whatif
-            shares = np.asarray(pkt.shares)[:j_live]   # [J, S]
-            gains = np.asarray(pkt.gains)[:j_live]     # [J, S]
-            leader = np.asarray(pkt.leader)[:j_live]   # [J, N, S]
-            whatif = np.asarray(wif.matrix)[:j_live]   # [J, S, R]
-            for i, job in enumerate(jobs):
-                job.kernel_shares = shares[i]
-                job.kernel_gains = gains[i]
-                top = int(np.argmax(shares[i]))
-                # mode of the per-step leader at the top boundary
-                ranks, counts = np.unique(leader[i, :, top], return_counts=True)
-                job.kernel_leader = int(ranks[np.argmax(counts)])
-                job.whatif = whatif[i]
-                # raw window consumed: release it (bounded registry state)
-                job.last_window = None
-                refreshed += 1
+                    stacked = jax.device_put(stacked, self.device)
+            with self._phase("tick.kernel"):
+                if use_fused:
+                    # one dispatch, one HBM read; the device input buffer
+                    # is donated — consumed by the kernel, never copied
+                    # back.
+                    tick = fused_fleet_tick(
+                        stacked, sync_stages=sync_idx,
+                        with_regimes=False, donate=True,
+                    )
+                else:
+                    tick = four_dispatch_tick(
+                        stacked, sync_stages=sync_idx, with_regimes=False,
+                    )
+            with self._phase("tick.epilog"):
+                pkt, wif = tick.frontier, tick.whatif
+                shares = np.asarray(pkt.shares)[:j_live]   # [J, S]
+                gains = np.asarray(pkt.gains)[:j_live]     # [J, S]
+                leader = np.asarray(pkt.leader)[:j_live]   # [J, N, S]
+                whatif = np.asarray(wif.matrix)[:j_live]   # [J, S, R]
+                for i, job in enumerate(jobs):
+                    job.kernel_shares = shares[i]
+                    job.kernel_gains = gains[i]
+                    top = int(np.argmax(shares[i]))
+                    # mode of the per-step leader at the top boundary
+                    ranks, counts = np.unique(
+                        leader[i, :, top], return_counts=True
+                    )
+                    job.kernel_leader = int(ranks[np.argmax(counts)])
+                    job.whatif = whatif[i]
+                    # raw window consumed: release it (bounded registry)
+                    job.last_window = None
+                    refreshed += 1
+        if self.obs is not None and refreshed:
+            self.obs.metrics.counter("jobs_refreshed").inc(refreshed)
         return refreshed
 
     # -- routing -----------------------------------------------------------
@@ -327,36 +381,42 @@ class FleetService:
         (telemetry_limited) jobs never appear: quality labels must not
         trigger workload-touching actions.
         """
-        floor = self.PERSISTENCE_FLOOR
-        scored = []
-        for job in self.registry.jobs():
-            rec, si, ri = job.recoverable()
-            if rec <= 0.0:
-                continue
-            w = job.persistence(si, ri)
-            call = job.regime_call(si, ri)
-            score = rec if w is None else rec * (floor + (1.0 - floor) * w)
-            scored.append((score, rec, si, ri, w, call, job))
-        scored.sort(key=lambda t: (-t[0], t[6].job_id, t[3]))
-        out: list[RouteEntry] = []
-        for score, rec, si, ri, w, call, job in scored[: max(0, k)]:
-            pkt = job.last_packet
-            stage = job.stages[si] if 0 <= si < len(job.stages) else ""
-            out.append(
-                RouteEntry(
-                    job_id=job.job_id,
-                    stage=stage,
-                    rank=ri,
-                    score=score,
-                    window_index=pkt.window_index if pkt else -1,
-                    labels=job.labels,
-                    recoverable_s=rec,
-                    urgency=job.urgency(),
-                    regime=call.name if call is not None else "",
-                    persistence=1.0 if w is None else w,
-                    onset_step=call.onset if call is not None else -1,
+        with self._phase("tick.route"):
+            floor = self.PERSISTENCE_FLOOR
+            scored = []
+            for job in self.registry.jobs():
+                rec, si, ri = job.recoverable()
+                if rec <= 0.0:
+                    continue
+                w = job.persistence(si, ri)
+                call = job.regime_call(si, ri)
+                score = (
+                    rec if w is None
+                    else rec * (floor + (1.0 - floor) * w)
                 )
-            )
+                scored.append((score, rec, si, ri, w, call, job))
+            scored.sort(key=lambda t: (-t[0], t[6].job_id, t[3]))
+            out: list[RouteEntry] = []
+            for score, rec, si, ri, w, call, job in scored[: max(0, k)]:
+                pkt = job.last_packet
+                stage = job.stages[si] if 0 <= si < len(job.stages) else ""
+                out.append(
+                    RouteEntry(
+                        job_id=job.job_id,
+                        stage=stage,
+                        rank=ri,
+                        score=score,
+                        window_index=pkt.window_index if pkt else -1,
+                        labels=job.labels,
+                        recoverable_s=rec,
+                        urgency=job.urgency(),
+                        regime=call.name if call is not None else "",
+                        persistence=1.0 if w is None else w,
+                        onset_step=call.onset if call is not None else -1,
+                    )
+                )
+        if self.obs is not None:
+            self.obs.on_route(self._tick, out)
         return out
 
     # -- summaries ---------------------------------------------------------
@@ -392,4 +452,10 @@ class FleetService:
             # conflicting-claim re-homings (last-writer-wins topology
             # churn) — operators watch this to catch placement drift.
             out["rehomed"] = self.incidents.topology.rehomed
+        if self.obs is not None:
+            # self-observability section (docs/observability.md) — the
+            # only snapshot key carrying wall-clock state; parity
+            # comparisons strip it (obs-on == obs-off elsewhere, gated
+            # by benchmarks/obs_overhead.py).
+            out["obs"] = self.obs.section()
         return out

@@ -49,12 +49,15 @@ so N shards dispatch kernels onto N devices.
 """
 from __future__ import annotations
 
+import contextlib
 import zlib
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from typing import TYPE_CHECKING, Iterable, Sequence
 
 import numpy as np
 
+from ..obs import FleetObs, merge_registries, obs_section, tick_frontier
 from ..telemetry.packets import EvidencePacket
 from .registry import JobState
 from .service import FleetService, RouteEntry
@@ -131,6 +134,7 @@ class ShardedFleetService:
         incidents: "IncidentEngine | None" = None,
         fused: bool = True,
         devices: str | Sequence | None = "auto",
+        obs: bool = True,
     ):
         if shards <= 0:
             raise ValueError(f"shards must be >= 1, got {shards}")
@@ -156,9 +160,26 @@ class ShardedFleetService:
                 fused=fused,
                 topology=topo,
                 device=placements[i] if placements else None,
+                obs=obs,
+                obs_name=f"shard-{i}",
             )
             for i in range(self.n_shards)
         ]
+        #: coordinator-side self-observability: its own tick phases
+        #: (route gather, cross-shard correlate) plus the dogfooded
+        #: multi-rank frontier — shards are "ranks", tick phases are
+        #: "stages".  Each tick stacks every shard's closed phase vector
+        #: with the coordinator's own into a [shards+1, phases] row;
+        #: `snapshot()["obs"]` runs `core.frontier.frontier_accounting`
+        #: over the retained [ticks, shards+1, phases] window, naming
+        #: the shard and phase where group-visible tick delay first
+        #: appears (tests inject a one-shard stall and assert exactly
+        #: that attribution).
+        self.obs = FleetObs(name="coord") if obs else None
+        self._tick_rows: deque[np.ndarray] = deque(maxlen=128)
+        self._obs_ids = tuple(
+            f"shard-{i}" for i in range(self.n_shards)
+        ) + ("coord",)
         #: one single-thread lane per shard: work for a shard serializes
         #: (its state has exactly one writer), work ACROSS shards
         #: overlaps — decode on lane B runs while lane A's kernel
@@ -295,17 +316,38 @@ class ShardedFleetService:
             evicted.extend(ev)
         if self.incidents is not None:
             entries: list[RouteEntry] = []
-            for part in self._map_shards(
-                lambda s, _: s.route(len(s.registry))
-            ):
-                entries.extend(part)
-            self.incidents.observe(
-                self._tick,
-                entries,
-                evicted=evicted,
-                folded=self._folded_activity(),
+            with self._phase("tick.route"):
+                for part in self._map_shards(
+                    lambda s, _: s.route(len(s.registry))
+                ):
+                    entries.extend(part)
+            with self._phase("tick.correlate"):
+                self.incidents.observe(
+                    self._tick,
+                    entries,
+                    evicted=evicted,
+                    folded=self._folded_activity(),
+                )
+        if self.obs is not None:
+            vec, _ = self.obs.on_tick(
+                self._tick, evicted=len(evicted), live=len(self)
+            )
+            # the dogfooded frontier row: every shard's just-closed tick
+            # vector (each shard's `tick()` on its lane closed the step)
+            # stacked with the coordinator's own — "ranks" x "stages".
+            self._tick_rows.append(
+                np.stack(
+                    [s.obs.tickline.last_vector() for s in self.shards]
+                    + [vec]
+                )
             )
         return evicted
+
+    def _phase(self, name: str):
+        """Coordinator-side tick-phase span (no-op when obs is off)."""
+        if self.obs is None:
+            return contextlib.nullcontext()
+        return self.obs.phase(name)
 
     def _shard_activity(self, shard: FleetService) -> dict:
         """One shard's per-job activity series (the engine substrate)."""
@@ -376,10 +418,13 @@ class ShardedFleetService:
         one service.
         """
         merged: list[RouteEntry] = []
-        for part in self._map_shards(lambda s, _: s.route(k)):
-            merged.extend(part)
-        merged.sort(key=self._ROUTE_KEY)
-        out = merged[: max(0, k)]
+        with self._phase("tick.route"):
+            for part in self._map_shards(lambda s, _: s.route(k)):
+                merged.extend(part)
+            merged.sort(key=self._ROUTE_KEY)
+            out = merged[: max(0, k)]
+        if self.obs is not None:
+            self.obs.on_route(self._tick, out)
         # the tie-order contract, kept active where the differential and
         # property suites exercise equal-score merges: the merged prefix
         # must be strictly increasing under the TOTAL key — equal keys
@@ -428,6 +473,28 @@ class ShardedFleetService:
             # (shards declare into its sink, never their own) — no
             # per-shard summing, or re-homings would double-count.
             out["rehomed"] = self.incidents.topology.rehomed
+        if self.obs is not None:
+            # merged self-observability: per-shard metric registries
+            # reduce through the order-insensitive integer merge (bit-
+            # identical for any shard count — tests/test_obs_properties),
+            # and the tick frontier runs over the retained
+            # [ticks, shards+1, phases] stack — the paper's accounting
+            # naming the shard and phase behind slow coordinator ticks.
+            merged_metrics = merge_registries(
+                [s.obs.metrics for s in self.shards] + [self.obs.metrics]
+            )
+            rows = (
+                np.stack(tuple(self._tick_rows))
+                if self._tick_rows
+                else np.zeros(
+                    (0, self.n_shards + 1, len(self.obs.tickline.phases))
+                )
+            )
+            out["obs"] = obs_section(
+                merged_metrics,
+                tick_frontier(rows, self.obs.tickline.phases, self._obs_ids),
+                self.obs.flight,
+            )
         return out
 
     def __len__(self) -> int:

@@ -57,6 +57,14 @@ def make_argparser() -> argparse.ArgumentParser:
                    help="per-shard lanes under --shards (thread = "
                         "overlapped decode/dispatch, inline = "
                         "sequential reference)")
+    p.add_argument("--obs", default=True,
+                   action=argparse.BooleanOptionalAction,
+                   help="self-observability (repro.obs) on the replay "
+                        "service: the report gains an 'obs' section "
+                        "(tick-phase frontier + slowest-shard "
+                        "attribution, metrics, flight-recorder stats — "
+                        "docs/observability.md).  On by default; "
+                        "--no-obs is the overhead-benchmark control arm")
     # synthetic-trace shape (ignored with --trace)
     p.add_argument("--jobs", type=int, default=12)
     p.add_argument("--ticks", type=int, default=16)
@@ -102,6 +110,7 @@ def run(args) -> dict:
         evict_after=args.evict_after, incidents=args.incidents,
         fused=args.tick_path == "fused",
         shards=args.shards, shard_workers=args.shard_workers,
+        obs=args.obs,
     )
     out = report.as_dict()
     out["wire"] = args.wire

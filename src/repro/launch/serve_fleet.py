@@ -120,6 +120,16 @@ def make_argparser() -> argparse.ArgumentParser:
                         "sequentially (deterministic debugging "
                         "reference — same outputs, only wall-clock "
                         "differs)")
+    p.add_argument("--obs", default=True,
+                   action=argparse.BooleanOptionalAction,
+                   help="self-observability (repro.obs): tick-phase "
+                        "frontier over the service's own pipeline, "
+                        "metrics registry, flight recorder — surfaced "
+                        "as a top-level 'obs' section in the JSON "
+                        "summary (docs/observability.md).  On by "
+                        "default (<1%% overhead, gated by "
+                        "benchmarks/obs_overhead.py); --no-obs is the "
+                        "benchmark control arm")
     return p
 
 
@@ -205,18 +215,21 @@ def run(args) -> dict:
         if engine is not None
         else None
     )
+    obs_on = getattr(args, "obs", True)
     if args.shards:
         service = ShardedFleetService(
             shards=args.shards, workers=args.shard_workers,
             window_capacity=args.window, evict_after=2, degrade_after=2,
             regime_windows=args.max_windows or 4,
             incidents=engine,
+            obs=obs_on,
         )
     else:
         service = FleetService(
             window_capacity=args.window, evict_after=2, degrade_after=2,
             regime_windows=args.max_windows or 4,
             incidents=engine,
+            obs=obs_on,
         )
     jobs = _build_jobs(args)
     packets_sent = 0
@@ -273,6 +286,11 @@ def run(args) -> dict:
     if args.shards:
         service.close()
 
+    snapshot = service.snapshot()
+    # the self-observability section is top-level in the summary (the
+    # operator-facing "is the monitor itself slow" view,
+    # docs/observability.md), not buried inside the snapshot
+    obs_out = snapshot.pop("obs", None)
     out = {
         "jobs": args.jobs,
         "rounds": args.rounds,
@@ -283,7 +301,7 @@ def run(args) -> dict:
         "wire_bytes": bytes_sent,
         "wire_bytes_per_packet": bytes_sent // max(packets_sent, 1),
         "ingest_jobs_per_second": packets_sent / max(elapsed, 1e-9),
-        "snapshot": service.snapshot(),
+        "snapshot": snapshot,
         "routing": [
             {
                 "job": r.job_id,
@@ -300,6 +318,8 @@ def run(args) -> dict:
             for r in routes
         ],
     }
+    if obs_out is not None:
+        out["obs"] = obs_out
     if engine is not None:
         # durable incident view: identity + lifecycle over the same
         # evidence the stateless routing table above re-derives per tick

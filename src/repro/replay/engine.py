@@ -197,6 +197,12 @@ class ReplayReport:
     # provenance + service
     loader: dict = dataclasses.field(default_factory=dict)
     snapshot: dict = dataclasses.field(default_factory=dict)
+    #: the service's self-observability section (`repro.obs`), split out
+    #: of `snapshot` because it carries wall-clock state: the replay's
+    #: fused-vs-unfused and sharded-vs-unsharded report-identity
+    #: contracts compare `snapshot` bit-for-bit, and timing must not
+    #: break them.  Empty dict when the service runs with ``obs=False``.
+    obs: dict = dataclasses.field(default_factory=dict)
     #: durable incident table (engine rows) when the incident tier is
     #: attached — empty list otherwise
     incidents: list = dataclasses.field(default_factory=list)
@@ -243,6 +249,7 @@ def replay_trace(
     fused: bool = True,
     shards: int | None = None,
     shard_workers: str = "thread",
+    obs: bool = True,
 ) -> ReplayReport:
     """Replay `trace` through a `FleetService`; see the module docstring.
 
@@ -290,6 +297,7 @@ def replay_trace(
                 evict_after=evict_after,
                 incidents=engine,
                 fused=fused,
+                obs=obs,
             )
         else:
             service = FleetService(
@@ -297,6 +305,7 @@ def replay_trace(
                 evict_after=evict_after,
                 incidents=engine,
                 fused=fused,
+                obs=obs,
             )
 
     live: dict[str, _LiveJob] = {}
@@ -434,6 +443,9 @@ def replay_trace(
     report.elapsed_s = time.perf_counter() - t0
     report.evictions = service.evicted_total
     report.snapshot = service.snapshot()
+    # timing-bearing obs section rides its own report field, keeping
+    # `snapshot` deterministic for the report-identity contracts.
+    report.obs = report.snapshot.pop("obs", {})
     if getattr(service, "incidents", None) is not None:
         report.incidents = service.incidents.table()
     if owned and shards:

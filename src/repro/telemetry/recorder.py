@@ -61,12 +61,28 @@ class StageRecorder:
 
     # -- step context -----------------------------------------------------------
 
-    @contextlib.contextmanager
-    def step(self) -> Iterator["StageRecorder"]:
+    @property
+    def in_step(self) -> bool:
+        """True between `begin_step()` and `end_step()` (public span API:
+        service-side instrumentation checks this before opening a step
+        lazily — see `repro.obs.ObsTickline`)."""
+        return self._in_step
+
+    @property
+    def active_stage(self) -> str | None:
+        """Name of the currently open ordered span, or None.  Lets a
+        caller detect re-entrancy (a nested service call inside an
+        instrumented phase) and skip instead of violating non-overlap."""
+        return self._active_stage
+
+    def begin_step(self) -> bool:
+        """Open a step span manually; returns False (and counts the
+        dropped span) if one is already open.  The manual lifecycle is
+        the span API `repro.obs` needs: a service tick's phases span
+        several method calls, so the step cannot be a single `with`."""
         if self._in_step:  # nested steps are a contract violation: drop inner
             self.dropped_spans += 1
-            yield self
-            return
+            return False
         self._in_step = True
         self._cur = {}
         self._side = {}
@@ -74,28 +90,41 @@ class StageRecorder:
         if self._pending_data_wait:
             self._cur["data.next_wait"] = self._pending_data_wait
             self._pending_data_wait = 0.0
+        return True
+
+    def end_step(self) -> StepRecord | None:
+        """Close the open step span: residual closure, history append.
+        Returns the finished record (None if no step was open)."""
+        if not self._in_step:
+            return None
+        wall = _now_s() - self._step_start
+        explicit = sum(
+            v for k, v in self._cur.items()
+            if k in self.schema.stages and not k.endswith("other_cpu_wall")
+        )
+        residual = self.schema.residual_index
+        if residual is not None:
+            self._cur[self.schema.stages[residual]] = max(0.0, wall - explicit)
+        record = StepRecord(
+            step=self._step_index,
+            durations=dict(self._cur),
+            wall=wall,
+            side=dict(self._side),
+        )
+        self._history.append(record)
+        self._step_index += 1
+        self._in_step = False
+        self._active_stage = None
+        return record
+
+    @contextlib.contextmanager
+    def step(self) -> Iterator["StageRecorder"]:
+        opened = self.begin_step()
         try:
             yield self
         finally:
-            wall = _now_s() - self._step_start
-            explicit = sum(
-                v for k, v in self._cur.items()
-                if k in self.schema.stages and not k.endswith("other_cpu_wall")
-            )
-            residual = self.schema.residual_index
-            if residual is not None:
-                self._cur[self.schema.stages[residual]] = max(0.0, wall - explicit)
-            self._history.append(
-                StepRecord(
-                    step=self._step_index,
-                    durations=dict(self._cur),
-                    wall=wall,
-                    side=dict(self._side),
-                )
-            )
-            self._step_index += 1
-            self._in_step = False
-            self._active_stage = None
+            if opened:
+                self.end_step()
 
     # -- stage contexts ------------------------------------------------------------
 

@@ -244,7 +244,9 @@ class TestFusedServicePath:
         rep_f = replay_trace(trace_f, fused=True)
         rep_u = replay_trace(trace_u, fused=False)
         df, du = rep_f.as_dict(), rep_u.as_dict()
-        for k in ("elapsed_s", "windows_per_s"):
+        # "obs" is the self-observability section: wall-clock by
+        # construction, excluded like the other timing fields
+        for k in ("elapsed_s", "windows_per_s", "obs"):
             df.pop(k, None)
             du.pop(k, None)
         assert df == du

@@ -1,0 +1,130 @@
+"""Property-based tests (hypothesis) for the `repro.obs` merge law.
+
+The metrics registry's load-bearing promise (mirrors
+test_shard_properties.py for the fleet counters): reducing per-shard
+registries to one fleet view is **bit-identical regardless of shard
+count, merge order, or submission interleaving**.  It holds because
+every accumulator is an exact integer (counters/gauges are Python ints;
+histogram sums accumulate integer nanoseconds), and integer addition is
+commutative and associative.
+
+Three properties, over arbitrary op streams:
+
+  1. **shard-count invariance** — partitioning one observation stream
+     across N registries (by a stable key hash) then merging exports
+     the SAME dict as applying the stream to a single registry, for
+     every N;
+  2. **interleaving invariance** — permuting the op stream changes
+     nothing (additive ops commute exactly);
+  3. **merge-order invariance** — merging the per-shard registries in
+     any order exports the same dict.
+
+Values are drawn from a small set, so cross-shard collisions on the
+same metric name happen constantly — every example exercises the
+actual merge arithmetic, not disjoint key unions.
+"""
+import zlib
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.obs import MetricsRegistry, merge_registries
+
+#: few names + few values -> dense collisions across shards
+NAMES = ("ticks", "packets", "lag", "tick_wall")
+#: histogram values straddling DEFAULT_EDGES boundaries (incl. exact
+#: edges — le-semantics must partition identically everywhere) and the
+#: overflow region
+HIST_VALUES = (0.0, 1e-5, 9e-5, 1e-3, 0.042, 0.1, 2.5, 42.0)
+
+#: one op: (kind, name, value)
+op = st.one_of(
+    st.tuples(st.just("counter"), st.sampled_from(NAMES),
+              st.integers(0, 5)),
+    st.tuples(st.just("gauge"), st.sampled_from(NAMES),
+              st.integers(-3, 3)),
+    st.tuples(st.just("hist"), st.sampled_from(NAMES),
+              st.sampled_from(HIST_VALUES)),
+)
+ops_stream = st.lists(op, max_size=60)
+
+
+def apply_ops(reg: MetricsRegistry, ops) -> None:
+    for kind, name, value in ops:
+        # one kind per name per registry lifetime: namespace by kind,
+        # exactly as the service does ("phase_seconds.x" vs "ticks")
+        if kind == "counter":
+            reg.counter("c." + name).inc(value)
+        elif kind == "gauge":
+            # gauges merge by summation (each shard owns its slice of a
+            # fleet total), so the shard-visible op is the delta
+            reg.gauge("g." + name).add(value)
+        else:
+            reg.histogram("h." + name).observe(value)
+
+
+def shard_of(opn, shards: int) -> int:
+    """Stable op->shard partition (CRC of the metric name, the same
+    discipline as fleet.shard.shard_of for job ids)."""
+    return zlib.crc32(opn[1].encode()) % shards
+
+
+@settings(deadline=None, max_examples=60)
+@given(ops=ops_stream, shards=st.integers(1, 5))
+def test_shard_count_invariance(ops, shards):
+    single = MetricsRegistry()
+    apply_ops(single, ops)
+
+    regs = [MetricsRegistry() for _ in range(shards)]
+    for o in ops:
+        apply_ops(regs[shard_of(o, shards)], [o])
+
+    assert merge_registries(regs).as_dict() == single.as_dict()
+
+
+@settings(deadline=None, max_examples=60)
+@given(ops=ops_stream, seed=st.integers(0, 2**16), shards=st.integers(1, 4))
+def test_interleaving_invariance(ops, seed, shards):
+    import random
+
+    shuffled = list(ops)
+    random.Random(seed).shuffle(shuffled)
+
+    a = [MetricsRegistry() for _ in range(shards)]
+    b = [MetricsRegistry() for _ in range(shards)]
+    for o in ops:
+        apply_ops(a[shard_of(o, shards)], [o])
+    for o in shuffled:
+        apply_ops(b[shard_of(o, shards)], [o])
+
+    assert merge_registries(a).as_dict() == merge_registries(b).as_dict()
+
+
+@settings(deadline=None, max_examples=60)
+@given(
+    ops=ops_stream,
+    shards=st.integers(2, 5),
+    perm_seed=st.integers(0, 2**16),
+)
+def test_merge_order_invariance(ops, shards, perm_seed):
+    import random
+
+    regs = [MetricsRegistry() for _ in range(shards)]
+    for o in ops:
+        apply_ops(regs[shard_of(o, shards)], [o])
+
+    permuted = list(regs)
+    random.Random(perm_seed).shuffle(permuted)
+    assert (
+        merge_registries(permuted).as_dict()
+        == merge_registries(regs).as_dict()
+    )
+    # and merging is associative: pairwise reduction == flat reduction
+    left = merge_registries(regs[: shards // 2])
+    right = merge_registries(regs[shards // 2:])
+    assert (
+        merge_registries([left, right]).as_dict()
+        == merge_registries(regs).as_dict()
+    )

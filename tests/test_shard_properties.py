@@ -59,13 +59,21 @@ def mk_packet(window_index: int, gain: float = 0.1) -> EvidencePacket:
 
 
 def observable(svc) -> tuple:
-    """Everything the parity contract covers, as one comparable value."""
+    """Everything the parity contract covers, as one comparable value.
+
+    The snapshot's "obs" section is stripped: it is the one key carrying
+    wall-clock state (repro.obs self-timing), outside the bit-parity
+    contract by design — its OWN determinism law (registry merges
+    invariant to shard count/order) is tested in test_obs_properties.py.
+    """
+    snap = svc.snapshot()
+    snap.pop("obs", None)
     return (
         [
             (e.job_id, e.stage, e.rank, e.score)
             for e in svc.route(len(JOB_IDS) + 2)
         ],
-        svc.snapshot(),
+        snap,
     )
 
 

@@ -32,6 +32,7 @@ MODULES = [
     "repro.core",
     "repro.fleet",
     "repro.incidents",
+    "repro.obs",
     "repro.replay",
     "repro.kernels.frontier",
 ]
